@@ -1,0 +1,85 @@
+//! The paper's §5 evaluation: LDA topic modeling on a 20News-scale corpus
+//! under **weak VAP**, printing Table 1 (corpus statistics) and the
+//! throughput/convergence summary.
+//!
+//! ```sh
+//! cargo run --release --example lda_20news            # scaled corpus
+//! cargo run --release --example lda_20news -- --full  # full Table-1 scale
+//! cargo run --release --example lda_20news -- --xla   # L1 kernel inner loop
+//! ```
+
+use std::sync::Arc;
+
+use bapps::apps::lda::{run_lda, Corpus, LdaConfig, SyntheticCorpusConfig};
+use bapps::config::{PolicyConfig, SystemConfig};
+use bapps::coordinator::PsSystem;
+use bapps::runtime::ComputePool;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let full = args.iter().any(|a| a == "--full");
+    let xla = args.iter().any(|a| a == "--xla");
+
+    // Table 1 — printed from the generator config the run will use.
+    let corpus_cfg = if full {
+        SyntheticCorpusConfig::news20()
+    } else {
+        SyntheticCorpusConfig::news20_scaled(16)
+    };
+    println!("generating corpus (seed {})...", corpus_cfg.seed);
+    let corpus = Arc::new(Corpus::synthetic(&corpus_cfg));
+    println!("\nTable 1 — summary statistics of the corpus used in LDA:");
+    println!("{}\n", corpus.stats());
+
+    // The paper: 8 workers/machine; we use 8 workers in 2 processes.
+    let system = PsSystem::launch(
+        SystemConfig::builder()
+            .num_server_shards(2)
+            .num_client_procs(2)
+            .threads_per_proc(4)
+            .flush_interval_us(100)
+            .build(),
+    )
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    // K scaled down from the paper's 2000 (see DESIGN.md §3); policy is
+    // the paper's: weak VAP.
+    let lda_cfg = LdaConfig {
+        num_topics: if full { 2000 } else { 100 },
+        alpha: 0.1,
+        beta: 0.01,
+        sweeps: if full { 2 } else { 5 },
+        policy: PolicyConfig::Vap { v_thr: 8.0, strong: false },
+        seed: 7,
+        use_xla: xla,
+    };
+    // The AOT artifact bakes K=128; --xla requires a matching topic count.
+    let lda_cfg = if xla { LdaConfig { num_topics: 128, ..lda_cfg } } else { lda_cfg };
+    let pool = if xla {
+        Some(Arc::new(ComputePool::start("artifacts", 1).map_err(|e| anyhow::anyhow!("{e}"))?))
+    } else {
+        None
+    };
+
+    println!(
+        "running LDA: K={} sweeps={} P={} policy={} {}",
+        lda_cfg.num_topics,
+        lda_cfg.sweeps,
+        system.config().num_workers(),
+        lda_cfg.policy.name(),
+        if xla { "[Pallas kernel inner loop]" } else { "[pure-Rust inner loop]" },
+    );
+    let res = run_lda(&system, corpus, lda_cfg, pool).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    println!("\nresults:");
+    println!("  tokens processed : {}", res.tokens_processed);
+    println!("  wall time        : {:.2} s", res.wall_secs);
+    println!("  throughput       : {:.0} tokens/s", res.tokens_per_sec);
+    println!("  convergence (mean log p(topic) per sweep, rising = better):");
+    for (i, ll) in res.loglik_curve.iter().enumerate() {
+        println!("    sweep {:>2}: {:+.4}", i + 1, ll);
+    }
+    println!("\n{}", system.metrics_summary());
+    system.shutdown().map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok(())
+}

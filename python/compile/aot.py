@@ -1,0 +1,129 @@
+"""AOT lowering: jax (L2, with L1 Pallas inlined) → HLO text artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and compiles it on the PJRT
+CPU client. Python never runs on the worker path.
+
+HLO *text* (not ``lowered.compile().serialize()``) is the interchange
+format: jax ≥ 0.5 emits protos with 64-bit instruction ids that the
+pinned xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md and DESIGN.md).
+
+Artifacts:
+  artifacts/logreg_grad.hlo.txt       (B=128, D=64 baked; sum-reduced)
+  artifacts/lda_topic_probs.hlo.txt   (B=128, K from --topics)
+  artifacts/transformer_step.hlo.txt  (dims from --preset)
+  artifacts/transformer_meta.txt      (PS-table layout contract)
+
+Usage: python -m compile.aot --out-dir ../artifacts [--preset small|medium]
+                             [--topics 128] [--logreg-d 64]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text):>9} chars  {path}")
+
+
+def lower_logreg(out_dir: str, batch: int, d: int) -> None:
+    spec_w = jax.ShapeDtypeStruct((d,), jnp.float32)
+    spec_x = jax.ShapeDtypeStruct((batch, d), jnp.float32)
+    spec_y = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    lowered = jax.jit(model.logreg_grad).lower(spec_w, spec_x, spec_y)
+    write(os.path.join(out_dir, "logreg_grad.hlo.txt"), to_hlo_text(lowered))
+    write(
+        os.path.join(out_dir, "logreg_meta.txt"),
+        f"batch {batch}\nd {d}\n",
+    )
+
+
+def lower_lda(out_dir: str, batch: int, topics: int) -> None:
+    spec_nwk = jax.ShapeDtypeStruct((batch, topics), jnp.float32)
+    spec_k = jax.ShapeDtypeStruct((topics,), jnp.float32)
+    spec_s = jax.ShapeDtypeStruct((), jnp.float32)
+    lowered = jax.jit(model.lda_topic_probs).lower(
+        spec_nwk, spec_k, spec_k, spec_s, spec_s, spec_s
+    )
+    write(os.path.join(out_dir, "lda_topic_probs.hlo.txt"), to_hlo_text(lowered))
+    write(
+        os.path.join(out_dir, "lda_meta.txt"),
+        f"batch {batch}\ntopics {topics}\n",
+    )
+
+
+PRESETS = {
+    # vocab, d_model, n_layers, n_heads, seq_len, batch
+    "tiny": model.TransformerConfig(256, 64, 1, 2, 32, 4),
+    "small": model.TransformerConfig(512, 128, 2, 4, 64, 8),
+    "medium": model.TransformerConfig(2048, 256, 4, 8, 128, 8),
+}
+
+
+def lower_transformer(out_dir: str, preset: str) -> None:
+    cfg = PRESETS[preset]
+    step, spec = model.make_transformer_step(cfg)
+    arg_specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in spec]
+    arg_specs.append(
+        jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.float32)
+    )
+    lowered = jax.jit(step).lower(*arg_specs)
+    write(os.path.join(out_dir, "transformer_step.hlo.txt"), to_hlo_text(lowered))
+
+    meta = [
+        f"vocab {cfg.vocab}",
+        f"d_model {cfg.d_model}",
+        f"n_layers {cfg.n_layers}",
+        f"n_heads {cfg.n_heads}",
+        f"seq_len {cfg.seq_len}",
+        f"batch {cfg.batch}",
+    ]
+    for name, shape in spec:
+        meta.append("param " + name + " " + " ".join(str(x) for x in shape))
+    write(os.path.join(out_dir, "transformer_meta.txt"), "\n".join(meta) + "\n")
+    n = sum(int(jnp.prod(jnp.array(s))) for _, s in spec)
+    print(f"transformer preset '{preset}': {n:,} parameters")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="small", choices=sorted(PRESETS))
+    ap.add_argument("--topics", type=int, default=128,
+                    help="K baked into the LDA artifact (lane-aligned)")
+    ap.add_argument("--lda-batch", type=int, default=128)
+    ap.add_argument("--logreg-batch", type=int, default=128)
+    ap.add_argument("--logreg-d", type=int, default=64)
+    ap.add_argument("--only", choices=["logreg", "lda", "transformer"],
+                    help="lower a single artifact")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    if args.only in (None, "logreg"):
+        lower_logreg(args.out_dir, args.logreg_batch, args.logreg_d)
+    if args.only in (None, "lda"):
+        lower_lda(args.out_dir, args.lda_batch, args.topics)
+    if args.only in (None, "transformer"):
+        lower_transformer(args.out_dir, args.preset)
+
+
+if __name__ == "__main__":
+    main()

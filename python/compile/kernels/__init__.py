@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+Modules:
+  logreg -- fused logistic-regression gradient (sum reduction)
+  lda    -- batched collapsed-Gibbs topic probabilities
+  matmul -- MXU-tiled matmul with custom VJP (transformer FLOPs)
+  ref    -- pure-jnp oracles for all of the above
+"""

@@ -1,0 +1,40 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1 correctness).
+
+Each function here is the mathematical definition the corresponding
+Pallas kernel in this package must reproduce; ``python/tests`` asserts
+``assert_allclose(kernel(...), ref(...))`` over randomized shape sweeps.
+Keep these maximally simple — no tiling, no tricks.
+"""
+
+import jax.numpy as jnp
+
+
+def logreg_grad_sum(w, x, y):
+    """Sum (not mean) logistic-regression gradient and loss.
+
+    grad = sum_i (sigmoid(x_i . w) - y_i) x_i        -- shape [D]
+    loss = sum_i softplus(z_i) - y_i z_i             -- scalar
+
+    Returning *sums* makes zero-row padding exact: a padded example with
+    x_i = 0 contributes nothing to the gradient and a constant log(2) to
+    the loss, which the caller subtracts (it knows the pad count).
+    """
+    z = x @ w
+    p = 1.0 / (1.0 + jnp.exp(-z))
+    r = p - y
+    grad = x.T @ r
+    loss = jnp.sum(jnp.logaddexp(0.0, z) - y * z)
+    return grad, loss
+
+
+def lda_topic_probs(n_wk, n_dk, n_k, alpha, beta, vbeta):
+    """Unnormalized collapsed-Gibbs topic probabilities.
+
+    p[b, k] = (n_dk[k] + alpha) * (n_wk[b, k] + beta) / (n_k[k] + vbeta)
+    """
+    return (n_dk[None, :] + alpha) * (n_wk + beta) / (n_k[None, :] + vbeta)
+
+
+def matmul(a, b):
+    """Plain matrix product (oracle for the tiled Pallas matmul)."""
+    return a @ b

@@ -1,0 +1,170 @@
+"""L2: the jax compute graphs the Rust workers execute via PJRT.
+
+Three entry points, each AOT-lowered to HLO text by :mod:`compile.aot`:
+
+* :func:`logreg_grad` — the Theorem-1 SGD workload's fused gradient
+  (wraps the L1 kernel :mod:`compile.kernels.logreg`);
+* :func:`lda_topic_probs` — batched Gibbs topic probabilities (wraps
+  :mod:`compile.kernels.lda`);
+* :func:`make_transformer_step` — full fwd+bwd of a small decoder-only
+  transformer LM whose matmuls all route through the L1 tiled kernel
+  :func:`compile.kernels.matmul.pmatmul` (custom VJP, so the backward
+  matmuls are Pallas too).
+
+Everything is f32 and shape-static (HLO has no dynamic shapes): batch
+sizes are baked by ``aot.py`` and the Rust side pads to them.
+"""
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import lda as lda_kernel
+from compile.kernels import logreg as logreg_kernel
+from compile.kernels.matmul import pmatmul
+
+
+# --------------------------------------------------------------------------
+# SGD logistic regression (Theorem 1 workload)
+# --------------------------------------------------------------------------
+
+
+def logreg_grad(w, x, y):
+    """Sum-gradient + sum-loss for a logistic-regression minibatch.
+
+    Returns ``(grad_sum [D], loss_sum [1])``; the Rust caller divides by
+    the true (un-padded) batch size.
+    """
+    grad, loss = logreg_kernel.logreg_grad_sum(w, x, y)
+    return grad, loss
+
+
+# --------------------------------------------------------------------------
+# LDA topic probabilities
+# --------------------------------------------------------------------------
+
+
+def lda_topic_probs(n_wk, n_dk, n_k, alpha, beta, vbeta):
+    """Batched unnormalized Gibbs topic probabilities ``[B, K]``."""
+    return (lda_kernel.lda_topic_probs(n_wk, n_dk, n_k, alpha, beta, vbeta),)
+
+
+# --------------------------------------------------------------------------
+# Transformer LM (end-to-end validation workload, DESIGN.md E8)
+# --------------------------------------------------------------------------
+
+
+class TransformerConfig:
+    """Static model dimensions (baked into the artifact)."""
+
+    def __init__(self, vocab=512, d_model=128, n_layers=2, n_heads=4, seq_len=64, batch=8):
+        assert d_model % n_heads == 0
+        # MXU-friendly dims: the Pallas matmul tiles are min(128, dim), so
+        # any power-of-two ≥ 32 keeps the grid exact.
+        self.vocab = vocab
+        self.d_model = d_model
+        self.n_layers = n_layers
+        self.n_heads = n_heads
+        self.seq_len = seq_len
+        self.batch = batch
+
+    def param_spec(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Ordered (name, shape) list — the PS-table layout contract with
+        Rust (`transformer_meta.txt`)."""
+        d, v, s = self.d_model, self.vocab, self.seq_len
+        spec = [("embed", (v, d)), ("pos", (s, d))]
+        for i in range(self.n_layers):
+            spec += [
+                (f"L{i}.wq", (d, d)),
+                (f"L{i}.wk", (d, d)),
+                (f"L{i}.wv", (d, d)),
+                (f"L{i}.wo", (d, d)),
+                (f"L{i}.w1", (d, 4 * d)),
+                (f"L{i}.w2", (4 * d, d)),
+                (f"L{i}.ln1_scale", (d,)),
+                (f"L{i}.ln1_bias", (d,)),
+                (f"L{i}.ln2_scale", (d,)),
+                (f"L{i}.ln2_bias", (d,)),
+            ]
+        spec += [("ln_f_scale", (d,)), ("ln_f_bias", (d,)), ("unembed", (d, v))]
+        return spec
+
+
+def _layernorm(x, scale, bias):
+    """LN with the (1 + scale) parametrization so zero-initialized PS
+    tables start at identity scale (see rust `init_std`)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    xn = (x - mu) * jax.lax.rsqrt(var + 1e-5)
+    return xn * (1.0 + scale) + bias
+
+
+def _mm(x, w):
+    """Route a (possibly >2-D) matmul through the Pallas kernel."""
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    out = pmatmul(x2, w)
+    return out.reshape(lead + (w.shape[-1],))
+
+
+def _attention(x, wq, wk, wv, wo, n_heads):
+    b, s, d = x.shape
+    hd = d // n_heads
+    q = _mm(x, wq).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    k = _mm(x, wk).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    v = _mm(x, wv).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    scores = jnp.where(mask[None, None, :, :] > 0, scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return _mm(out, wo)
+
+
+def _forward(params: Dict[str, jnp.ndarray], tokens_in, cfg: TransformerConfig):
+    """Logits ``[B, S, V]`` for input tokens ``[B, S]`` (int32)."""
+    h = params["embed"][tokens_in] + params["pos"][None, : tokens_in.shape[1]]
+    for i in range(cfg.n_layers):
+        p = lambda n: params[f"L{i}.{n}"]
+        a = _attention(
+            _layernorm(h, p("ln1_scale"), p("ln1_bias")),
+            p("wq"), p("wk"), p("wv"), p("wo"), cfg.n_heads,
+        )
+        h = h + a
+        f = _layernorm(h, p("ln2_scale"), p("ln2_bias"))
+        f = _mm(f, p("w1"))
+        f = jax.nn.gelu(f)
+        f = _mm(f, p("w2"))
+        h = h + f
+    h = _layernorm(h, params["ln_f_scale"], params["ln_f_bias"])
+    return _mm(h, params["unembed"])
+
+
+def make_transformer_step(cfg: TransformerConfig):
+    """Build ``step(*params, tokens) -> (loss, *grads)``.
+
+    ``tokens`` is ``[B, S+1]`` f32 (the PS runtime is f32-only); inputs
+    are ``tokens[:, :-1]`` and targets ``tokens[:, 1:]``. Loss is mean
+    token cross-entropy; grads are in ``param_spec`` order.
+    """
+    spec = cfg.param_spec()
+    names = [n for n, _ in spec]
+
+    def loss_fn(plist, tokens_f):
+        params = dict(zip(names, plist))
+        tokens = tokens_f.astype(jnp.int32)
+        x, t = tokens[:, :-1], tokens[:, 1:]
+        logits = _forward(params, x, cfg)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, t[..., None], axis=-1)[..., 0]
+        return jnp.mean(nll)
+
+    def step(*args):
+        plist = list(args[:-1])
+        tokens_f = args[-1]
+        loss, grads = jax.value_and_grad(loss_fn)(plist, tokens_f)
+        return (loss.reshape(1), *grads)
+
+    return step, spec

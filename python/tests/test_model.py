@@ -1,0 +1,119 @@
+"""L2 model correctness: transformer shapes, loss behaviour, grads."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+
+
+def tiny_cfg():
+    return model.TransformerConfig(
+        vocab=64, d_model=32, n_layers=1, n_heads=2, seq_len=16, batch=2
+    )
+
+
+def init_params(cfg, seed=0):
+    rng = np.random.RandomState(seed)
+    out = []
+    for name, shape in cfg.param_spec():
+        if "ln" in name:
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            out.append(jnp.asarray(rng.randn(*shape).astype(np.float32) * 0.05))
+    return out
+
+
+def random_tokens(cfg, seed=1):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(
+        rng.randint(0, cfg.vocab, size=(cfg.batch, cfg.seq_len + 1)).astype(np.float32)
+    )
+
+
+def test_step_shapes_and_finiteness():
+    cfg = tiny_cfg()
+    step, spec = model.make_transformer_step(cfg)
+    params = init_params(cfg)
+    out = step(*params, random_tokens(cfg))
+    loss, grads = out[0], out[1:]
+    assert loss.shape == (1,)
+    assert np.isfinite(float(loss[0]))
+    assert len(grads) == len(spec)
+    for g, (name, shape) in zip(grads, spec):
+        assert g.shape == tuple(shape), f"{name}: {g.shape} != {shape}"
+        assert np.all(np.isfinite(np.asarray(g))), f"{name} grad not finite"
+
+
+def test_initial_loss_near_uniform():
+    cfg = tiny_cfg()
+    step, _ = model.make_transformer_step(cfg)
+    params = init_params(cfg)
+    loss = float(step(*params, random_tokens(cfg))[0][0])
+    uniform = np.log(cfg.vocab)
+    assert abs(loss - uniform) < 0.5, f"loss {loss} vs log V {uniform}"
+
+
+def test_sgd_on_step_reduces_loss():
+    cfg = tiny_cfg()
+    step, _ = model.make_transformer_step(cfg)
+    jstep = jax.jit(step)
+    params = init_params(cfg)
+    # deterministic repetitive data: loss must drop fast
+    tok = np.tile(np.arange(cfg.seq_len + 1) % 8, (cfg.batch, 1)).astype(np.float32)
+    tok = jnp.asarray(tok)
+    first = None
+    for _ in range(20):
+        out = jstep(*params, tok)
+        loss, grads = out[0], out[1:]
+        if first is None:
+            first = float(loss[0])
+        params = [p - 0.5 * g for p, g in zip(params, grads)]
+    last = float(loss[0])
+    assert last < first * 0.5, f"loss did not halve: {first} -> {last}"
+
+
+def test_param_spec_matches_meta_format():
+    cfg = tiny_cfg()
+    spec = cfg.param_spec()
+    names = [n for n, _ in spec]
+    assert names[0] == "embed" and names[-1] == "unembed"
+    assert len(names) == len(set(names)), "duplicate param names"
+    # every layer contributes 10 tensors
+    assert len(names) == 2 + cfg.n_layers * 10 + 3
+
+
+def test_causal_masking():
+    """Changing a future token must not affect earlier logits."""
+    cfg = tiny_cfg()
+    params = dict(zip([n for n, _ in cfg.param_spec()], init_params(cfg)))
+    rng = np.random.RandomState(3)
+    x = rng.randint(0, cfg.vocab, size=(1, cfg.seq_len)).astype(np.int32)
+    x2 = x.copy()
+    x2[0, -1] = (x2[0, -1] + 1) % cfg.vocab
+    l1 = model._forward(params, jnp.asarray(x), cfg)
+    l2 = model._forward(params, jnp.asarray(x2), cfg)
+    np.testing.assert_allclose(
+        np.asarray(l1)[0, :-1], np.asarray(l2)[0, :-1], rtol=1e-4, atol=1e-5
+    )
+    assert not np.allclose(np.asarray(l1)[0, -1], np.asarray(l2)[0, -1])
+
+
+def test_logreg_model_entry_point():
+    w = jnp.zeros((16,), jnp.float32)
+    x = jnp.ones((128, 16), jnp.float32)
+    y = jnp.ones((128,), jnp.float32)
+    g, l = model.logreg_grad(w, x, y)
+    assert g.shape == (16,)
+    # at w=0: p=0.5, r=-0.5 for y=1 ⇒ grad = -0.5 * col-sums = -64
+    np.testing.assert_allclose(np.asarray(g), np.full(16, -64.0), rtol=1e-5)
+
+
+def test_lda_model_entry_point_is_tuple():
+    out = model.lda_topic_probs(
+        jnp.ones((64, 8)), jnp.ones(8), jnp.ones(8), 0.1, 0.01, 0.8
+    )
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (64, 8)

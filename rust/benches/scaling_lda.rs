@@ -1,0 +1,109 @@
+//! E1 + E2 — the paper's evaluation section.
+//!
+//! **Table 1**: summary statistics of the (synthetic) 20News corpus —
+//! printed at full scale from the seeded generator.
+//!
+//! **Figure 5**: LDA strong scaling. The paper fixes K = 2000 topics and
+//! sweeps 8→32 cores on 8 nodes, plotting speedup vs ideal linear. We run
+//! the same sweep shape on the simulated cluster (scaled corpus + topic
+//! count per DESIGN.md §3): workers ∈ {1, 2, 4, 8}, weak VAP, reporting
+//! tokens/s, speedup over 1 worker, and the parallel efficiency — the
+//! quantities the figure plots.
+//!
+//! `BAPPS_FULL=1` additionally runs the paper's exact corpus scale
+//! (11,269 docs / 1.318 M tokens) with K=2000 — slow; the default run
+//! uses corpus/16 and K=64.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use bapps::apps::lda::{run_lda, Corpus, LdaConfig, SyntheticCorpusConfig};
+use bapps::config::{NetConfig, PolicyConfig, SystemConfig};
+use bapps::coordinator::PsSystem;
+
+fn main() {
+    let full = std::env::var("BAPPS_FULL").is_ok();
+
+    // ---------------- Table 1 ----------------
+    println!("# E1 — Table 1: corpus summary statistics\n");
+    let t0 = Instant::now();
+    let full_corpus = Corpus::synthetic(&SyntheticCorpusConfig::news20());
+    let stats = full_corpus.stats();
+    println!("{stats}");
+    println!(
+        "\n(paper: 11269 docs / 53485 words / 1318299 tokens; generated in {:.1}s)\n",
+        t0.elapsed().as_secs_f64()
+    );
+    assert_eq!(stats.num_docs, 11_269);
+    assert_eq!(stats.num_tokens, 1_318_299);
+    drop(full_corpus);
+
+    // ---------------- Figure 5 ----------------
+    println!("# E2 — Figure 5: LDA strong scaling (weak VAP)\n");
+    let (scale, topics, sweeps) = if full { (1, 2000, 1) } else { (16, 64, 2) };
+    let corpus = Arc::new(Corpus::synthetic(&SyntheticCorpusConfig::news20_scaled(scale)));
+    println!(
+        "workload: corpus 1/{scale} ({} tokens), K={topics}, {sweeps} sweeps, policy wvap(8)\n",
+        corpus.stats().num_tokens
+    );
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if cores < 8 {
+        println!(
+            "NOTE: this host exposes {cores} core(s). Wall-clock speedup beyond \
+             {cores}x is physically impossible here, so the table below measures \
+             the COORDINATION OVERHEAD of adding workers (retained throughput; \
+             1.0 = free coordination). On a >=8-core testbed the same code \
+             produces the paper's speedup shape; the paper's own Fig 5 ran \
+             8->32 cores across 8 nodes.\n"
+        );
+    }
+    println!("| workers | tokens/s | vs 1 worker | ideal (multicore) | retained |");
+    println!("|---------|----------|-------------|-------------------|----------|");
+
+    let mut base_tps = None;
+    for workers in [1u32, 2, 4, 8] {
+        let procs = if workers >= 2 { 2 } else { 1 };
+        let sys = PsSystem::launch(
+            SystemConfig::builder()
+                .num_server_shards(2)
+                .num_client_procs(procs)
+                .threads_per_proc(workers / procs)
+                .net(NetConfig::lan_40gbe()) // the paper's 40 GbE profile
+                .flush_interval_us(100)
+                .build(),
+        )
+        .unwrap();
+        let res = run_lda(
+            &sys,
+            corpus.clone(),
+            LdaConfig {
+                num_topics: topics,
+                sweeps,
+                policy: PolicyConfig::Vap { v_thr: 8.0, strong: false },
+                seed: 7,
+                use_xla: false,
+                ..LdaConfig::default()
+            },
+            None,
+        )
+        .unwrap();
+        let tps = res.tokens_per_sec;
+        let base = *base_tps.get_or_insert(tps);
+        let speedup = tps / base;
+        let ideal = workers as f64;
+        println!(
+            "| {workers:>7} | {tps:>8.0} | {speedup:>11.2} | {ideal:>17.0} | {:>7.0}% |",
+            100.0 * speedup
+        );
+        sys.shutdown().unwrap();
+    }
+
+    println!(
+        "\nshape check (paper Fig 5): on a multicore testbed the speedup curve \
+         bends below ideal as contention on the shared word-topic table \
+         grows. On this single-core host the same contention shows up as the \
+         'retained' column staying below 100%: the gap is the coordination \
+         cost (locks, acks, consistency gates) the paper's models trade \
+         against staleness."
+    );
+}

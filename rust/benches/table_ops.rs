@@ -1,0 +1,221 @@
+//! E7 — microbenchmarks of the PS hot paths: `Inc`/`Get` through the
+//! client cache hierarchy, egress drain, vector-clock ticks, and routing.
+//!
+//! Self-harnessed (criterion is unavailable offline): warmup + N timed
+//! repetitions, reporting ns/op and ops/s. Run via `cargo bench` or
+//! `cargo bench --bench table_ops`.
+
+use std::time::Instant;
+
+use bapps::clock::VectorClock;
+use bapps::comm::priority::{DrainOrder, UpdateQueue};
+use bapps::config::{PolicyConfig, SystemConfig};
+use bapps::coordinator::PsSystem;
+use bapps::table::{RowId, RowKind, RowUpdate, TableDesc, TableId};
+
+fn bench<F: FnMut() -> u64>(name: &str, mut f: F) {
+    // warmup
+    let _ = f();
+    let mut best = f64::INFINITY;
+    let mut total_ops = 0u64;
+    let mut total_secs = 0.0;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let ops = f();
+        let dt = t0.elapsed().as_secs_f64();
+        total_ops += ops;
+        total_secs += dt;
+        let ns = dt * 1e9 / ops as f64;
+        if ns < best {
+            best = ns;
+        }
+    }
+    println!(
+        "| {name:<38} | {best:>9.1} ns/op | {:>12.0} ops/s |",
+        total_ops as f64 / total_secs
+    );
+}
+
+fn main() {
+    println!("# E7 — table/cache/clock microbenchmarks\n");
+    println!("| benchmark                              |      best ns/op |   mean ops/s |");
+    println!("|----------------------------------------|-----------------|--------------|");
+
+    // ---- in-process PS: Inc through the thread-cache write path ----
+    for policy in [
+        PolicyConfig::BestEffort,
+        PolicyConfig::Cap { staleness: 2 },
+        PolicyConfig::Vap { v_thr: 1e9, strong: false }, // gate never blocks
+    ] {
+        let sys = PsSystem::launch(
+            SystemConfig::builder()
+                .num_server_shards(2)
+                .num_client_procs(1)
+                .threads_per_proc(1)
+                .flush_interval_us(200)
+                .build(),
+        )
+        .unwrap();
+        sys.create_table(TableDesc {
+            id: TableId(0),
+            num_rows: 1024,
+            row_width: 16,
+            row_kind: RowKind::Dense,
+            policy,
+        })
+        .unwrap();
+        let name = format!("inc [{}]", policy.name());
+        sys.run_workers(move |ctx| {
+            let t = ctx.table(TableId(0));
+            // measured inside the worker; print from here
+            let mut best = f64::INFINITY;
+            let mut total_ops = 0u64;
+            let mut total_secs = 0.0;
+            for rep in 0..4 {
+                const N: u64 = 200_000;
+                let t0 = Instant::now();
+                for i in 0..N {
+                    t.inc(RowId(i % 1024), (i % 16) as u32, 1.0).unwrap();
+                }
+                let dt = t0.elapsed().as_secs_f64();
+                if rep > 0 {
+                    total_ops += N;
+                    total_secs += dt;
+                    best = best.min(dt * 1e9 / N as f64);
+                }
+                ctx.clock().unwrap();
+            }
+            println!(
+                "| {name:<38} | {best:>9.1} ns/op | {:>12.0} ops/s |",
+                total_ops as f64 / total_secs
+            );
+        })
+        .unwrap();
+        sys.shutdown().unwrap();
+    }
+
+    // ---- Get from a warm cache (clock gate passes locally) ----
+    {
+        let sys = PsSystem::launch(
+            SystemConfig::builder()
+                .num_server_shards(2)
+                .num_client_procs(1)
+                .threads_per_proc(1)
+                .flush_interval_us(200)
+                .build(),
+        )
+        .unwrap();
+        sys.create_table(TableDesc {
+            id: TableId(0),
+            num_rows: 1024,
+            row_width: 16,
+            row_kind: RowKind::Dense,
+            policy: PolicyConfig::Cap { staleness: 8 },
+        })
+        .unwrap();
+        sys.run_workers(move |ctx| {
+            let t = ctx.table(TableId(0));
+            for i in 0..1024u64 {
+                t.inc(RowId(i), 0, 1.0).unwrap();
+            }
+            ctx.clock().unwrap();
+            let mut best = f64::INFINITY;
+            let mut total_ops = 0u64;
+            let mut total_secs = 0.0;
+            for rep in 0..4 {
+                const N: u64 = 200_000;
+                let t0 = Instant::now();
+                let mut acc = 0.0f32;
+                for i in 0..N {
+                    acc += t.get(RowId(i % 1024), (i % 16) as u32).unwrap();
+                }
+                std::hint::black_box(acc);
+                let dt = t0.elapsed().as_secs_f64();
+                if rep > 0 {
+                    total_ops += N;
+                    total_secs += dt;
+                    best = best.min(dt * 1e9 / N as f64);
+                }
+            }
+            println!(
+                "| {:<38} | {best:>9.1} ns/op | {:>12.0} ops/s |",
+                "get [cap(s=8), warm cache]",
+                total_ops as f64 / total_secs
+            );
+            // row-granular read
+            let mut best = f64::INFINITY;
+            let mut total_ops = 0u64;
+            let mut total_secs = 0.0;
+            for rep in 0..4 {
+                const N: u64 = 50_000;
+                let t0 = Instant::now();
+                for i in 0..N {
+                    std::hint::black_box(t.get_row(RowId(i % 1024)).unwrap());
+                }
+                let dt = t0.elapsed().as_secs_f64();
+                if rep > 0 {
+                    total_ops += N;
+                    total_secs += dt;
+                    best = best.min(dt * 1e9 / N as f64);
+                }
+            }
+            println!(
+                "| {:<38} | {best:>9.1} ns/op | {:>12.0} ops/s |",
+                "get_row[16] (warm cache)",
+                total_ops as f64 / total_secs
+            );
+        })
+        .unwrap();
+        sys.shutdown().unwrap();
+    }
+
+    // ---- pure data-structure paths ----
+    bench("update_queue push+merge (mag order)", || {
+        let mut q = UpdateQueue::new(DrainOrder::Magnitude);
+        const N: u64 = 300_000;
+        for i in 0..N {
+            q.push(RowId(i % 512), RowUpdate::single((i % 8) as u32, i as f32));
+        }
+        std::hint::black_box(q.drain_all());
+        N
+    });
+    bench("update_queue drain(128) cycle", || {
+        let mut q = UpdateQueue::new(DrainOrder::Magnitude);
+        const N: u64 = 100_000;
+        for i in 0..N {
+            q.push(RowId(i % 4096), RowUpdate::single(0, i as f32));
+        }
+        let mut out = 0u64;
+        while !q.is_empty() {
+            out += q.drain(128).len() as u64;
+        }
+        std::hint::black_box(out);
+        N
+    });
+    bench("vector_clock tick (64 workers)", || {
+        let mut vc = VectorClock::new(0u32..64);
+        const N: u64 = 1_000_000;
+        for i in 0..N {
+            vc.tick((i % 64) as u32);
+        }
+        std::hint::black_box(vc.min_clock());
+        N
+    });
+    bench("shard routing hash", || {
+        let desc = TableDesc {
+            id: TableId(3),
+            num_rows: 1 << 20,
+            row_width: 8,
+            row_kind: RowKind::Dense,
+            policy: PolicyConfig::Bsp,
+        };
+        const N: u64 = 2_000_000;
+        let mut acc = 0u32;
+        for i in 0..N {
+            acc ^= desc.shard_of(RowId(i), 8).0;
+        }
+        std::hint::black_box(acc);
+        N
+    });
+    println!("\ndone.");
+}

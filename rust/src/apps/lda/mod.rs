@@ -1,0 +1,24 @@
+//! Latent Dirichlet Allocation by collapsed Gibbs sampling over the
+//! parameter server — the paper's §5 evaluation workload.
+//!
+//! Tables (all f32 counts):
+//! * **word-topic** `n_wk` — one row per vocabulary word, `K` columns;
+//!   the contended, shared state. The paper runs it under **weak VAP**.
+//! * **topic-sum** `n_k` — a single row of `K` totals.
+//!
+//! Doc-topic counts `n_dk` and topic assignments `z` are worker-local
+//! (documents are partitioned across workers), the standard layout of
+//! distributed LDA (YahooLDA, Petuum).
+//!
+//! The sampler supports two inner-loop implementations:
+//! * pure Rust (default — the throughput path used for the Fig-5 scaling
+//!   bench);
+//! * the JAX/Pallas AOT artifact `lda_topic_probs` via
+//!   [`crate::runtime::ComputePool`] (E2E validation that the three-layer
+//!   stack composes; batches a document's tokens per call).
+
+mod corpus;
+mod gibbs;
+
+pub use corpus::{Corpus, CorpusStats, SyntheticCorpusConfig};
+pub use gibbs::{run_lda, GibbsResult, LdaConfig};

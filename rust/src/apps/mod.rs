@@ -1,0 +1,17 @@
+//! ML applications on the parameter server — the workloads the paper's
+//! evaluation and theory sections use:
+//!
+//! * [`lda`] — collapsed-Gibbs Latent Dirichlet Allocation over PS tables
+//!   (the paper's §5 evaluation: 20News-scale corpus, weak VAP, strong
+//!   scaling);
+//! * [`sgd`] — stochastic gradient descent for logistic/linear regression
+//!   (the Theorem-1 workload), with the gradient computed either by a
+//!   pure-Rust path or by the JAX/Pallas AOT artifact via PJRT;
+//! * [`mf`] — matrix factorization by SGD (a second realistic workload);
+//! * [`transformer`] — data-parallel transformer-LM training driver (the
+//!   end-to-end validation workload, E8 in DESIGN.md).
+
+pub mod lda;
+pub mod mf;
+pub mod sgd;
+pub mod transformer;

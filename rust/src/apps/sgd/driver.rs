@@ -1,0 +1,337 @@
+//! The distributed SGD driver.
+
+use crate::util::Rng64;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::PolicyConfig;
+use crate::consistency::cvap::theorem1_eta;
+use crate::coordinator::PsSystem;
+use crate::error::Result;
+use crate::runtime::{ComputePool, Tensor};
+use crate::table::{RowId, RowKind, TableDesc, TableId};
+
+use super::data::LogRegData;
+
+/// Table holding the weight vector (rows of `row_width` parameters).
+pub const WEIGHT_TABLE: TableId = TableId(20);
+
+/// Row width used to shard the weight vector across rows/shards.
+const ROW_WIDTH: usize = 64;
+
+/// SGD run configuration.
+#[derive(Debug, Clone)]
+pub struct SgdConfig {
+    /// Iterations (clocks) per worker.
+    pub iters: usize,
+    /// Minibatch size per step.
+    pub batch: usize,
+    /// Consistency policy for the weight table.
+    pub policy: PolicyConfig,
+    /// Theorem-1 constants: Lipschitz bound `L` of the per-example loss.
+    pub lipschitz: f64,
+    /// Theorem-1 constants: diameter bound `F`.
+    pub diameter: f64,
+    /// Override learning rate (None ⇒ the Theorem-1 schedule
+    /// `η_t = σ/√t` with `σ = F/(L√(v_thr·P))`, using `v_thr = 1` for
+    /// policies without a value bound).
+    pub eta: Option<f64>,
+    /// Compute gradients through the `logreg_grad` AOT artifact.
+    pub use_xla: bool,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for SgdConfig {
+    fn default() -> Self {
+        SgdConfig {
+            iters: 100,
+            batch: 32,
+            policy: PolicyConfig::Vap { v_thr: 4.0, strong: false },
+            lipschitz: 4.0,
+            diameter: 4.0,
+            eta: None,
+            use_xla: false,
+            seed: 17,
+        }
+    }
+}
+
+/// Result of a distributed SGD run.
+#[derive(Debug, Clone)]
+pub struct SgdResult {
+    /// Final weights (synchronized view).
+    pub weights: Vec<f32>,
+    /// Full-dataset loss after training.
+    pub final_loss: f64,
+    /// Accuracy after training.
+    pub accuracy: f64,
+    /// Mean per-worker loss recorded at each iteration on the worker's
+    /// *noisy view* — `f_t(x̃_t)` of the theory; the regret integrand.
+    pub loss_curve: Vec<f64>,
+    /// Wall-clock seconds.
+    pub wall_secs: f64,
+    /// Steps per second (aggregate).
+    pub steps_per_sec: f64,
+}
+
+/// Number of weight rows for dimension `d`.
+fn num_rows(d: usize) -> u64 {
+    ((d + ROW_WIDTH - 1) / ROW_WIDTH) as u64
+}
+
+/// Create the weight table for dimension `d` under `policy`.
+pub fn create_weight_table(system: &PsSystem, d: usize, policy: PolicyConfig) -> Result<()> {
+    system.create_table(TableDesc {
+        id: WEIGHT_TABLE,
+        num_rows: num_rows(d),
+        row_width: ROW_WIDTH as u32,
+        row_kind: RowKind::Dense,
+        policy,
+    })
+}
+
+/// Read the full weight vector through a worker's table handle.
+fn read_weights(t: &crate::client::TableHandle, d: usize) -> Result<Vec<f32>> {
+    let mut w = Vec::with_capacity(num_rows(d) as usize * ROW_WIDTH);
+    for r in 0..num_rows(d) {
+        w.extend(t.get_row(RowId(r))?);
+    }
+    w.truncate(d);
+    Ok(w)
+}
+
+/// Write a scaled gradient: `w ← w − η·g` via per-row `Inc`s.
+fn apply_grad(t: &crate::client::TableHandle, g: &[f32], eta: f32) -> Result<()> {
+    for (r, chunk) in g.chunks(ROW_WIDTH).enumerate() {
+        let deltas: Vec<f32> = chunk.iter().map(|v| -eta * v).collect();
+        t.inc_row(RowId(r as u64), &deltas)?;
+    }
+    Ok(())
+}
+
+/// Run distributed SGD on `data` (shared by all workers; each samples its
+/// own minibatches from its shard).
+pub fn run_sgd(
+    system: &PsSystem,
+    data: Arc<LogRegData>,
+    cfg: SgdConfig,
+    pool: Option<Arc<ComputePool>>,
+) -> Result<SgdResult> {
+    create_weight_table(system, data.d, cfg.policy)?;
+    let p = system.config().num_workers();
+    let v_thr = cfg.policy.v_thr().unwrap_or(1.0) as f64;
+    let cfg = Arc::new(cfg);
+
+    let t0 = Instant::now();
+    let curves: Vec<Vec<f64>> = system.run_workers({
+        let data = data.clone();
+        let cfg = cfg.clone();
+        move |ctx| {
+            let t = ctx.table(WEIGHT_TABLE);
+            let mut rng = Rng64::seed_from_u64(cfg.seed ^ ((ctx.worker_id().0 as u64) << 40));
+            // Each worker draws from its contiguous data shard.
+            let p = ctx.num_workers() as usize;
+            let wid = ctx.worker_id().0 as usize;
+            let shard = data.n() / p.max(1);
+            let lo = wid * shard;
+            let hi = if wid + 1 == p { data.n() } else { lo + shard };
+            let mut curve = Vec::with_capacity(cfg.iters);
+            for it in 1..=cfg.iters {
+                let w = read_weights(&t, data.d).unwrap();
+                let idx: Vec<usize> =
+                    (0..cfg.batch).map(|_| rng.range(lo, hi.max(lo + 1))).collect();
+                let g = if cfg.use_xla {
+                    xla_grad(pool.as_ref().unwrap(), &data, &w, &idx).unwrap()
+                } else {
+                    data.grad(&w, &idx)
+                };
+                // minibatch loss on the noisy view (regret integrand)
+                curve.push(minibatch_loss(&data, &w, &idx));
+                let eta = cfg
+                    .eta
+                    .unwrap_or_else(|| {
+                        theorem1_eta(it as u64, cfg.lipschitz, cfg.diameter, v_thr, p as u32)
+                    }) as f32;
+                apply_grad(&t, &g, eta).unwrap();
+                ctx.clock().unwrap();
+            }
+            curve
+        }
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Synchronized read of the final weights: ask one worker per proc to
+    // spin until the pipeline drains (compare two consecutive reads).
+    let weights = read_final_weights(system, &data)?;
+    let final_loss = data.loss(&weights);
+    let accuracy = data.accuracy(&weights);
+
+    let iters = cfg.iters;
+    let mut loss_curve = vec![0.0; iters];
+    for c in &curves {
+        for (i, v) in c.iter().enumerate() {
+            loss_curve[i] += v / curves.len() as f64;
+        }
+    }
+    Ok(SgdResult {
+        weights,
+        final_loss,
+        accuracy,
+        loss_curve,
+        wall_secs: wall,
+        steps_per_sec: (iters as u64 * p as u64) as f64 / wall.max(1e-9),
+    })
+}
+
+fn minibatch_loss(data: &LogRegData, w: &[f32], idx: &[usize]) -> f64 {
+    let mut total = 0.0;
+    for &i in idx {
+        let logit: f32 = data.xi(i).iter().zip(w).map(|(a, b)| a * b).sum();
+        let z = logit as f64;
+        let yi = data.y[i] as f64;
+        let l = if z > 0.0 {
+            z + (1.0 + (-z).exp()).ln() - yi * z
+        } else {
+            (1.0 + z.exp()).ln() - yi * z
+        };
+        total += l;
+    }
+    total / idx.len().max(1) as f64
+}
+
+/// Gradient through the `logreg_grad` artifact: inputs `w [D]`, `x [B,D]`,
+/// `y [B]`; outputs `(grad [D], loss [])`.
+fn xla_grad(
+    pool: &ComputePool,
+    data: &LogRegData,
+    w: &[f32],
+    idx: &[usize],
+) -> Result<Vec<f32>> {
+    let d = data.d;
+    let b = idx.len();
+    let mut xb = Vec::with_capacity(b * d);
+    let mut yb = Vec::with_capacity(b);
+    for &i in idx {
+        xb.extend_from_slice(data.xi(i));
+        yb.push(data.y[i]);
+    }
+    let out = pool.run(
+        "logreg_grad",
+        vec![
+            Tensor::new(w.to_vec(), vec![d])?,
+            Tensor::new(xb, vec![b, d])?,
+            Tensor::new(yb, vec![b])?,
+        ],
+    )?;
+    // The artifact returns the SUM gradient (padding-exact); normalize to
+    // the mean to match the pure-Rust path.
+    let mut g = out.into_iter().next().map(|t| t.data).unwrap_or_default();
+    let inv = 1.0 / b.max(1) as f32;
+    for v in &mut g {
+        *v *= inv;
+    }
+    Ok(g)
+}
+
+/// Poll the weight table until two consecutive fully-synced reads agree
+/// (the async pipeline has drained), then return the weights.
+fn read_final_weights(system: &PsSystem, data: &LogRegData) -> Result<Vec<f32>> {
+    let d = data.d;
+    let out = system.run_workers(move |ctx| {
+        if ctx.worker_id().0 != 0 {
+            return Vec::new();
+        }
+        let t = ctx.table(WEIGHT_TABLE);
+        let deadline = Instant::now() + std::time::Duration::from_secs(10);
+        let mut prev = read_weights(&t, d).unwrap();
+        loop {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            let cur = read_weights(&t, d).unwrap();
+            if cur == prev || Instant::now() > deadline {
+                return cur;
+            }
+            prev = cur;
+        }
+    })?;
+    Ok(out.into_iter().next().unwrap_or_default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::sgd::data::LogRegDataConfig;
+    use crate::config::SystemConfig;
+
+    fn sys() -> PsSystem {
+        PsSystem::launch(
+            SystemConfig::builder()
+                .num_server_shards(2)
+                .num_client_procs(2)
+                .threads_per_proc(1)
+                .flush_interval_us(50)
+                .build(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn distributed_sgd_reduces_loss_under_vap() {
+        let system = sys();
+        let data = Arc::new(LogRegData::synthetic(&LogRegDataConfig {
+            n: 2048,
+            d: 32,
+            noise: 0.02,
+            seed: 21,
+        }));
+        let zero_loss = data.loss(&vec![0.0; data.d]);
+        let res = run_sgd(
+            &system,
+            data.clone(),
+            SgdConfig {
+                iters: 60,
+                batch: 32,
+                policy: PolicyConfig::Vap { v_thr: 4.0, strong: false },
+                eta: Some(0.25),
+                ..SgdConfig::default()
+            },
+            None,
+        )
+        .unwrap();
+        assert!(
+            res.final_loss < zero_loss * 0.75,
+            "loss {} should beat zero-weight loss {}",
+            res.final_loss,
+            zero_loss
+        );
+        assert!(res.accuracy > 0.8, "accuracy {}", res.accuracy);
+        assert_eq!(res.loss_curve.len(), 60);
+        system.shutdown().unwrap();
+    }
+
+    #[test]
+    fn sgd_under_ssp_also_converges() {
+        let system = sys();
+        let data = Arc::new(LogRegData::synthetic(&LogRegDataConfig {
+            n: 1024,
+            d: 16,
+            noise: 0.02,
+            seed: 22,
+        }));
+        let res = run_sgd(
+            &system,
+            data.clone(),
+            SgdConfig {
+                iters: 40,
+                batch: 32,
+                policy: PolicyConfig::Ssp { staleness: 2 },
+                eta: Some(0.25),
+                ..SgdConfig::default()
+            },
+            None,
+        )
+        .unwrap();
+        assert!(res.accuracy > 0.75, "accuracy {}", res.accuracy);
+        system.shutdown().unwrap();
+    }
+}

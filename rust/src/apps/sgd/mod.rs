@@ -1,0 +1,17 @@
+//! Distributed SGD for (regularized) logistic / linear regression — the
+//! workload of the paper's §3 theory: Theorem 1 proves `O(√T)` regret for
+//! SGD under VAP with `η_t = σ/√t`, `σ = F/(L√(v_thr·P))`.
+//!
+//! The weight vector lives in a PS table (`row_width`-wide rows); each
+//! worker owns a shard of the training set, reads the (possibly stale,
+//! boundedly so) weights, computes a minibatch gradient — either in pure
+//! Rust or through the `logreg_grad` JAX/Pallas artifact — and `Inc`s the
+//! scaled negative gradient back. `benches/sgd_convergence.rs` measures
+//! the regret and compares it against
+//! [`crate::consistency::cvap::theorem1_regret_bound`].
+
+mod data;
+mod driver;
+
+pub use data::{LogRegData, LogRegDataConfig};
+pub use driver::{run_sgd, SgdConfig, SgdResult, WEIGHT_TABLE};

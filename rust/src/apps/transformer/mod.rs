@@ -1,0 +1,418 @@
+//! Data-parallel transformer-LM training through the parameter server —
+//! the end-to-end validation workload (DESIGN.md E8): every layer of the
+//! stack composes here (L1 Pallas matmul/attention kernels → L2 jax
+//! fwd/bwd → AOT HLO artifact → Rust PJRT runtime → PS tables under a
+//! bounded-asynchronous policy).
+//!
+//! The model lives in one PS table per parameter tensor; each worker
+//! pulls the (boundedly stale) parameters, runs `transformer_step` on its
+//! minibatch via [`crate::runtime::ComputePool`], and `Inc`s the scaled
+//! negative gradients back. The model spec is read from
+//! `artifacts/transformer_meta.txt`, which `python/compile/aot.py`
+//! writes next to the HLO so the two sides can never drift.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::PolicyConfig;
+use crate::coordinator::PsSystem;
+use crate::error::{Error, Result};
+use crate::runtime::{ComputePool, Tensor};
+use crate::table::{RowId, RowKind, TableDesc, TableId};
+use crate::util::Rng64;
+
+/// First table id used for parameter tensors.
+pub const PARAM_TABLE_BASE: u32 = 100;
+
+/// Model spec exported by `aot.py` (shapes must match the artifact).
+///
+/// `transformer_meta.txt` format (whitespace-separated, `#` comments):
+/// ```text
+/// vocab 512
+/// d_model 128
+/// n_layers 2
+/// n_heads 4
+/// seq_len 64
+/// batch 8
+/// param embed 512 128
+/// param L0.wq 128 128
+/// ...
+/// ```
+#[derive(Debug, Clone)]
+pub struct TransformerSpec {
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Model width.
+    pub d_model: usize,
+    /// Number of layers.
+    pub n_layers: usize,
+    /// Attention heads.
+    pub n_heads: usize,
+    /// Sequence length of the training step.
+    pub seq_len: usize,
+    /// Batch size baked into the artifact.
+    pub batch: usize,
+    /// Ordered parameter tensors: `(name, shape)`.
+    pub params: Vec<(String, Vec<usize>)>,
+}
+
+impl TransformerSpec {
+    /// Load the spec file written by `aot.py`.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let path = artifacts_dir.as_ref().join("transformer_meta.txt");
+        if !path.exists() {
+            return Err(Error::MissingArtifact(path));
+        }
+        let text = std::fs::read_to_string(&path)?;
+        Self::parse(&text)
+    }
+
+    /// Parse the meta text (separate from I/O for testability).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut vocab = None;
+        let mut d_model = None;
+        let mut n_layers = None;
+        let mut n_heads = None;
+        let mut seq_len = None;
+        let mut batch = None;
+        let mut params = Vec::new();
+        for (no, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let key = it.next().unwrap();
+            let bad =
+                |what: &str| Error::Runtime(format!("meta line {}: bad {what}", no + 1));
+            match key {
+                "vocab" | "d_model" | "n_layers" | "n_heads" | "seq_len" | "batch" => {
+                    let v: usize = it
+                        .next()
+                        .ok_or_else(|| bad(key))?
+                        .parse()
+                        .map_err(|_| bad(key))?;
+                    match key {
+                        "vocab" => vocab = Some(v),
+                        "d_model" => d_model = Some(v),
+                        "n_layers" => n_layers = Some(v),
+                        "n_heads" => n_heads = Some(v),
+                        "seq_len" => seq_len = Some(v),
+                        _ => batch = Some(v),
+                    }
+                }
+                "param" => {
+                    let name = it.next().ok_or_else(|| bad("param name"))?.to_string();
+                    let shape: Vec<usize> = it
+                        .map(|d| d.parse().map_err(|_| bad("param dim")))
+                        .collect::<Result<_>>()?;
+                    if shape.is_empty() {
+                        return Err(bad("param shape"));
+                    }
+                    params.push((name, shape));
+                }
+                _ => return Err(Error::Runtime(format!("meta line {}: unknown key {key}", no + 1))),
+            }
+        }
+        let miss = |k: &str| Error::Runtime(format!("meta missing {k}"));
+        Ok(TransformerSpec {
+            vocab: vocab.ok_or_else(|| miss("vocab"))?,
+            d_model: d_model.ok_or_else(|| miss("d_model"))?,
+            n_layers: n_layers.ok_or_else(|| miss("n_layers"))?,
+            n_heads: n_heads.ok_or_else(|| miss("n_heads"))?,
+            seq_len: seq_len.ok_or_else(|| miss("seq_len"))?,
+            batch: batch.ok_or_else(|| miss("batch"))?,
+            params,
+        })
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+
+    /// `(num_rows, row_width)` layout of parameter `i`'s table: first dim
+    /// = rows, remaining dims flattened into the row.
+    pub fn table_layout(&self, i: usize) -> (u64, u32) {
+        let shape = &self.params[i].1;
+        match shape.len() {
+            0 => (1, 1),
+            1 => (1, shape[0] as u32),
+            _ => (shape[0] as u64, shape[1..].iter().product::<usize>() as u32),
+        }
+    }
+}
+
+/// Training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Optimizer steps per worker.
+    pub steps: usize,
+    /// Learning rate.
+    pub eta: f32,
+    /// Consistency policy for all parameter tables.
+    pub policy: PolicyConfig,
+    /// RNG seed (init + data).
+    pub seed: u64,
+    /// Log the loss every `log_every` steps (0 = never).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 50,
+            eta: 0.05,
+            policy: PolicyConfig::Ssp { staleness: 1 },
+            seed: 1234,
+            log_every: 10,
+        }
+    }
+}
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    /// Mean loss per step (averaged over workers).
+    pub loss_curve: Vec<f64>,
+    /// Steps/second aggregate.
+    pub steps_per_sec: f64,
+    /// Wall-clock seconds.
+    pub wall_secs: f64,
+    /// Parameter count.
+    pub num_params: usize,
+}
+
+/// Create one PS table per parameter tensor.
+pub fn create_param_tables(
+    system: &PsSystem,
+    spec: &TransformerSpec,
+    policy: PolicyConfig,
+) -> Result<()> {
+    for i in 0..spec.params.len() {
+        let (rows, width) = spec.table_layout(i);
+        system.create_table(TableDesc {
+            id: TableId(PARAM_TABLE_BASE + i as u32),
+            num_rows: rows,
+            row_width: width,
+            row_kind: RowKind::Dense,
+            policy,
+        })?;
+    }
+    Ok(())
+}
+
+/// Synthetic token stream with learnable structure: a fixed random bigram
+/// chain over the vocabulary (entropy well below uniform, so the LM loss
+/// has headroom to drop).
+pub struct BigramData {
+    /// Per token: candidate successors.
+    pub next: Vec<Vec<u32>>,
+    vocab: usize,
+}
+
+impl BigramData {
+    /// Build a bigram chain with `fanout` successors per token.
+    pub fn new(vocab: usize, fanout: usize, seed: u64) -> Self {
+        let mut rng = Rng64::seed_from_u64(seed);
+        let next = (0..vocab)
+            .map(|_| (0..fanout).map(|_| rng.below(vocab) as u32).collect())
+            .collect();
+        BigramData { next, vocab }
+    }
+
+    /// Sample a `[batch, seq+1]` token block (inputs + shifted targets).
+    pub fn sample(&self, rng: &mut Rng64, batch: usize, seq: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(batch * (seq + 1));
+        for _ in 0..batch {
+            let mut tok = rng.below(self.vocab) as u32;
+            out.push(tok as f32);
+            for _ in 0..seq {
+                let succ = &self.next[tok as usize];
+                tok = succ[rng.below(succ.len())];
+                out.push(tok as f32);
+            }
+        }
+        out
+    }
+}
+
+fn read_params(ctx: &crate::client::WorkerCtx, spec: &TransformerSpec) -> Result<Vec<Tensor>> {
+    let mut out = Vec::with_capacity(spec.params.len());
+    for i in 0..spec.params.len() {
+        let (rows, width) = spec.table_layout(i);
+        let t = ctx.table(TableId(PARAM_TABLE_BASE + i as u32));
+        let mut data = Vec::with_capacity(rows as usize * width as usize);
+        for r in 0..rows {
+            data.extend(t.get_row(RowId(r))?);
+        }
+        out.push(Tensor::new(data, spec.params[i].1.clone())?);
+    }
+    Ok(out)
+}
+
+fn apply_grads(
+    ctx: &crate::client::WorkerCtx,
+    spec: &TransformerSpec,
+    grads: &[Tensor],
+    eta: f32,
+) -> Result<()> {
+    for (i, g) in grads.iter().enumerate() {
+        let (rows, width) = spec.table_layout(i);
+        let t = ctx.table(TableId(PARAM_TABLE_BASE + i as u32));
+        for r in 0..rows as usize {
+            let chunk = &g.data[r * width as usize..(r + 1) * width as usize];
+            let deltas: Vec<f32> = chunk.iter().map(|v| -eta * v).collect();
+            t.inc_row(RowId(r as u64), &deltas)?;
+        }
+    }
+    Ok(())
+}
+
+/// Train the transformer data-parallel across all workers. `pool` must
+/// serve the `transformer_step` artifact.
+pub fn train(
+    system: &PsSystem,
+    spec: Arc<TransformerSpec>,
+    pool: Arc<ComputePool>,
+    cfg: TrainConfig,
+) -> Result<TrainResult> {
+    create_param_tables(system, &spec, cfg.policy)?;
+    let p = system.config().num_workers();
+    let cfg = Arc::new(cfg);
+
+    let t0 = Instant::now();
+    let curves: Vec<Vec<f64>> = system.run_workers({
+        let spec = spec.clone();
+        let pool = pool.clone();
+        let cfg = cfg.clone();
+        move |ctx| {
+            let mut rng = Rng64::seed_from_u64(cfg.seed ^ ((ctx.worker_id().0 as u64) << 17));
+            // Worker 0 initializes parameters (scaled-normal init).
+            if ctx.worker_id().0 == 0 {
+                let mut init_rng = Rng64::seed_from_u64(cfg.seed);
+                for i in 0..spec.params.len() {
+                    let (rows, width) = spec.table_layout(i);
+                    let std = init_std(&spec.params[i].0, spec.d_model);
+                    let t = ctx.table(TableId(PARAM_TABLE_BASE + i as u32));
+                    for r in 0..rows {
+                        let vals: Vec<f32> =
+                            (0..width).map(|_| std * init_rng.normal_f32()).collect();
+                        t.inc_row(RowId(r), &vals).unwrap();
+                    }
+                }
+            }
+            ctx.clock().unwrap();
+            let data = BigramData::new(spec.vocab, 4, cfg.seed + 1);
+            let mut curve = Vec::with_capacity(cfg.steps);
+            for step in 0..cfg.steps {
+                let params = read_params(ctx, &spec).unwrap();
+                let tokens = Tensor::new(
+                    data.sample(&mut rng, spec.batch, spec.seq_len),
+                    vec![spec.batch, spec.seq_len + 1],
+                )
+                .unwrap();
+                let mut inputs = params;
+                inputs.push(tokens);
+                let outputs = pool.run("transformer_step", inputs).unwrap();
+                let loss = outputs[0].item().unwrap() as f64;
+                curve.push(loss);
+                apply_grads(ctx, &spec, &outputs[1..], cfg.eta).unwrap();
+                ctx.clock().unwrap();
+                if cfg.log_every > 0 && step % cfg.log_every == 0 && ctx.worker_id().0 == 0 {
+                    eprintln!("[worker0] step {step:>4} loss {loss:.4}");
+                }
+            }
+            curve
+        }
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut loss_curve = vec![0.0; cfg.steps];
+    for c in &curves {
+        for (i, v) in c.iter().enumerate() {
+            loss_curve[i] += v / curves.len() as f64;
+        }
+    }
+    Ok(TrainResult {
+        loss_curve,
+        steps_per_sec: (cfg.steps as u64 * p as u64) as f64 / wall.max(1e-9),
+        wall_secs: wall,
+        num_params: spec.num_params(),
+    })
+}
+
+/// Initialization scale per parameter name (embedding vs projection vs
+/// layernorm).
+fn init_std(name: &str, d_model: usize) -> f32 {
+    if name.contains("ln_") || name.ends_with("_scale") {
+        0.0 // layernorm scales start at 0 delta from the baked-in 1.0
+    } else if name.contains("embed") || name.contains("pos") {
+        0.02
+    } else {
+        (1.0 / d_model as f32).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bigram_data_is_learnable_structure() {
+        let d = BigramData::new(64, 2, 3);
+        let mut rng = Rng64::seed_from_u64(5);
+        let block = d.sample(&mut rng, 4, 16);
+        assert_eq!(block.len(), 4 * 17);
+        for &t in &block {
+            assert!(t >= 0.0 && t < 64.0);
+        }
+        // successors constrained: given token t, next ∈ next[t] (fanout 2)
+        for b in 0..4 {
+            for s in 0..16 {
+                let cur = block[b * 17 + s] as usize;
+                let nxt = block[b * 17 + s + 1] as u32;
+                assert!(d.next[cur].contains(&nxt));
+            }
+        }
+    }
+
+    #[test]
+    fn spec_parse_and_layout() {
+        let text = "\
+# comment
+vocab 256
+d_model 32
+n_layers 1
+n_heads 2
+seq_len 8
+batch 2
+param embed 256 32
+param ln_f_scale 32
+param w1 32 4 32
+";
+        let spec = TransformerSpec::parse(text).unwrap();
+        assert_eq!(spec.vocab, 256);
+        assert_eq!(spec.table_layout(0), (256, 32));
+        assert_eq!(spec.table_layout(1), (1, 32));
+        assert_eq!(spec.table_layout(2), (32, 128));
+        assert_eq!(spec.num_params(), 256 * 32 + 32 + 32 * 128);
+    }
+
+    #[test]
+    fn spec_parse_rejects_incomplete_or_garbage() {
+        assert!(TransformerSpec::parse("vocab 8\n").is_err());
+        assert!(TransformerSpec::parse("wat 8\n").is_err());
+        assert!(TransformerSpec::parse("vocab eight\n").is_err());
+        assert!(TransformerSpec::parse("param x\n").is_err());
+    }
+
+    #[test]
+    fn missing_meta_is_reported() {
+        match TransformerSpec::load("/nowhere") {
+            Err(Error::MissingArtifact(_)) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,590 @@
+//! The per-process client core: shared caches, ingress and flusher loops.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::clock::VectorClock;
+use crate::comm::msg::{Msg, Payload};
+use crate::comm::{Endpoint, NetSender};
+use crate::config::SystemConfig;
+use crate::error::{Error, Result};
+use crate::metrics::{StalenessHist, WorkerMetrics};
+use crate::server::TableRegistry;
+use crate::table::{RowId, TableId};
+use crate::trace::{BlockReason, Event, TraceRecorder};
+use crate::types::{Clock, NodeId, ProcId, ShardId, WorkerId};
+
+use super::state::TableState;
+
+/// Heavy accounting-invariant checks, enabled by BAPPS_BALANCE_CHECKS=1
+/// (debug harness for the VAP mass ledger).
+fn balance_checks() -> bool {
+    static ON: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *ON.get_or_init(|| std::env::var("BAPPS_BALANCE_CHECKS").is_ok())
+}
+
+/// One table's lockable state + wakeup channel.
+pub(crate) struct ClientTable {
+    pub state: Mutex<TableState>,
+    /// Workers blocked on the clock gate (reads) or value gate (writes)
+    /// wait here; the ingress thread notifies after every relevant apply.
+    pub cv: Condvar,
+}
+
+/// Shared, per-process client core. Worker threads drive it through
+/// [`super::WorkerCtx`]; the coordinator owns the ingress/flusher threads.
+pub struct ClientCore {
+    /// This process's id.
+    pub proc: ProcId,
+    cfg: SystemConfig,
+    registry: Arc<TableRegistry>,
+    net: NetSender,
+    tables: RwLock<HashMap<TableId, Arc<ClientTable>>>,
+    /// Thread-level vector clock; its min is this process's progress.
+    vclock: Mutex<VectorClock<WorkerId>>,
+    /// Per-process worker metrics (aggregated across threads).
+    pub metrics: Arc<WorkerMetrics>,
+    /// Observed read-staleness distribution.
+    pub staleness: Arc<StalenessHist>,
+    /// Trace recorder (may be disabled).
+    pub trace: Arc<TraceRecorder>,
+    stop: AtomicBool,
+}
+
+impl ClientCore {
+    /// Build the core for process `proc`. Worker ids must be registered
+    /// with [`ClientCore::register_worker`] before any `Clock()` call.
+    pub fn new(
+        proc: ProcId,
+        cfg: SystemConfig,
+        registry: Arc<TableRegistry>,
+        net: NetSender,
+        trace: Arc<TraceRecorder>,
+    ) -> Self {
+        ClientCore {
+            proc,
+            cfg,
+            registry,
+            net,
+            tables: RwLock::new(HashMap::new()),
+            vclock: Mutex::new(VectorClock::empty()),
+            metrics: Arc::new(WorkerMetrics::default()),
+            staleness: Arc::new(StalenessHist::default()),
+            trace,
+            stop: AtomicBool::new(false),
+        }
+    }
+
+    /// System config.
+    pub fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    /// Register a worker thread in the process vector clock.
+    pub fn register_worker(&self, worker: WorkerId) {
+        self.vclock.lock().unwrap().register(worker);
+    }
+
+    /// This process's progress (min worker clock).
+    pub fn min_clock(&self) -> Clock {
+        self.vclock.lock().unwrap().min_clock()
+    }
+
+    pub(crate) fn table(&self, id: TableId) -> Result<Arc<ClientTable>> {
+        if let Some(t) = self.tables.read().unwrap().get(&id) {
+            return Ok(t.clone());
+        }
+        let desc = self.registry.get(id)?;
+        let mut w = self.tables.write().unwrap();
+        // Double-checked: another thread may have initialized meanwhile.
+        if let Some(t) = w.get(&id) {
+            return Ok(t.clone());
+        }
+        let st = TableState::new(
+            desc,
+            self.proc,
+            self.cfg.num_server_shards,
+            self.cfg.max_batch_updates,
+            self.cfg.magnitude_priority,
+        );
+        let t = Arc::new(ClientTable { state: Mutex::new(st), cv: Condvar::new() });
+        w.insert(id, t.clone());
+        Ok(t)
+    }
+
+    /// ---- blocking access paths (called from worker threads) ----
+
+    /// Clock-gated read of one element.
+    pub fn get(&self, table: TableId, row: RowId, col: u32, reader_clock: Clock) -> Result<f32> {
+        let t = self.table(table)?;
+        let st = t.state.lock().unwrap();
+        Self::check_bounds(&st, row, Some(col))?;
+        let st = self.wait_read_admissible(&t, st, row, reader_clock)?;
+        self.metrics.gets.fetch_add(1, Ordering::Relaxed);
+        let eff = st.effective_clock(row);
+        self.staleness.record(reader_clock.saturating_sub(eff));
+        Ok(st.read(row, col))
+    }
+
+    /// Clock-gated read of a whole row (densified).
+    pub fn get_row(&self, table: TableId, row: RowId, reader_clock: Clock) -> Result<Vec<f32>> {
+        let t = self.table(table)?;
+        let st = t.state.lock().unwrap();
+        Self::check_bounds(&st, row, None)?;
+        let st = self.wait_read_admissible(&t, st, row, reader_clock)?;
+        self.metrics.gets.fetch_add(1, Ordering::Relaxed);
+        let eff = st.effective_clock(row);
+        self.staleness.record(reader_clock.saturating_sub(eff));
+        Ok(st.read_row(row))
+    }
+
+    /// Allocation-free row read: composes the row into `out` (length
+    /// `row_width`). Same gating as [`ClientCore::get_row`].
+    pub fn get_row_into(
+        &self,
+        table: TableId,
+        row: RowId,
+        out: &mut [f32],
+        reader_clock: Clock,
+    ) -> Result<()> {
+        let t = self.table(table)?;
+        let st = t.state.lock().unwrap();
+        Self::check_bounds(&st, row, None)?;
+        let st = self.wait_read_admissible(&t, st, row, reader_clock)?;
+        self.metrics.gets.fetch_add(1, Ordering::Relaxed);
+        st.read_row_into(row, out);
+        Ok(())
+    }
+
+    /// Value-gated increment of one element.
+    pub fn inc(
+        &self,
+        table: TableId,
+        row: RowId,
+        col: u32,
+        delta: f32,
+        worker: WorkerId,
+    ) -> Result<()> {
+        let t = self.table(table)?;
+        let st = t.state.lock().unwrap();
+        Self::check_bounds(&st, row, Some(col))?;
+        let mut st = self.wait_write_admissible(&t, st, row, col, delta, worker)?;
+        st.apply_inc(row, col, delta);
+        if balance_checks() {
+            st.assert_balance("inc");
+        }
+        self.metrics.incs.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Value-gated whole-row increment. Under a value bound each column's
+    /// gate is awaited in column order.
+    pub fn inc_row(
+        &self,
+        table: TableId,
+        row: RowId,
+        deltas: &[f32],
+        worker: WorkerId,
+    ) -> Result<()> {
+        let t = self.table(table)?;
+        let mut st = t.state.lock().unwrap();
+        Self::check_bounds(&st, row, None)?;
+        if st.model.v_thr().is_some() {
+            for (c, d) in deltas.iter().enumerate() {
+                if *d != 0.0 {
+                    st = self.wait_write_admissible(&t, st, row, c as u32, *d, worker)?;
+                }
+            }
+        }
+        st.apply_inc_row(row, deltas);
+        if balance_checks() {
+            st.assert_balance("inc_row");
+        }
+        self.metrics.incs.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Value-gated bulk increment: applies a whole batch of `(row, col,
+    /// delta)` updates under ONE lock acquisition — the hot-path
+    /// amortization the paper's thread-cache write-back buys (perf pass:
+    /// per-update locking dominated the LDA sampler's profile).
+    pub fn inc_many(
+        &self,
+        table: TableId,
+        updates: &[(RowId, u32, f32)],
+        worker: WorkerId,
+    ) -> Result<()> {
+        if updates.is_empty() {
+            return Ok(());
+        }
+        let t = self.table(table)?;
+        let mut st = t.state.lock().unwrap();
+        let gated = st.model.v_thr().is_some();
+        for &(row, col, delta) in updates {
+            Self::check_bounds(&st, row, Some(col))?;
+            if gated {
+                st = self.wait_write_admissible(&t, st, row, col, delta, worker)?;
+            }
+            st.apply_inc(row, col, delta);
+        }
+        self.metrics.incs.fetch_add(updates.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// `Clock()` for one worker: flush every table (the SSP sync phase;
+    /// for eager tables an incremental flush), tick the thread clock, and
+    /// notify all shards if the process min advanced.
+    pub fn clock(&self, worker: WorkerId) -> Result<Clock> {
+        // Ship everything timestamped up to the current interval. The
+        // flush-before-tick order is what makes `ClockNotify(m)` a valid
+        // promise that all updates stamped ≤ m precede it on every link.
+        self.flush_all_tables()?;
+        let advanced = {
+            let mut vc = self.vclock.lock().unwrap();
+            vc.tick(worker)
+        };
+        if let Some(m) = advanced {
+            for s in 0..self.cfg.num_server_shards {
+                let _ = self.net.send(Msg {
+                    src: NodeId::Client(self.proc),
+                    dst: NodeId::Server(ShardId(s)),
+                    payload: Payload::ClockNotify { proc: self.proc, clock: m },
+                });
+            }
+        }
+        self.metrics.clocks.fetch_add(1, Ordering::Relaxed);
+        let c = self.vclock.lock().unwrap().get(worker).unwrap_or(0);
+        self.trace.record(|| Event::ClockTick { at: Instant::now(), worker, clock: c });
+        Ok(c)
+    }
+
+    /// Flush all tables' egress queues (sync phase / shutdown drain).
+    pub fn flush_all_tables(&self) -> Result<()> {
+        let ids: Vec<TableId> = self.tables.read().unwrap().keys().copied().collect();
+        for id in ids {
+            let t = self.table(id)?;
+            let mut st = t.state.lock().unwrap();
+            self.flush_locked(&mut st, usize::MAX);
+        }
+        Ok(())
+    }
+
+    /// Flush eager tables only (flusher thread body).
+    fn flush_eager_tables(&self) {
+        let handles: Vec<Arc<ClientTable>> =
+            self.tables.read().unwrap().values().cloned().collect();
+        for t in handles {
+            let mut st = t.state.lock().unwrap();
+            if st.model.eager_propagation() && st.has_unsent() {
+                self.flush_locked(&mut st, self.cfg.max_batch_updates);
+            }
+        }
+    }
+
+    /// Drain + send under the table lock (the lock ordering is what keeps
+    /// `ClockNotify` behind every lower-stamped batch on each link).
+    fn flush_locked(&self, st: &mut TableState, max_rows: usize) {
+        if !st.has_unsent() {
+            return;
+        }
+        if balance_checks() {
+            st.assert_balance("pre_flush");
+        }
+        let stamp = self.min_clock() + 1; // lowest possible stamp in egress
+        let batches = st.make_push_batches(max_rows, stamp);
+        if balance_checks() {
+            st.assert_balance("post_flush");
+        }
+        for (shard, batch) in batches {
+            self.trace.record(|| Event::Push {
+                at: Instant::now(),
+                proc: self.proc,
+                table: batch.table,
+                batch_id: batch.batch_id,
+                rows: batch.updates.len(),
+            });
+            let _ = self.net.send(Msg {
+                src: NodeId::Client(self.proc),
+                dst: NodeId::Server(shard),
+                payload: Payload::PushUpdates(batch),
+            });
+        }
+    }
+
+    fn check_bounds(st: &TableState, row: RowId, col: Option<u32>) -> Result<()> {
+        if row.0 >= st.desc.num_rows {
+            return Err(Error::RowOutOfRange {
+                table: st.desc.id,
+                row,
+                num_rows: st.desc.num_rows,
+            });
+        }
+        if let Some(c) = col {
+            if c >= st.desc.row_width {
+                return Err(Error::ColOutOfRange {
+                    table: st.desc.id,
+                    col: c,
+                    width: st.desc.row_width,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    fn wait_read_admissible<'a>(
+        &self,
+        t: &'a ClientTable,
+        mut st: MutexGuard<'a, TableState>,
+        row: RowId,
+        reader_clock: Clock,
+    ) -> Result<MutexGuard<'a, TableState>> {
+        if st.read_admissible(row, reader_clock) {
+            return Ok(st);
+        }
+        let required = st.model.required_read_clock(reader_clock);
+        let deadline = crate::util::Deadline::after_ms(self.cfg.wait_timeout_ms);
+        let table = st.desc.id;
+        self.trace.record(|| Event::BlockStart {
+            at: Instant::now(),
+            worker: WorkerId(u32::MAX),
+            table,
+            reason: BlockReason::Staleness,
+        });
+        let t0 = Instant::now();
+        loop {
+            // Ensure a pull with sufficient freshness is in flight.
+            let needs_pull =
+                st.inflight_pulls.get(&row).map_or(true, |&needed| needed < required);
+            if needs_pull {
+                st.inflight_pulls.insert(row, required);
+                let shard = st.desc.shard_of(row, self.cfg.num_server_shards);
+                self.metrics.pulls.fetch_add(1, Ordering::Relaxed);
+                let _ = self.net.send(Msg {
+                    src: NodeId::Client(self.proc),
+                    dst: NodeId::Server(shard),
+                    payload: Payload::PullRow {
+                        table,
+                        row,
+                        needed_clock: required,
+                        worker: WorkerId(u32::MAX),
+                    },
+                });
+            }
+            let remaining = deadline.remaining(&format!(
+                "read freshness {required} on table {} row {}",
+                table.0, row.0
+            ))?;
+            let (guard, _) = t
+                .cv
+                .wait_timeout(st, remaining.min(Duration::from_millis(50)))
+                .map_err(|_| Error::Other("poisoned table lock".into()))?;
+            st = guard;
+            if st.read_admissible(row, reader_clock) {
+                self.metrics.add_read_block(t0.elapsed());
+                self.trace.record(|| Event::BlockEnd {
+                    at: Instant::now(),
+                    worker: WorkerId(u32::MAX),
+                    table,
+                    reason: BlockReason::Staleness,
+                });
+                return Ok(st);
+            }
+        }
+    }
+
+    fn wait_write_admissible<'a>(
+        &self,
+        t: &'a ClientTable,
+        mut st: MutexGuard<'a, TableState>,
+        row: RowId,
+        col: u32,
+        delta: f32,
+        worker: WorkerId,
+    ) -> Result<MutexGuard<'a, TableState>> {
+        if st.write_admissible(row, col, delta) {
+            return Ok(st);
+        }
+        let deadline = crate::util::Deadline::after_ms(self.cfg.wait_timeout_ms);
+        let table = st.desc.id;
+        self.trace.record(|| Event::BlockStart {
+            at: Instant::now(),
+            worker,
+            table,
+            reason: BlockReason::ValueBound,
+        });
+        let t0 = Instant::now();
+        // The blocked mass can only drain if it is on the wire: flush now.
+        self.flush_locked(&mut st, usize::MAX);
+        loop {
+            let remaining = deadline.remaining(&format!(
+                "VAP visibility on table {} row {} col {col} (pending {}, delta {delta}, overlay {}, unsent {}, unacked {})",
+                table.0,
+                row.0,
+                st.pending_mass(row, col),
+                st.overlay_depth(),
+                st.has_unsent(),
+                st.outstanding_batches(),
+            ))?;
+            let (guard, _) = t
+                .cv
+                .wait_timeout(st, remaining.min(Duration::from_millis(50)))
+                .map_err(|_| Error::Other("poisoned table lock".into()))?;
+            st = guard;
+            if st.write_admissible(row, col, delta) {
+                self.metrics.add_write_block(t0.elapsed());
+                self.trace.record(|| Event::BlockEnd {
+                    at: Instant::now(),
+                    worker,
+                    table,
+                    reason: BlockReason::ValueBound,
+                });
+                return Ok(st);
+            }
+        }
+    }
+
+    /// Debug: total |pending| VAP mass + unacked batch count for a table.
+    #[doc(hidden)]
+    pub fn debug_pending(&self, table: TableId) -> (f64, usize) {
+        let t = self.table(table).unwrap();
+        let st = t.state.lock().unwrap();
+        (st.total_pending(), st.outstanding_batches())
+    }
+
+    /// Debug introspection of one parameter's composition (tests only).
+    #[doc(hidden)]
+    pub fn debug_param(&self, table: TableId, row: RowId, col: u32) -> (f32, Clock, Clock, f32, f32) {
+        let t = self.table(table).unwrap();
+        let st = t.state.lock().unwrap();
+        st.debug_param(row, col)
+    }
+
+    /// ---- background loops (owned by the coordinator) ----
+
+    /// Ingress loop: apply server messages to the process cache and wake
+    /// blocked workers. Runs until `Shutdown` or endpoint close.
+    pub fn run_ingress(self: &Arc<Self>, endpoint: Endpoint) {
+        loop {
+            match endpoint.recv() {
+                Ok(msg) => {
+                    if !self.handle_ingress(msg) {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Handle one ingress message (public for deterministic tests).
+    /// Returns false on shutdown.
+    pub fn handle_ingress(&self, msg: Msg) -> bool {
+        match msg.payload {
+            Payload::ServerPush(push) => {
+                if let Ok(t) = self.table(push.table) {
+                    {
+                        let mut st = t.state.lock().unwrap();
+                        st.apply_server_push(self.proc, &push);
+                    }
+                    self.trace.record(|| Event::Applied {
+                        at: Instant::now(),
+                        proc: self.proc,
+                        table: push.table,
+                        origin: push.origin,
+                        batch_id: push.batch_id,
+                        min_clock: push.min_clock,
+                    });
+                    t.cv.notify_all();
+                    // Ack so the shard can track global visibility.
+                    if let NodeId::Server(_) = msg.src {
+                        let _ = self.net.send(Msg {
+                            src: NodeId::Client(self.proc),
+                            dst: msg.src,
+                            payload: Payload::PushAck {
+                                table: push.table,
+                                origin: push.origin,
+                                batch_id: push.batch_id,
+                                by: self.proc,
+                            },
+                        });
+                    }
+                }
+            }
+            Payload::PullReply { table, row, data, clock, .. } => {
+                if let Ok(t) = self.table(table) {
+                    {
+                        let mut st = t.state.lock().unwrap();
+                        st.apply_pull_reply(row, data, clock);
+                    }
+                    t.cv.notify_all();
+                }
+            }
+            Payload::MinClock { shard, clock } => {
+                self.trace.record(|| Event::Floor {
+                    at: Instant::now(),
+                    proc: self.proc,
+                    shard: shard.0,
+                    clock,
+                });
+                // Raise the floor on *every* table (the broadcast is
+                // per-shard, covering all its partitions).
+                let handles: Vec<Arc<ClientTable>> =
+                    self.tables.read().unwrap().values().cloned().collect();
+                for t in handles {
+                    {
+                        let mut st = t.state.lock().unwrap();
+                        st.apply_min_clock(shard, clock);
+                    }
+                    t.cv.notify_all();
+                }
+            }
+            Payload::VisibilityAck { table, batch_id } => {
+                if let Ok(t) = self.table(table) {
+                    let released = {
+                        let mut st = t.state.lock().unwrap();
+                        let r = st.apply_visibility_ack(batch_id);
+                        if balance_checks() {
+                            st.assert_balance("vis_ack");
+                        }
+                        r
+                    };
+                    if released {
+                        t.cv.notify_all();
+                    }
+                    self.trace.record(|| Event::Visible {
+                        at: Instant::now(),
+                        proc: self.proc,
+                        table,
+                        batch_id,
+                    });
+                }
+            }
+            Payload::Shutdown => return false,
+            // Clients never receive these:
+            Payload::PushUpdates(_)
+            | Payload::PullRow { .. }
+            | Payload::ClockNotify { .. }
+            | Payload::PushAck { .. } => {}
+        }
+        true
+    }
+
+    /// Flusher loop: periodically drain eager tables until stopped.
+    pub fn run_flusher(self: &Arc<Self>) {
+        let interval = Duration::from_micros(self.cfg.flush_interval_us.max(1));
+        while !self.stop.load(Ordering::Relaxed) {
+            self.flush_eager_tables();
+            std::thread::sleep(interval);
+        }
+        // Final drain so no update is stranded at shutdown.
+        let _ = self.flush_all_tables();
+    }
+
+    /// Ask background loops to stop (flusher notices the flag; ingress is
+    /// stopped by a `Shutdown` message from the coordinator).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}

@@ -1,0 +1,184 @@
+//! The worker-facing API: [`WorkerCtx`] (one per application thread) and
+//! [`TableHandle`] (cheap per-table accessor).
+//!
+//! This is the paper's application interface (§4.1):
+//! `Get(table, row, col)`, `Inc(table, row, col, delta)` and `Clock()`,
+//! plus row-granular variants the apps use for efficiency.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::error::Result;
+use crate::table::{RowId, TableId};
+use crate::trace::Event;
+use crate::types::{Clock, ProcId, WorkerId};
+
+use super::core::ClientCore;
+
+/// Per-worker-thread context handed to the application closure by
+/// [`crate::coordinator::PsSystem::run_workers`].
+pub struct WorkerCtx {
+    worker: WorkerId,
+    core: Arc<ClientCore>,
+    /// The worker's clock, shared with its table handles.
+    clock: Arc<AtomicU32>,
+    /// Worker-local update sequence (trace only).
+    seq: std::cell::Cell<u64>,
+    /// Straggler slowdown multiplier for this worker (1.0 = none).
+    slowdown: f64,
+    /// Total number of workers `P` in the system.
+    num_workers: u32,
+}
+
+impl WorkerCtx {
+    /// Construct a context (coordinator use).
+    pub(crate) fn new(
+        worker: WorkerId,
+        core: Arc<ClientCore>,
+        slowdown: f64,
+        num_workers: u32,
+    ) -> Self {
+        core.register_worker(worker);
+        WorkerCtx {
+            worker,
+            core,
+            clock: Arc::new(AtomicU32::new(0)),
+            seq: std::cell::Cell::new(0),
+            slowdown,
+            num_workers,
+        }
+    }
+
+    /// This worker's global id.
+    pub fn worker_id(&self) -> WorkerId {
+        self.worker
+    }
+
+    /// The hosting client process.
+    pub fn proc_id(&self) -> ProcId {
+        self.core.proc
+    }
+
+    /// Total workers `P` across all processes.
+    pub fn num_workers(&self) -> u32 {
+        self.num_workers
+    }
+
+    /// The worker's current clock.
+    pub fn clock_value(&self) -> Clock {
+        self.clock.load(Ordering::Relaxed)
+    }
+
+    /// A handle for one table (cheap; may be created per loop iteration).
+    pub fn table(&self, id: TableId) -> TableHandle {
+        TableHandle {
+            id,
+            core: self.core.clone(),
+            worker: self.worker,
+            clock: self.clock.clone(),
+            seq: self.seq.clone(),
+        }
+    }
+
+    /// `Clock()`: advance this worker's clock by one (paper §4.1). Flushes
+    /// pending updates (the sync phase for BSP/SSP tables) and notifies
+    /// servers when the process frontier moves.
+    pub fn clock(&self) -> Result<Clock> {
+        let c = self.core.clock(self.worker)?;
+        self.clock.store(c, Ordering::Relaxed);
+        Ok(c)
+    }
+
+    /// Simulate `base` seconds of compute, scaled by this worker's
+    /// straggler slowdown (benches use this to inject stragglers).
+    pub fn straggle(&self, base: Duration) {
+        if self.slowdown > 0.0 {
+            std::thread::sleep(base.mul_f64(self.slowdown));
+        }
+    }
+
+    /// Is this worker configured as a straggler?
+    pub fn is_straggler(&self) -> bool {
+        self.slowdown > 1.0
+    }
+
+    /// Aggregate worker metrics of the hosting process.
+    pub fn metrics(&self) -> Arc<crate::metrics::WorkerMetrics> {
+        self.core.metrics.clone()
+    }
+}
+
+/// Accessor for one table bound to one worker.
+pub struct TableHandle {
+    id: TableId,
+    core: Arc<ClientCore>,
+    worker: WorkerId,
+    clock: Arc<AtomicU32>,
+    seq: std::cell::Cell<u64>,
+}
+
+impl TableHandle {
+    /// The table id.
+    pub fn id(&self) -> TableId {
+        self.id
+    }
+
+    /// `Get(table, row, col)` — clock-gated element read.
+    pub fn get(&self, row: RowId, col: u32) -> Result<f32> {
+        self.core.get(self.id, row, col, self.clock.load(Ordering::Relaxed))
+    }
+
+    /// Row-granular read (densified).
+    pub fn get_row(&self, row: RowId) -> Result<Vec<f32>> {
+        self.core.get_row(self.id, row, self.clock.load(Ordering::Relaxed))
+    }
+
+    /// Allocation-free row read into a caller buffer (hot loops).
+    pub fn get_row_into(&self, row: RowId, out: &mut [f32]) -> Result<()> {
+        self.core.get_row_into(self.id, row, out, self.clock.load(Ordering::Relaxed))
+    }
+
+    /// `Inc(table, row, col, delta)` — value-gated increment.
+    pub fn inc(&self, row: RowId, col: u32, delta: f32) -> Result<()> {
+        if self.core.trace.enabled() {
+            let s = self.seq.get();
+            self.seq.set(s + 1);
+            let (worker, table) = (self.worker, self.id);
+            self.core.trace.record(|| Event::Inc {
+                at: Instant::now(),
+                worker,
+                table,
+                row,
+                col,
+                delta,
+                seq: s + 1,
+            });
+        }
+        self.core.inc(self.id, row, col, delta, self.worker)
+    }
+
+    /// Row-granular increment (dense delta vector).
+    pub fn inc_row(&self, row: RowId, deltas: &[f32]) -> Result<()> {
+        self.core.inc_row(self.id, row, deltas, self.worker)
+    }
+
+    /// Bulk increment: a batch of `(row, col, delta)` updates applied
+    /// under one lock acquisition (write-back flush of a thread-local
+    /// buffer — the paper's thread-cache discipline).
+    pub fn inc_many(&self, updates: &[(RowId, u32, f32)]) -> Result<()> {
+        self.core.inc_many(self.id, updates, self.worker)
+    }
+}
+
+impl Clone for TableHandle {
+    fn clone(&self) -> Self {
+        TableHandle {
+            id: self.id,
+            core: self.core.clone(),
+            worker: self.worker,
+            clock: self.clock.clone(),
+            seq: self.seq.clone(),
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! The client library (paper §4.2, Fig 2).
+//!
+//! An application process accesses shared parameters through this library.
+//! It implements the paper's two-level cache hierarchy:
+//!
+//! * the **process cache** — one snapshot replica per table shared by all
+//!   worker threads in the process, kept fresh by server pushes and pulls;
+//! * the **thread/op-log layer** — each `Inc` lands in a write-back egress
+//!   queue (aggregated per row) and in per-parameter VAP accounting; a
+//!   worker's `Get` composes *snapshot + sent-but-unconfirmed overlay +
+//!   unsent egress*, which is exactly how **read-my-writes** holds for
+//!   every policy.
+//!
+//! The *Consistency Controller* of §4.3 lives here: each table's
+//! [`crate::consistency::ConsistencyModel`] is consulted on every access —
+//! the clock gate may turn a `Get` into a blocking pull, the value gate
+//! may block an `Inc` until earlier updates are globally visible.
+//!
+//! Threads per client process:
+//! * `N` application **worker threads** (driving [`WorkerCtx`]);
+//! * one **ingress thread** applying server pushes / pull replies /
+//!   visibility acks to the process cache and waking blocked workers;
+//! * one **flusher thread** draining egress queues of eagerly-propagating
+//!   tables every `flush_interval_us` ("propagates updates whenever the
+//!   network bandwidth is available", §2.1).
+
+mod core;
+mod handle;
+mod state;
+
+pub use self::core::ClientCore;
+pub use handle::{TableHandle, WorkerCtx};
+pub use state::TableState;

@@ -1,0 +1,553 @@
+//! Per-table client-side state: snapshot, overlay, egress, VAP accounting.
+//!
+//! All methods are synchronous over `&mut self`; the surrounding
+//! [`super::core::ClientCore`] wraps a [`TableState`] in a mutex+condvar
+//! pair. Keeping the state logic lock-free makes it directly unit- and
+//! property-testable.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::comm::batcher::Batcher;
+use crate::comm::msg::{PushBatch, ServerPushBatch};
+use crate::comm::priority::{DrainOrder, UpdateQueue};
+use crate::consistency::ConsistencyModel;
+use crate::table::{RowData, RowId, RowUpdate, TableDesc, TableStore};
+use crate::types::{Clock, ProcId, ShardId};
+
+/// A sent-but-not-yet-echoed batch kept for read-my-writes.
+struct OverlayEntry {
+    batch_id: u64,
+    updates: Vec<(RowId, RowUpdate)>,
+}
+
+/// Client-side state of one table in one process.
+pub struct TableState {
+    /// Table descriptor.
+    pub desc: TableDesc,
+    /// Compiled consistency policy.
+    pub model: ConsistencyModel,
+    num_shards: u32,
+    /// Process cache: server-derived snapshot rows.
+    snapshot: TableStore,
+    /// Per-shard freshness floor from `MinClock` broadcasts.
+    shard_clock: Vec<Clock>,
+    /// Sent-but-unconfirmed own batches, FIFO per shard.
+    overlay: HashMap<ShardId, VecDeque<OverlayEntry>>,
+    /// Unsent updates, aggregated per row.
+    egress: UpdateQueue,
+    /// VAP accounting: **signed accumulated sum** of unsynchronized
+    /// updates per parameter (paper §2.2; only maintained when the policy
+    /// has a value bound). Signed so +δ/−δ churn (LDA count oscillation)
+    /// does not consume divergence budget.
+    pending_sum: HashMap<(RowId, u32), f32>,
+    /// Per sent batch: the signed per-parameter deltas it carries
+    /// (released on `VisibilityAck`).
+    batch_mags: HashMap<u64, Vec<((RowId, u32), f32)>>,
+    /// Outstanding pulls: row → highest requested freshness.
+    pub inflight_pulls: HashMap<RowId, Clock>,
+    /// Batch assembly.
+    batcher: Batcher,
+    /// Largest delta magnitude this process wrote (diagnostics: paper's u).
+    pub u_local: f32,
+}
+
+impl TableState {
+    /// Fresh state for `desc` in process `origin`.
+    pub fn new(
+        desc: TableDesc,
+        origin: ProcId,
+        num_shards: u32,
+        max_batch: usize,
+        magnitude_priority: bool,
+    ) -> Self {
+        let model = ConsistencyModel::new(desc.policy);
+        let order = if magnitude_priority { DrainOrder::Magnitude } else { DrainOrder::Fifo };
+        TableState {
+            model,
+            snapshot: TableStore::new(desc.row_kind, desc.row_width),
+            shard_clock: vec![0; num_shards as usize],
+            overlay: HashMap::new(),
+            egress: UpdateQueue::new(order),
+            pending_sum: HashMap::new(),
+            batch_mags: HashMap::new(),
+            inflight_pulls: HashMap::new(),
+            batcher: Batcher::new(origin, max_batch),
+            u_local: 0.0,
+            num_shards,
+            desc,
+        }
+    }
+
+    /// The effective freshness of a cached row: the max of the stored row
+    /// clock and the owning shard's broadcast floor.
+    pub fn effective_clock(&self, row: RowId) -> Clock {
+        let floor = self.shard_clock[self.desc.shard_of(row, self.num_shards).0 as usize];
+        let row_clock = self.snapshot.get(row).map_or(0, |sr| sr.clock);
+        row_clock.max(floor)
+    }
+
+    /// Does a read of `row` by a worker at `reader_clock` pass the clock
+    /// gate right now?
+    pub fn read_admissible(&self, row: RowId, reader_clock: Clock) -> bool {
+        self.effective_clock(row) >= self.model.required_read_clock(reader_clock)
+    }
+
+    /// Signed accumulated unsynchronized sum of a parameter (VAP
+    /// accounting).
+    pub fn pending_mass(&self, row: RowId, col: u32) -> f32 {
+        self.pending_sum.get(&(row, col)).copied().unwrap_or(0.0)
+    }
+
+    /// Does an `Inc` of `delta` on `(row, col)` pass the value gate?
+    pub fn write_admissible(&self, row: RowId, col: u32, delta: f32) -> bool {
+        !self.model.write_blocked(self.pending_mass(row, col), delta)
+    }
+
+    /// Record an `Inc` into the egress queue + VAP accounting. The caller
+    /// must have passed the value gate first.
+    pub fn apply_inc(&mut self, row: RowId, col: u32, delta: f32) {
+        if self.model.v_thr().is_some() {
+            *self.pending_sum.entry((row, col)).or_insert(0.0) += delta;
+        }
+        self.u_local = self.u_local.max(delta.abs());
+        self.egress.push(row, RowUpdate::single(col, delta));
+    }
+
+    /// Record a whole-row `Inc` (dense delta).
+    pub fn apply_inc_row(&mut self, row: RowId, deltas: &[f32]) {
+        if self.model.v_thr().is_some() {
+            for (c, d) in deltas.iter().enumerate() {
+                if *d != 0.0 {
+                    *self.pending_sum.entry((row, c as u32)).or_insert(0.0) += d;
+                }
+            }
+        }
+        for d in deltas {
+            self.u_local = self.u_local.max(d.abs());
+        }
+        self.egress.push(row, RowUpdate::Dense(deltas.to_vec()));
+    }
+
+    /// Compose the visible value of `(row, col)` for this process:
+    /// snapshot + sent overlay + unsent egress (read-my-writes).
+    pub fn read(&self, row: RowId, col: u32) -> f32 {
+        let mut v = self.snapshot.get(row).and_then(|sr| sr.data.get(col)).unwrap_or(0.0);
+        if let Some(q) = self.overlay.get(&self.desc.shard_of(row, self.num_shards)) {
+            for e in q {
+                for (r, u) in &e.updates {
+                    if *r == row {
+                        for (c, d) in u.iter_nonzero() {
+                            if c == col {
+                                v += d;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(u) = self.egress.get(row) {
+            for (c, d) in u.iter_nonzero() {
+                if c == col {
+                    v += d;
+                }
+            }
+        }
+        v
+    }
+
+    /// Compose the visible value of a whole row (dense).
+    pub fn read_row(&self, row: RowId) -> Vec<f32> {
+        let mut v = vec![0.0; self.desc.row_width as usize];
+        self.read_row_into(row, &mut v);
+        v
+    }
+
+    /// Allocation-free variant of [`TableState::read_row`]: composes the
+    /// row into `out` (must be `row_width` long). The LDA sampler calls
+    /// this once per token — the perf pass measured the per-call `Vec`
+    /// allocation at ~15% of the single-worker profile.
+    pub fn read_row_into(&self, row: RowId, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.desc.row_width as usize);
+        match self.snapshot.get(row) {
+            Some(sr) => match &sr.data {
+                crate::table::RowData::Dense(d) => out.copy_from_slice(d),
+                sparse => {
+                    out.iter_mut().for_each(|x| *x = 0.0);
+                    for (c, v) in sparse.to_dense(self.desc.row_width).iter().enumerate() {
+                        out[c] = *v;
+                    }
+                }
+            },
+            None => out.iter_mut().for_each(|x| *x = 0.0),
+        }
+        if let Some(q) = self.overlay.get(&self.desc.shard_of(row, self.num_shards)) {
+            for e in q {
+                for (r, u) in &e.updates {
+                    if *r == row {
+                        for (c, d) in u.iter_nonzero() {
+                            if (c as usize) < out.len() {
+                                out[c as usize] += d;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(u) = self.egress.get(row) {
+            for (c, d) in u.iter_nonzero() {
+                if (c as usize) < out.len() {
+                    out[c as usize] += d;
+                }
+            }
+        }
+    }
+
+    /// Drain up to `max_rows` egress rows into per-shard push batches;
+    /// records overlay entries + VAP batch masses. `clock` stamps the
+    /// batches (the lowest possible stamp of contained updates = current
+    /// proc min clock + 1). Returns `(shard, batch)` pairs ready to send.
+    pub fn make_push_batches(
+        &mut self,
+        max_rows: usize,
+        clock: Clock,
+    ) -> Vec<(ShardId, PushBatch)> {
+        let updates = self.egress.drain(max_rows);
+        if updates.is_empty() {
+            return Vec::new();
+        }
+        let batches = self.batcher.make_batches(&self.desc, self.num_shards, updates, clock);
+        let track_mass = self.model.v_thr().is_some();
+        for (shard, b) in &batches {
+            self.overlay
+                .entry(*shard)
+                .or_default()
+                .push_back(OverlayEntry { batch_id: b.batch_id, updates: b.updates.clone() });
+            if track_mass {
+                let mut masses = Vec::new();
+                for (row, u) in &b.updates {
+                    for (c, d) in u.iter_nonzero() {
+                        masses.push(((*row, c), d));
+                    }
+                }
+                self.batch_mags.insert(b.batch_id, masses);
+            }
+        }
+        batches
+    }
+
+    /// True when the egress queue holds unsent updates.
+    pub fn has_unsent(&self) -> bool {
+        !self.egress.is_empty()
+    }
+
+    /// Apply a server push. For foreign batches: apply deltas to the
+    /// snapshot. For the echo of an own batch: pop the matching overlay
+    /// entry and apply the deltas (net read value unchanged — the deltas
+    /// move from overlay to snapshot atomically under the caller's lock).
+    /// Touched rows' clocks rise to the push's `min_clock`.
+    pub fn apply_server_push(&mut self, own_proc: ProcId, push: &ServerPushBatch) {
+        if push.origin == own_proc {
+            // FIFO per shard link ⇒ echoes arrive in overlay order.
+            let shard = push
+                .updates
+                .first()
+                .map(|(r, _)| self.desc.shard_of(*r, self.num_shards));
+            if let Some(shard) = shard {
+                if let Some(q) = self.overlay.get_mut(&shard) {
+                    if let Some(front) = q.front() {
+                        debug_assert_eq!(
+                            front.batch_id, push.batch_id,
+                            "echo out of order on shard link"
+                        );
+                        if front.batch_id == push.batch_id {
+                            q.pop_front();
+                        }
+                    }
+                }
+            }
+        }
+        for (row, u) in &push.updates {
+            self.snapshot.apply(*row, u);
+            self.snapshot.bump_clock(*row, push.min_clock);
+        }
+    }
+
+    /// Install a pull reply (full-row snapshot).
+    pub fn apply_pull_reply(&mut self, row: RowId, data: RowData, clock: Clock) {
+        self.snapshot.install(row, data, clock);
+        if let Some(needed) = self.inflight_pulls.get(&row).copied() {
+            if clock >= needed {
+                self.inflight_pulls.remove(&row);
+            }
+        }
+    }
+
+    /// Raise a shard's freshness floor from a `MinClock` broadcast.
+    pub fn apply_min_clock(&mut self, shard: ShardId, clock: Clock) {
+        let s = &mut self.shard_clock[shard.0 as usize];
+        if clock > *s {
+            *s = clock;
+        }
+    }
+
+    /// Release a batch's mass on `VisibilityAck` (VAP). Returns true if
+    /// any mass was released (worth waking writers).
+    pub fn apply_visibility_ack(&mut self, batch_id: u64) -> bool {
+        match self.batch_mags.remove(&batch_id) {
+            Some(masses) => {
+                for (param, m) in masses {
+                    // The entry may be legitimately absent at zero (signed
+                    // cancellation) while this batch was still in flight —
+                    // the subtraction must happen regardless, or the
+                    // ledger leaks permanently.
+                    let e = self.pending_sum.entry(param).or_insert(0.0);
+                    *e -= m;
+                    if e.abs() <= 1e-12 {
+                        self.pending_sum.remove(&param);
+                    }
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Debug introspection: `(snapshot value, snapshot row clock, shard
+    /// floor, overlay contribution, egress contribution)` for one param.
+    #[doc(hidden)]
+    pub fn debug_param(&self, row: RowId, col: u32) -> (f32, Clock, Clock, f32, f32) {
+        let snap_v = self.snapshot.get(row).and_then(|sr| sr.data.get(col)).unwrap_or(0.0);
+        let snap_c = self.snapshot.get(row).map_or(0, |sr| sr.clock);
+        let floor = self.shard_clock[self.desc.shard_of(row, self.num_shards).0 as usize];
+        let mut overlay_v = 0.0;
+        if let Some(q) = self.overlay.get(&self.desc.shard_of(row, self.num_shards)) {
+            for e in q {
+                for (r, u) in &e.updates {
+                    if *r == row {
+                        for (c, d) in u.iter_nonzero() {
+                            if c == col {
+                                overlay_v += d;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let mut egress_v = 0.0;
+        if let Some(u) = self.egress.get(row) {
+            for (c, d) in u.iter_nonzero() {
+                if c == col {
+                    egress_v += d;
+                }
+            }
+        }
+        (snap_v, snap_c, floor, overlay_v, egress_v)
+    }
+
+    /// Snapshot-row count (diagnostics).
+    pub fn cached_rows(&self) -> usize {
+        self.snapshot.len()
+    }
+
+    /// Invariant check (debug harness): for every param,
+    /// `pending_sum == egress contribution + unacked batch contribution`.
+    /// Panics with `tag` on the first violation.
+    #[doc(hidden)]
+    pub fn assert_balance(&self, tag: &str) {
+        use std::collections::HashMap as Map;
+        let mut model: Map<(u64, u32), f32> = Map::new();
+        for (row, u) in self.egress.iter() {
+            for (c, d) in u.iter_nonzero() {
+                *model.entry((row.0, c)).or_insert(0.0) += d;
+            }
+        }
+        for masses in self.batch_mags.values() {
+            for ((row, c), m) in masses {
+                *model.entry((row.0, *c)).or_insert(0.0) += m;
+            }
+        }
+        for (&(row, col), &v) in &self.pending_sum {
+            let m = model.get(&(row.0, col)).copied().unwrap_or(0.0);
+            assert!(
+                (v - m).abs() < 1e-3,
+                "[{tag}] imbalance at r{} c{col}: pending {v} vs model {m}",
+                row.0
+            );
+        }
+        for (&(row, col), &m) in &model {
+            let v = self.pending_sum.get(&(RowId(row), col)).copied().unwrap_or(0.0);
+            assert!(
+                (v - m).abs() < 1e-3,
+                "[{tag}] imbalance at r{row} c{col}: pending {v} vs model {m}"
+            );
+        }
+    }
+
+    /// Total |pending| mass across all params (diagnostics: must return
+    /// to 0 when the system quiesces).
+    pub fn total_pending(&self) -> f64 {
+        self.pending_sum.values().map(|v| v.abs() as f64).sum()
+    }
+
+    /// Number of sent batches awaiting a VisibilityAck (diagnostics).
+    pub fn outstanding_batches(&self) -> usize {
+        self.batch_mags.len()
+    }
+
+    /// Overlay depth across shards (diagnostics: should stay small).
+    pub fn overlay_depth(&self) -> usize {
+        self.overlay.values().map(|q| q.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PolicyConfig;
+    use crate::table::{RowKind, TableId};
+
+    fn state(policy: PolicyConfig) -> TableState {
+        TableState::new(
+            TableDesc {
+                id: TableId(0),
+                num_rows: 32,
+                row_width: 4,
+                row_kind: RowKind::Dense,
+                policy,
+            },
+            ProcId(0),
+            2,
+            1024,
+            true,
+        )
+    }
+
+    fn echo(st: &TableState, batch: &PushBatch, min_clock: Clock) -> ServerPushBatch {
+        let _ = st;
+        ServerPushBatch {
+            table: batch.table,
+            origin: batch.origin,
+            batch_id: batch.batch_id,
+            updates: batch.updates.clone(),
+            min_clock,
+        }
+    }
+
+    #[test]
+    fn read_my_writes_through_all_three_layers() {
+        let mut st = state(PolicyConfig::Cap { staleness: 1 });
+        // unsent egress
+        st.apply_inc(RowId(3), 1, 2.0);
+        assert_eq!(st.read(RowId(3), 1), 2.0);
+        // sent (overlay)
+        let batches = st.make_push_batches(usize::MAX, 1);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(st.read(RowId(3), 1), 2.0, "value survives the send");
+        assert_eq!(st.overlay_depth(), 1);
+        // echoed (snapshot)
+        let (_, b) = &batches[0];
+        let e = echo(&st, b, 0);
+        st.apply_server_push(ProcId(0), &e);
+        assert_eq!(st.overlay_depth(), 0);
+        assert_eq!(st.read(RowId(3), 1), 2.0, "value survives the echo");
+    }
+
+    #[test]
+    fn foreign_push_adds_to_snapshot() {
+        let mut st = state(PolicyConfig::Cap { staleness: 1 });
+        st.apply_inc(RowId(3), 1, 2.0);
+        let push = ServerPushBatch {
+            table: TableId(0),
+            origin: ProcId(9),
+            batch_id: 0,
+            updates: vec![(RowId(3), RowUpdate::single(1, 5.0))],
+            min_clock: 2,
+        };
+        st.apply_server_push(ProcId(0), &push);
+        assert_eq!(st.read(RowId(3), 1), 7.0);
+        assert_eq!(st.effective_clock(RowId(3)), 2);
+    }
+
+    #[test]
+    fn clock_gate_uses_shard_floor() {
+        let mut st = state(PolicyConfig::Ssp { staleness: 1 });
+        let row = RowId(5);
+        // reader at clock 4 requires freshness 2
+        assert!(!st.read_admissible(row, 4));
+        let shard = st.desc.shard_of(row, 2);
+        st.apply_min_clock(shard, 2);
+        assert!(st.read_admissible(row, 4));
+        // the OTHER shard's floor does not help other rows
+        let other = ShardId(1 - shard.0);
+        let mut st2 = state(PolicyConfig::Ssp { staleness: 1 });
+        st2.apply_min_clock(other, 2);
+        assert!(!st2.read_admissible(row, 4));
+    }
+
+    #[test]
+    fn vap_accounting_lifecycle() {
+        let mut st = state(PolicyConfig::Vap { v_thr: 8.0, strong: false });
+        for d in [1.0f32, 3.0, 2.0, 1.0, 1.0] {
+            assert!(st.write_admissible(RowId(0), 0, d));
+            st.apply_inc(RowId(0), 0, d);
+        }
+        assert_eq!(st.pending_mass(RowId(0), 0), 8.0);
+        // Fig 1: next update of 2.0 is blocked
+        assert!(!st.write_admissible(RowId(0), 0, 2.0));
+        // a different parameter is unaffected
+        assert!(st.write_admissible(RowId(0), 1, 2.0));
+
+        // ship and release
+        let batches = st.make_push_batches(usize::MAX, 1);
+        let ids: Vec<u64> = batches.iter().map(|(_, b)| b.batch_id).collect();
+        assert_eq!(st.pending_mass(RowId(0), 0), 8.0, "sent ≠ synchronized");
+        for id in ids {
+            assert!(st.apply_visibility_ack(id));
+        }
+        assert_eq!(st.pending_mass(RowId(0), 0), 0.0);
+        assert!(st.write_admissible(RowId(0), 0, 2.0));
+    }
+
+    #[test]
+    fn visibility_ack_unknown_batch_is_noop() {
+        let mut st = state(PolicyConfig::Vap { v_thr: 8.0, strong: false });
+        assert!(!st.apply_visibility_ack(42));
+    }
+
+    #[test]
+    fn pull_reply_clears_matching_inflight() {
+        let mut st = state(PolicyConfig::Ssp { staleness: 0 });
+        st.inflight_pulls.insert(RowId(1), 5);
+        st.apply_pull_reply(RowId(1), RowData::Dense(vec![1.0; 4]), 3);
+        assert!(st.inflight_pulls.contains_key(&RowId(1)), "reply too stale to clear");
+        st.apply_pull_reply(RowId(1), RowData::Dense(vec![2.0; 4]), 5);
+        assert!(!st.inflight_pulls.contains_key(&RowId(1)));
+        assert_eq!(st.read(RowId(1), 0), 2.0);
+        assert_eq!(st.effective_clock(RowId(1)), 5);
+    }
+
+    #[test]
+    fn read_row_composes_all_layers() {
+        let mut st = state(PolicyConfig::Cap { staleness: 1 });
+        let push = ServerPushBatch {
+            table: TableId(0),
+            origin: ProcId(9),
+            batch_id: 0,
+            updates: vec![(RowId(2), RowUpdate::Dense(vec![1.0, 1.0, 1.0, 1.0]))],
+            min_clock: 0,
+        };
+        st.apply_server_push(ProcId(0), &push);
+        st.apply_inc(RowId(2), 0, 0.5);
+        st.make_push_batches(usize::MAX, 1); // now in overlay
+        st.apply_inc(RowId(2), 3, -1.0); // in egress
+        assert_eq!(st.read_row(RowId(2)), vec![1.5, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn non_vap_tables_skip_mass_accounting() {
+        let mut st = state(PolicyConfig::Cap { staleness: 1 });
+        st.apply_inc(RowId(0), 0, 100.0);
+        assert_eq!(st.pending_mass(RowId(0), 0), 0.0);
+        assert!(st.write_admissible(RowId(0), 0, f32::MAX));
+    }
+}

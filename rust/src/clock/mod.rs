@@ -1,0 +1,199 @@
+//! Vector clocks (paper §4.2).
+//!
+//! Progress of a worker thread is an integer *clock*; a client process's
+//! progress is the **minimum** over its threads' clocks, and the global
+//! progress the server reasons about is the minimum over process clocks.
+//! The paper tracks this with a two-level vector-clock scheme: each client
+//! library keeps a vector clock over its threads, and each server keeps a
+//! vector clock over client processes. [`VectorClock`] implements both
+//! levels; it is generic over the entity id.
+
+use std::collections::BTreeMap;
+use std::hash::Hash;
+
+use crate::types::Clock;
+
+/// A vector clock over a fixed set of entities (threads or processes).
+///
+/// Entities are registered up front; [`VectorClock::tick`] advances one
+/// entity, and [`VectorClock::min_clock`] gives the frontier used by the
+/// clock-bounded consistency models. The structure also reports *when the
+/// minimum advances*, which is the event that unblocks CAP/SSP waiters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VectorClock<K: Ord + Eq + Hash + Copy> {
+    clocks: BTreeMap<K, Clock>,
+    /// Cached minimum over `clocks` (recomputed on tick when the ticking
+    /// entity was at the minimum).
+    min: Clock,
+}
+
+impl<K: Ord + Eq + Hash + Copy> VectorClock<K> {
+    /// Create a vector clock with every entity at clock 0.
+    pub fn new(entities: impl IntoIterator<Item = K>) -> Self {
+        let clocks: BTreeMap<K, Clock> = entities.into_iter().map(|e| (e, 0)).collect();
+        VectorClock { clocks, min: 0 }
+    }
+
+    /// Create an empty vector clock; entities may be added with
+    /// [`VectorClock::register`].
+    pub fn empty() -> Self {
+        VectorClock { clocks: BTreeMap::new(), min: 0 }
+    }
+
+    /// Register a new entity at clock 0 (or at `at` if provided later
+    /// entities join a warm system). Returns `false` if already present.
+    pub fn register(&mut self, entity: K) -> bool {
+        if self.clocks.contains_key(&entity) {
+            return false;
+        }
+        self.clocks.insert(entity, 0);
+        self.min = 0;
+        true
+    }
+
+    /// Number of tracked entities.
+    pub fn len(&self) -> usize {
+        self.clocks.len()
+    }
+
+    /// True when no entity is registered.
+    pub fn is_empty(&self) -> bool {
+        self.clocks.is_empty()
+    }
+
+    /// The clock of one entity (None if unregistered).
+    pub fn get(&self, entity: K) -> Option<Clock> {
+        self.clocks.get(&entity).copied()
+    }
+
+    /// Advance `entity` by one. Returns `Some(new_min)` if the *minimum*
+    /// advanced (the event CAP/SSP waiters care about), else `None`.
+    ///
+    /// Panics if the entity is unregistered — that is always a topology
+    /// bug, not a runtime condition.
+    pub fn tick(&mut self, entity: K) -> Option<Clock> {
+        let c = self
+            .clocks
+            .get_mut(&entity)
+            .unwrap_or_else(|| panic!("tick on unregistered vector-clock entity"));
+        let was = *c;
+        *c = was + 1;
+        if was == self.min {
+            let new_min = self.clocks.values().copied().min().unwrap_or(0);
+            if new_min > self.min {
+                self.min = new_min;
+                return Some(new_min);
+            }
+        }
+        None
+    }
+
+    /// Set `entity` to `clock` (used by servers applying client clock
+    /// notifications, which may batch several ticks). Clocks never move
+    /// backwards; a stale notification is ignored. Returns `Some(new_min)`
+    /// when the minimum advanced.
+    pub fn advance_to(&mut self, entity: K, clock: Clock) -> Option<Clock> {
+        let c = self
+            .clocks
+            .get_mut(&entity)
+            .unwrap_or_else(|| panic!("advance_to on unregistered vector-clock entity"));
+        if clock <= *c {
+            return None;
+        }
+        let was = *c;
+        *c = clock;
+        if was == self.min {
+            let new_min = self.clocks.values().copied().min().unwrap_or(0);
+            if new_min > self.min {
+                self.min = new_min;
+                return Some(new_min);
+            }
+        }
+        None
+    }
+
+    /// The minimum clock over all entities — "the progress of the process"
+    /// (client-side) or of the whole system (server-side).
+    pub fn min_clock(&self) -> Clock {
+        self.min
+    }
+
+    /// The maximum clock over all entities (the fastest worker).
+    pub fn max_clock(&self) -> Clock {
+        self.clocks.values().copied().max().unwrap_or(0)
+    }
+
+    /// Spread between the fastest and the slowest entity — the quantity the
+    /// clock-bounded models keep `≤ s`.
+    pub fn skew(&self) -> Clock {
+        self.max_clock() - self.min
+    }
+
+    /// Iterate `(entity, clock)` pairs in entity order.
+    pub fn iter(&self) -> impl Iterator<Item = (K, Clock)> + '_ {
+        self.clocks.iter().map(|(k, v)| (*k, *v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn min_advances_only_when_slowest_moves() {
+        let mut vc = VectorClock::new([0u32, 1, 2]);
+        assert_eq!(vc.min_clock(), 0);
+        assert_eq!(vc.tick(0), None); // 1,0,0
+        assert_eq!(vc.tick(1), None); // 1,1,0
+        assert_eq!(vc.tick(2), Some(1)); // 1,1,1 -> min advanced
+        assert_eq!(vc.min_clock(), 1);
+        assert_eq!(vc.skew(), 0);
+    }
+
+    #[test]
+    fn skew_tracks_fast_minus_slow() {
+        let mut vc = VectorClock::new([0u32, 1]);
+        for _ in 0..5 {
+            vc.tick(0);
+        }
+        assert_eq!(vc.skew(), 5);
+        assert_eq!(vc.max_clock(), 5);
+        assert_eq!(vc.min_clock(), 0);
+    }
+
+    #[test]
+    fn advance_to_ignores_stale_and_batches() {
+        let mut vc = VectorClock::new([10u32, 20]);
+        assert_eq!(vc.advance_to(10, 3), None); // 3,0
+        assert_eq!(vc.advance_to(20, 2), Some(2)); // 3,2 -> min moved 0->2
+        assert_eq!(vc.advance_to(20, 1), None); // stale, ignored
+        assert_eq!(vc.get(20), Some(2));
+        assert_eq!(vc.min_clock(), 2);
+    }
+
+    #[test]
+    fn register_resets_min() {
+        let mut vc = VectorClock::new([0u32]);
+        vc.tick(0);
+        vc.tick(0);
+        assert_eq!(vc.min_clock(), 2);
+        assert!(vc.register(1)); // new entity at 0 drags min down
+        assert_eq!(vc.min_clock(), 0);
+        assert!(!vc.register(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "unregistered")]
+    fn tick_unregistered_panics() {
+        let mut vc: VectorClock<u32> = VectorClock::empty();
+        vc.tick(7);
+    }
+
+    #[test]
+    fn empty_clock_mins_are_zero() {
+        let vc: VectorClock<u32> = VectorClock::empty();
+        assert_eq!(vc.min_clock(), 0);
+        assert_eq!(vc.max_clock(), 0);
+        assert!(vc.is_empty());
+    }
+}

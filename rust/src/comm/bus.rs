@@ -1,0 +1,468 @@
+//! The in-process network: endpoints, delayed FIFO delivery, bandwidth.
+//!
+//! Design:
+//! * every node registers an [`Endpoint`] (an mpsc receiver);
+//! * senders go through a shared [`NetSender`];
+//! * with an **ideal** network profile (zero latency/bandwidth) messages are
+//!   forwarded directly to the destination channel — the fast path used by
+//!   most tests and by throughput-oriented benches;
+//! * with a **simulated** profile, messages are injected into a single
+//!   dispatcher thread that holds a min-heap of `(deliver_at, seq, msg)` and
+//!   releases each message at its due time. Per-link FIFO is enforced by
+//!   never scheduling a message earlier than the link's previous one, even
+//!   under jitter — FIFO consistency (paper §2) depends on it.
+//!
+//! Bandwidth is modeled per directed link: a message of `b` bytes occupies
+//! the link for `b / bandwidth` seconds, so a backlog of large update
+//! batches delays everything behind it (the congestion regime that makes
+//! best-effort systems diverge, paper §1).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::NetConfig;
+use crate::error::{Error, Result};
+use crate::metrics::NetMetrics;
+use crate::types::NodeId;
+use crate::util::Rng64;
+
+use super::msg::Msg;
+
+/// Receiving side of a node's mailbox.
+pub struct Endpoint {
+    /// This endpoint's address.
+    pub node: NodeId,
+    rx: Receiver<Msg>,
+}
+
+impl Endpoint {
+    /// Block until the next message arrives.
+    pub fn recv(&self) -> Result<Msg> {
+        self.rx.recv().map_err(|_| Error::Disconnected(self.node))
+    }
+
+    /// Block with a timeout; `Ok(None)` on timeout.
+    pub fn recv_timeout(&self, d: Duration) -> Result<Option<Msg>> {
+        match self.rx.recv_timeout(d) {
+            Ok(m) => Ok(Some(m)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(Error::Disconnected(self.node)),
+        }
+    }
+
+    /// Non-blocking poll.
+    pub fn try_recv(&self) -> Option<Msg> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// Per-directed-link state for FIFO + bandwidth accounting.
+#[derive(Default)]
+struct LinkState {
+    /// The link is serialized: busy until this instant.
+    busy_until: Option<Instant>,
+    /// Monotone delivery floor (FIFO even under jitter).
+    last_delivery: Option<Instant>,
+}
+
+/// Heap entry ordered by delivery time then injection sequence.
+struct Scheduled {
+    at: Instant,
+    seq: u64,
+    msg: Msg,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+struct Shared {
+    mailboxes: Mutex<HashMap<NodeId, Sender<Msg>>>,
+    links: Mutex<HashMap<(NodeId, NodeId), LinkState>>,
+    /// Jitter RNG (under the links lock).
+    jitter_rng: Mutex<Rng64>,
+    net: NetConfig,
+    metrics: Arc<NetMetrics>,
+    seq: AtomicU64,
+    /// Whether this network delays messages (dispatcher active).
+    delayed: bool,
+    /// Injection channel into the dispatcher (None on the ideal fast path
+    /// or after shutdown). Behind a mutex so `Network::drop` can sever it —
+    /// the dispatcher exits when every sender is gone.
+    inject: Mutex<Option<Sender<Scheduled>>>,
+}
+
+/// Cloneable sending handle.
+#[derive(Clone)]
+pub struct NetSender {
+    shared: Arc<Shared>,
+}
+
+impl NetSender {
+    /// Send a message; delivery obeys the network profile. Returns
+    /// `Err(Disconnected)` only if the destination endpoint was dropped
+    /// (normal during shutdown).
+    pub fn send(&self, msg: Msg) -> Result<()> {
+        let bytes = msg.payload.wire_bytes();
+        self.shared.metrics.record_send(msg.payload.kind(), bytes);
+
+        if !self.shared.delayed {
+            // Ideal network: direct forward. The enqueue happens UNDER the
+            // links mutex: std mpsc does not order messages from different
+            // producer threads even when their sends are
+            // happens-before-related, and the consistency protocol depends
+            // on per-link FIFO (a ClockNotify must never overtake a batch
+            // its promise covers). Serializing the enqueue restores it.
+            let tx = {
+                let boxes = self.shared.mailboxes.lock().unwrap();
+                boxes.get(&msg.dst).cloned()
+            };
+            return match tx {
+                Some(tx) => {
+                    let dst = msg.dst;
+                    let _order = self.shared.links.lock().unwrap();
+                    tx.send(msg).map_err(|_| Error::Disconnected(dst))
+                }
+                None => Err(Error::Disconnected(msg.dst)),
+            };
+        }
+        {
+            {
+                let now = Instant::now();
+                let (at, seq) = {
+                    let mut links = self.shared.links.lock().unwrap();
+                    let link = links.entry((msg.src, msg.dst)).or_default();
+                    // Serialize on the link for tx-time (bandwidth).
+                    let start = link.busy_until.map_or(now, |b| b.max(now));
+                    let done = start + self.shared.net.tx_time(bytes);
+                    link.busy_until = Some(done);
+                    // Propagation latency + jitter.
+                    let jitter = if self.shared.net.jitter_us > 0 {
+                        self.shared
+                            .jitter_rng
+                            .lock()
+                            .unwrap()
+                            .range_u64(0, self.shared.net.jitter_us)
+                    } else {
+                        0
+                    };
+                    let mut at = done
+                        + Duration::from_micros(self.shared.net.latency_us)
+                        + Duration::from_micros(jitter);
+                    // FIFO floor.
+                    if let Some(last) = link.last_delivery {
+                        if at < last {
+                            at = last;
+                        }
+                    }
+                    link.last_delivery = Some(at);
+                    // seq assigned under the links lock so per-link (at,
+                    // seq) is monotone even across producer threads.
+                    (at, self.shared.seq.fetch_add(1, Ordering::Relaxed))
+                };
+                let inject = self.shared.inject.lock().unwrap();
+                match inject.as_ref() {
+                    Some(tx) => tx
+                        .send(Scheduled { at, seq, msg })
+                        .map_err(|_| Error::Other("network dispatcher stopped".into())),
+                    None => Err(Error::Other("network dispatcher stopped".into())),
+                }
+            }
+        }
+    }
+
+    /// Network metrics handle (messages/bytes by kind).
+    pub fn metrics(&self) -> Arc<NetMetrics> {
+        self.shared.metrics.clone()
+    }
+}
+
+/// The simulated network fabric. Create once per system; register every
+/// node before spawning its thread.
+pub struct Network {
+    shared: Arc<Shared>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    stop_tx: Option<Sender<Scheduled>>,
+}
+
+impl Network {
+    /// Build a network with the given profile. A dispatcher thread is
+    /// spawned only when the profile actually delays messages.
+    pub fn new(net: NetConfig) -> Self {
+        let ideal = net.latency_us == 0 && net.bandwidth_bps == 0 && net.jitter_us == 0;
+        let metrics = Arc::new(NetMetrics::default());
+        let jitter_rng = Mutex::new(Rng64::seed_from_u64(net.seed));
+
+        if ideal {
+            let shared = Arc::new(Shared {
+                mailboxes: Mutex::new(HashMap::new()),
+                links: Mutex::new(HashMap::new()),
+                jitter_rng,
+                net,
+                metrics,
+                seq: AtomicU64::new(0),
+                delayed: false,
+                inject: Mutex::new(None),
+            });
+            return Network { shared, dispatcher: None, stop_tx: None };
+        }
+
+        let (inject_tx, inject_rx) = channel::<Scheduled>();
+        let shared = Arc::new(Shared {
+            mailboxes: Mutex::new(HashMap::new()),
+            links: Mutex::new(HashMap::new()),
+            jitter_rng,
+            net,
+            metrics,
+            seq: AtomicU64::new(0),
+            delayed: true,
+            inject: Mutex::new(Some(inject_tx)),
+        });
+
+        let disp_shared = shared.clone();
+        let dispatcher = std::thread::Builder::new()
+            .name("net-dispatch".into())
+            .spawn(move || dispatcher_loop(disp_shared, inject_rx))
+            .expect("spawn net dispatcher");
+
+        Network { shared, dispatcher: Some(dispatcher), stop_tx: None }
+    }
+
+    /// Register a node; returns its mailbox endpoint. Panics if the node is
+    /// already registered (topology bug).
+    pub fn register(&self, node: NodeId) -> Endpoint {
+        let (tx, rx) = channel();
+        let mut boxes = self.shared.mailboxes.lock().unwrap();
+        let prev = boxes.insert(node, tx);
+        assert!(prev.is_none(), "node {node} registered twice");
+        Endpoint { node, rx }
+    }
+
+    /// Remove a node's mailbox (dropping it closes the endpoint).
+    pub fn deregister(&self, node: NodeId) {
+        self.shared.mailboxes.lock().unwrap().remove(&node);
+    }
+
+    /// A cloneable sender handle.
+    pub fn sender(&self) -> NetSender {
+        NetSender { shared: self.shared.clone() }
+    }
+
+    /// Network metrics (messages/bytes by kind).
+    pub fn metrics(&self) -> Arc<NetMetrics> {
+        self.shared.metrics.clone()
+    }
+}
+
+impl Drop for Network {
+    fn drop(&mut self) {
+        // Sever the injection channel: once the (sole) sender is gone the
+        // dispatcher drains its heap and exits; then it is safe to join.
+        self.stop_tx.take();
+        *self.shared.inject.lock().unwrap() = None;
+        self.shared.mailboxes.lock().unwrap().clear();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Scheduled>) {
+    let mut heap: BinaryHeap<Reverse<Scheduled>> = BinaryHeap::new();
+    let mut disconnected = false;
+    loop {
+        // Wait for either the next due message or a new injection.
+        let next_due = heap.peek().map(|Reverse(s)| s.at);
+        match next_due {
+            None => {
+                if disconnected {
+                    break;
+                }
+                match rx.recv() {
+                    Ok(s) => heap.push(Reverse(s)),
+                    Err(_) => break, // all senders gone and heap empty
+                }
+            }
+            Some(at) => {
+                let now = Instant::now();
+                if at > now && !disconnected {
+                    match rx.recv_timeout(at - now) {
+                        Ok(s) => heap.push(Reverse(s)),
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => disconnected = true,
+                    }
+                } else if at > now {
+                    std::thread::sleep((at - now).min(Duration::from_millis(5)));
+                }
+            }
+        }
+        // Deliver everything due.
+        let now = Instant::now();
+        while let Some(Reverse(s)) = heap.peek() {
+            if s.at > now {
+                break;
+            }
+            let Reverse(s) = heap.pop().unwrap();
+            let tx = {
+                let boxes = shared.mailboxes.lock().unwrap();
+                boxes.get(&s.msg.dst).cloned()
+            };
+            if let Some(tx) = tx {
+                shared.metrics.record_deliver(s.msg.payload.kind());
+                let _ = tx.send(s.msg); // dst may have shut down; fine
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::msg::Payload;
+    use crate::types::{NodeId, ProcId, ShardId};
+
+    fn msg(src: NodeId, dst: NodeId, clock: u32) -> Msg {
+        Msg { src, dst, payload: Payload::MinClock { shard: ShardId(0), clock } }
+    }
+
+    #[test]
+    fn ideal_network_direct_delivery() {
+        let net = Network::new(NetConfig::default());
+        let a = NodeId::Client(ProcId(0));
+        let b = NodeId::Server(ShardId(0));
+        let ep = net.register(b);
+        let _epa = net.register(a);
+        let tx = net.sender();
+        for i in 0..100 {
+            tx.send(msg(a, b, i)).unwrap();
+        }
+        for i in 0..100 {
+            match ep.recv().unwrap().payload {
+                Payload::MinClock { clock, .. } => assert_eq!(clock, i),
+                _ => panic!("wrong payload"),
+            }
+        }
+    }
+
+    #[test]
+    fn send_to_unregistered_is_disconnected() {
+        let net = Network::new(NetConfig::default());
+        let a = NodeId::Client(ProcId(0));
+        let b = NodeId::Server(ShardId(9));
+        let _epa = net.register(a);
+        let tx = net.sender();
+        assert!(matches!(tx.send(msg(a, b, 0)), Err(Error::Disconnected(_))));
+    }
+
+    #[test]
+    fn delayed_network_preserves_fifo_per_link() {
+        let net = Network::new(NetConfig {
+            latency_us: 200,
+            bandwidth_bps: 0,
+            jitter_us: 150, // jitter large vs latency: would reorder w/o floor
+            seed: 42,
+        });
+        let a = NodeId::Client(ProcId(0));
+        let b = NodeId::Server(ShardId(0));
+        let ep = net.register(b);
+        let _epa = net.register(a);
+        let tx = net.sender();
+        for i in 0..200 {
+            tx.send(msg(a, b, i)).unwrap();
+        }
+        for i in 0..200 {
+            let m = ep.recv_timeout(Duration::from_secs(5)).unwrap().expect("msg");
+            match m.payload {
+                Payload::MinClock { clock, .. } => assert_eq!(clock, i, "FIFO violated"),
+                _ => panic!("wrong payload"),
+            }
+        }
+    }
+
+    #[test]
+    fn latency_actually_delays() {
+        let net = Network::new(NetConfig {
+            latency_us: 20_000, // 20 ms
+            bandwidth_bps: 0,
+            jitter_us: 0,
+            seed: 0,
+        });
+        let a = NodeId::Client(ProcId(0));
+        let b = NodeId::Server(ShardId(0));
+        let ep = net.register(b);
+        let _epa = net.register(a);
+        let tx = net.sender();
+        let t0 = Instant::now();
+        tx.send(msg(a, b, 0)).unwrap();
+        let _ = ep.recv_timeout(Duration::from_secs(5)).unwrap().expect("msg");
+        let dt = t0.elapsed();
+        assert!(dt >= Duration::from_millis(18), "arrived too early: {dt:?}");
+    }
+
+    #[test]
+    fn bandwidth_serializes_large_messages() {
+        // 1 MB/s; two 100 KB messages need ≥ ~200 ms total.
+        let net = Network::new(NetConfig {
+            latency_us: 0,
+            bandwidth_bps: 1_000_000,
+            jitter_us: 0,
+            seed: 0,
+        });
+        let a = NodeId::Client(ProcId(0));
+        let b = NodeId::Server(ShardId(0));
+        let ep = net.register(b);
+        let _epa = net.register(a);
+        let tx = net.sender();
+        let big = Msg {
+            src: a,
+            dst: b,
+            payload: Payload::PullReply {
+                table: crate::table::TableId(0),
+                row: crate::table::RowId(0),
+                data: crate::table::RowData::Dense(vec![0.0; 25_000]), // 100 KB
+                clock: 0,
+                worker: crate::types::WorkerId(0),
+            },
+        };
+        let t0 = Instant::now();
+        tx.send(big.clone()).unwrap();
+        tx.send(big).unwrap();
+        for _ in 0..2 {
+            ep.recv_timeout(Duration::from_secs(5)).unwrap().expect("msg");
+        }
+        let dt = t0.elapsed();
+        assert!(dt >= Duration::from_millis(150), "bandwidth not enforced: {dt:?}");
+    }
+
+    #[test]
+    fn metrics_count_sends() {
+        let net = Network::new(NetConfig::default());
+        let a = NodeId::Client(ProcId(0));
+        let b = NodeId::Server(ShardId(0));
+        let _ep = net.register(b);
+        let _epa = net.register(a);
+        let tx = net.sender();
+        for i in 0..7 {
+            tx.send(msg(a, b, i)).unwrap();
+        }
+        assert_eq!(net.metrics().sends("min_clock"), 7);
+        assert!(net.metrics().bytes_sent() > 0);
+    }
+}

@@ -1,0 +1,28 @@
+//! Communication substrate.
+//!
+//! The paper ran Petuum PS over ZeroMQ on an 8-node 40 GbE cluster. This
+//! reproduction's "network" is an in-process message bus ([`bus::Network`])
+//! whose links have configurable latency, bandwidth and jitter
+//! ([`crate::config::NetConfig`]) and which preserves per-link FIFO order —
+//! the property the paper's FIFO-consistency guarantee rests on (§2, citing
+//! PRAM [Lipton & Sandberg]). Server shards and client processes are
+//! threads; a slow link or a saturated one produces exactly the delayed /
+//! backlogged visibility the bounded-asynchronous models must tolerate.
+//!
+//! Sub-modules:
+//! * [`msg`] — wire message types (client push/pull, server push, acks).
+//! * [`bus`] — the network itself: endpoints, delayed delivery, FIFO links.
+//! * [`batcher`] — update batching (paper §4.2 "client and server batch
+//!   messages to achieve high throughput").
+//! * [`priority`] — magnitude-priority scheduling of outbound updates
+//!   (paper §4.2 "we by default prioritize updates with larger magnitude").
+
+pub mod batcher;
+pub mod bus;
+pub mod msg;
+pub mod priority;
+
+pub use batcher::Batcher;
+pub use bus::{Endpoint, NetSender, Network};
+pub use msg::{Msg, Payload, PushBatch, ServerPushBatch};
+pub use priority::UpdateQueue;

@@ -1,0 +1,218 @@
+//! Wire message types.
+//!
+//! Petuum PS uses three kinds of network communication (paper §4.3):
+//! **Client Push** (client sends batched updates to a server), **Client
+//! Pull** (client fetches a row from a server) and **Server Push** (server
+//! forwards batched updates to the clients caching the affected rows).
+//! On top of those, the bounded-asynchronous models need acknowledgement
+//! traffic so the system can decide when an update has become *visible to
+//! all workers* (the event that unblocks VAP writers): [`Payload::PushAck`]
+//! and [`Payload::VisibilityAck`]. Clock notifications drive the server's
+//! process vector clock.
+
+
+use crate::table::{RowData, RowId, RowUpdate, TableId};
+use crate::types::{Clock, NodeId, ProcId, ShardId, WorkerId};
+
+/// A batch of updates pushed from a client process to the owning shard.
+///
+/// The batch is the unit of visibility tracking: the origin client assigns
+/// a process-unique `batch_id`; once every *other* client process has acked
+/// the corresponding server push, the server reports the batch globally
+/// visible back to the origin.
+#[derive(Debug, Clone)]
+pub struct PushBatch {
+    /// Table the updates belong to.
+    pub table: TableId,
+    /// Originating client process.
+    pub origin: ProcId,
+    /// Process-unique, monotonically increasing batch id (FIFO per origin).
+    pub batch_id: u64,
+    /// Row-granular deltas, pre-aggregated per row by the batcher.
+    pub updates: Vec<(RowId, RowUpdate)>,
+    /// Clock timestamp of the newest update in the batch (updates generated
+    /// in `(c-1, c]` are stamped `c`, paper §2.1).
+    pub clock: Clock,
+}
+
+impl PushBatch {
+    /// Approximate wire size (drives the bandwidth simulation).
+    pub fn wire_bytes(&self) -> usize {
+        32 + self.updates.iter().map(|(_, u)| 12 + u.wire_bytes()).sum::<usize>()
+    }
+}
+
+/// A batch of (foreign) updates pushed from a server shard to a caching
+/// client process, so its process cache stays fresh without polling.
+#[derive(Debug, Clone)]
+pub struct ServerPushBatch {
+    /// Table the updates belong to.
+    pub table: TableId,
+    /// The process that originally produced the updates.
+    pub origin: ProcId,
+    /// The origin's batch id (for the receiver's ack).
+    pub batch_id: u64,
+    /// Row deltas to apply to the process cache.
+    pub updates: Vec<(RowId, RowUpdate)>,
+    /// The shard's min process clock at forward time; receiving caches may
+    /// raise row freshness to this value.
+    pub min_clock: Clock,
+}
+
+impl ServerPushBatch {
+    /// Approximate wire size.
+    pub fn wire_bytes(&self) -> usize {
+        32 + self.updates.iter().map(|(_, u)| 12 + u.wire_bytes()).sum::<usize>()
+    }
+}
+
+/// Every message body that can cross the (simulated) network.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// Client → server: batched updates (Client Push).
+    PushUpdates(PushBatch),
+    /// Client → server: fetch a row, blocking server-side until the shard's
+    /// min process clock reaches `needed_clock` (Client Pull). `worker` is
+    /// echoed back so the client library can wake the right thread.
+    PullRow {
+        /// Table to read from.
+        table: TableId,
+        /// Row to fetch.
+        row: RowId,
+        /// Reply may be deferred until the shard min clock ≥ this.
+        needed_clock: Clock,
+        /// Requesting worker (echoed in the reply).
+        worker: WorkerId,
+    },
+    /// Server → client: full-row reply to a pull.
+    PullReply {
+        /// Table the row belongs to.
+        table: TableId,
+        /// The row id.
+        row: RowId,
+        /// Row value snapshot.
+        data: RowData,
+        /// Freshness: shard min process clock when the snapshot was taken.
+        clock: Clock,
+        /// The worker that asked.
+        worker: WorkerId,
+    },
+    /// Client → every server shard: this process's min thread clock moved.
+    ClockNotify {
+        /// Reporting process.
+        proc: ProcId,
+        /// New min clock over the process's worker threads.
+        clock: Clock,
+    },
+    /// Server → caching client: forwarded foreign updates (Server Push).
+    ServerPush(ServerPushBatch),
+    /// Client → server: ack of a [`Payload::ServerPush`] — the receiving
+    /// process has applied origin's batch to its process cache.
+    PushAck {
+        /// Table concerned.
+        table: TableId,
+        /// Origin process of the acked batch.
+        origin: ProcId,
+        /// The acked batch id.
+        batch_id: u64,
+        /// The acking process.
+        by: ProcId,
+    },
+    /// Server → origin client: the batch is now visible to all processes.
+    /// This is the event that releases VAP-blocked writers.
+    VisibilityAck {
+        /// Table concerned.
+        table: TableId,
+        /// The now-globally-visible batch.
+        batch_id: u64,
+    },
+    /// Server → all clients: the shard's min process clock advanced. Client
+    /// caches bump freshness of rows owned by that shard and wake
+    /// CAP/SSP-blocked readers.
+    MinClock {
+        /// Reporting shard.
+        shard: ShardId,
+        /// New min process clock on that shard.
+        clock: Clock,
+    },
+    /// Orderly shutdown of the receiving event loop.
+    Shutdown,
+}
+
+impl Payload {
+    /// Approximate wire size in bytes (bandwidth simulation). Control
+    /// messages are costed at a small fixed size.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Payload::PushUpdates(b) => b.wire_bytes(),
+            Payload::ServerPush(b) => b.wire_bytes(),
+            Payload::PullReply { data, .. } => 32 + data.wire_bytes(),
+            Payload::PullRow { .. } => 32,
+            Payload::ClockNotify { .. }
+            | Payload::PushAck { .. }
+            | Payload::VisibilityAck { .. }
+            | Payload::MinClock { .. }
+            | Payload::Shutdown => 16,
+        }
+    }
+
+    /// Short tag for metrics/trace.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Payload::PushUpdates(_) => "push",
+            Payload::PullRow { .. } => "pull",
+            Payload::PullReply { .. } => "pull_reply",
+            Payload::ClockNotify { .. } => "clock",
+            Payload::ServerPush(_) => "server_push",
+            Payload::PushAck { .. } => "push_ack",
+            Payload::VisibilityAck { .. } => "vis_ack",
+            Payload::MinClock { .. } => "min_clock",
+            Payload::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// An addressed message on the bus.
+#[derive(Debug, Clone)]
+pub struct Msg {
+    /// Sender endpoint.
+    pub src: NodeId,
+    /// Destination endpoint.
+    pub dst: NodeId,
+    /// Body.
+    pub payload: Payload,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_bytes_grow_with_content() {
+        let small = PushBatch {
+            table: TableId(0),
+            origin: ProcId(0),
+            batch_id: 0,
+            updates: vec![(RowId(0), RowUpdate::single(0, 1.0))],
+            clock: 0,
+        };
+        let big = PushBatch {
+            updates: (0..100).map(|i| (RowId(i), RowUpdate::Dense(vec![1.0; 64]))).collect(),
+            ..small.clone()
+        };
+        assert!(big.wire_bytes() > small.wire_bytes() * 50);
+        assert!(Payload::PushUpdates(small).wire_bytes() > Payload::Shutdown.wire_bytes());
+    }
+
+    #[test]
+    fn kinds_cover_all_variants() {
+        let kinds = [
+            Payload::Shutdown.kind(),
+            Payload::MinClock { shard: ShardId(0), clock: 1 }.kind(),
+            Payload::ClockNotify { proc: ProcId(0), clock: 1 }.kind(),
+            Payload::VisibilityAck { table: TableId(0), batch_id: 1 }.kind(),
+        ];
+        let set: std::collections::HashSet<_> = kinds.iter().collect();
+        assert_eq!(set.len(), kinds.len());
+    }
+}

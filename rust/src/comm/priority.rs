@@ -1,0 +1,173 @@
+//! Magnitude-priority update scheduling (paper §4.2).
+//!
+//! "Messages are sent out based on their priorities ... We by default
+//! prioritize updates with larger magnitude as they are more likely to
+//! contribute to convergence."
+//!
+//! [`UpdateQueue`] is the client-side egress queue: pending row-deltas,
+//! pre-aggregated per `(table is implicit, row)` key, drained either in
+//! FIFO order or largest-magnitude-first. Aggregation per row also gives
+//! the batching win the paper describes: ten `Inc`s to one row leave as
+//! one wire delta.
+
+use std::collections::HashMap;
+
+use crate::table::{RowId, RowUpdate};
+
+/// Draining order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrainOrder {
+    /// Oldest-enqueued row first.
+    Fifo,
+    /// Largest accumulated L∞ magnitude first (the paper's default).
+    Magnitude,
+}
+
+/// Pending, per-row-aggregated updates for one table awaiting flush.
+pub struct UpdateQueue {
+    /// row → (aggregated delta, enqueue sequence of first touch)
+    pending: HashMap<RowId, (RowUpdate, u64)>,
+    next_seq: u64,
+    order: DrainOrder,
+}
+
+impl UpdateQueue {
+    /// New queue with the given drain order.
+    pub fn new(order: DrainOrder) -> Self {
+        UpdateQueue { pending: HashMap::new(), next_seq: 0, order }
+    }
+
+    /// Add a delta for `row`, merging with any pending delta for that row.
+    pub fn push(&mut self, row: RowId, update: RowUpdate) {
+        let seq = self.next_seq;
+        match self.pending.get_mut(&row) {
+            Some((agg, _)) => agg.merge(&update),
+            None => {
+                self.pending.insert(row, (update, seq));
+                self.next_seq += 1;
+            }
+        }
+    }
+
+    /// Number of distinct pending rows.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Read the pending (not yet drained) aggregated delta for `row` —
+    /// the read-my-writes overlay for unsent updates.
+    pub fn get(&self, row: RowId) -> Option<&RowUpdate> {
+        self.pending.get(&row).map(|(u, _)| u)
+    }
+
+    /// True when nothing is pending.
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Remove and return up to `max_rows` pending row-deltas in drain
+    /// order. Zero-deltas (increments that cancelled out) are dropped
+    /// rather than shipped.
+    pub fn drain(&mut self, max_rows: usize) -> Vec<(RowId, RowUpdate)> {
+        if self.pending.is_empty() || max_rows == 0 {
+            return Vec::new();
+        }
+        let mut keys: Vec<(RowId, f32, u64)> = self
+            .pending
+            .iter()
+            .map(|(r, (u, seq))| (*r, u.magnitude(), *seq))
+            .collect();
+        match self.order {
+            DrainOrder::Fifo => keys.sort_by_key(|&(_, _, seq)| seq),
+            DrainOrder::Magnitude => keys.sort_by(|a, b| {
+                // Largest magnitude first; tie-break FIFO for determinism.
+                b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal).then(a.2.cmp(&b.2))
+            }),
+        }
+        let mut out = Vec::with_capacity(max_rows.min(keys.len()));
+        for (row, _, _) in keys.into_iter().take(max_rows) {
+            if let Some((u, _)) = self.pending.remove(&row) {
+                if !u.is_zero() {
+                    out.push((row, u));
+                }
+            }
+        }
+        out
+    }
+
+    /// Iterate pending aggregated row-deltas (diagnostics).
+    pub fn iter(&self) -> impl Iterator<Item = (RowId, &RowUpdate)> + '_ {
+        self.pending.iter().map(|(r, (u, _))| (*r, u))
+    }
+
+    /// Drain everything (clock-boundary flush).
+    pub fn drain_all(&mut self) -> Vec<(RowId, RowUpdate)> {
+        self.drain(usize::MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merges_same_row() {
+        let mut q = UpdateQueue::new(DrainOrder::Fifo);
+        q.push(RowId(1), RowUpdate::single(0, 1.0));
+        q.push(RowId(1), RowUpdate::single(0, 2.0));
+        q.push(RowId(1), RowUpdate::single(3, -1.0));
+        assert_eq!(q.len(), 1);
+        let got = q.drain_all();
+        assert_eq!(got.len(), 1);
+        let (row, u) = &got[0];
+        assert_eq!(*row, RowId(1));
+        let pairs: Vec<_> = u.iter_nonzero().collect();
+        assert_eq!(pairs, vec![(0, 3.0), (3, -1.0)]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn fifo_order_is_first_touch() {
+        let mut q = UpdateQueue::new(DrainOrder::Fifo);
+        q.push(RowId(5), RowUpdate::single(0, 0.1));
+        q.push(RowId(2), RowUpdate::single(0, 9.0));
+        q.push(RowId(5), RowUpdate::single(0, 0.1)); // merge, keeps seq
+        let got = q.drain_all();
+        let rows: Vec<u64> = got.iter().map(|(r, _)| r.0).collect();
+        assert_eq!(rows, vec![5, 2]);
+    }
+
+    #[test]
+    fn magnitude_order_puts_big_first() {
+        let mut q = UpdateQueue::new(DrainOrder::Magnitude);
+        q.push(RowId(1), RowUpdate::single(0, 0.1));
+        q.push(RowId(2), RowUpdate::single(0, 5.0));
+        q.push(RowId(3), RowUpdate::single(0, -9.0));
+        let got = q.drain_all();
+        let rows: Vec<u64> = got.iter().map(|(r, _)| r.0).collect();
+        assert_eq!(rows, vec![3, 2, 1]);
+    }
+
+    #[test]
+    fn drain_respects_max_and_keeps_rest() {
+        let mut q = UpdateQueue::new(DrainOrder::Magnitude);
+        for i in 0..10u64 {
+            q.push(RowId(i), RowUpdate::single(0, i as f32));
+        }
+        let first = q.drain(3);
+        assert_eq!(first.len(), 3);
+        assert_eq!(first[0].0, RowId(9));
+        assert_eq!(q.len(), 7);
+        // zero-magnitude row 0 is dropped on the final drain
+        let rest = q.drain_all();
+        assert_eq!(rest.len(), 6, "row 0 had delta 0.0 and must be dropped");
+    }
+
+    #[test]
+    fn cancelled_updates_not_shipped() {
+        let mut q = UpdateQueue::new(DrainOrder::Fifo);
+        q.push(RowId(1), RowUpdate::single(0, 1.0));
+        q.push(RowId(1), RowUpdate::single(0, -1.0));
+        assert_eq!(q.drain_all().len(), 0);
+    }
+}

@@ -1,0 +1,544 @@
+//! Configuration system: topology, network simulation and consistency
+//! policy parameters. Build programmatically with [`SystemConfigBuilder`]
+//! or load from a simple `key = value` config file
+//! ([`SystemConfig::from_file`], see `configs/*.cfg`) — the offline build
+//! has no TOML parser, so the file format is a deliberately tiny subset.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+/// Which consistency model governs a table, with its tuning knobs.
+/// These are exactly the models of paper §2 plus the BSP/SSP baselines.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PolicyConfig {
+    /// Bulk Synchronous Parallel: barrier every clock; equivalent to
+    /// `Ssp { staleness: 0 }` (the paper's BSP Lemma).
+    Bsp,
+    /// Stale Synchronous Parallel [Ho et al. 2013]: updates ship at
+    /// `Clock()`; a reader at clock `c` must see all updates `≤ c-s-1`.
+    Ssp {
+        /// Maximum clock lead `s` of the fastest over the slowest worker.
+        staleness: u32,
+    },
+    /// Clock-bounded Asynchronous Parallel (paper §2.1): same staleness
+    /// guarantee as SSP, but updates propagate eagerly whenever bandwidth
+    /// is available rather than only at the clock boundary.
+    Cap {
+        /// Staleness threshold `s`.
+        staleness: u32,
+    },
+    /// Value-bounded Asynchronous Parallel (paper §2.2): per-parameter
+    /// accumulated unsynchronized-update magnitude is kept `< v_thr`.
+    Vap {
+        /// The value threshold `v_thr`.
+        v_thr: f32,
+        /// Strong VAP additionally bounds half-synchronized updates by
+        /// `max(u, v_thr)` making the replica divergence bound
+        /// `2·max(u, v_thr)` independent of the worker count `P`.
+        strong: bool,
+    },
+    /// Clock-Value-bounded Asynchronous Parallel (paper §2.3): the
+    /// conjunction of the CAP and VAP guarantees.
+    Cvap {
+        /// Staleness threshold `s` (CAP side).
+        staleness: u32,
+        /// Value threshold `v_thr` (VAP side).
+        v_thr: f32,
+        /// Strong or weak VAP component.
+        strong: bool,
+    },
+    /// Best-effort, YahooLDA-style: no guarantee at all. Included as the
+    /// paper's "other extreme" baseline (§1) for the ablation benches.
+    BestEffort,
+}
+
+impl PolicyConfig {
+    /// Staleness bound if the model has one.
+    pub fn staleness(&self) -> Option<u32> {
+        match *self {
+            PolicyConfig::Bsp => Some(0),
+            PolicyConfig::Ssp { staleness } | PolicyConfig::Cap { staleness } => Some(staleness),
+            PolicyConfig::Cvap { staleness, .. } => Some(staleness),
+            PolicyConfig::Vap { .. } | PolicyConfig::BestEffort => None,
+        }
+    }
+
+    /// Value threshold if the model has one.
+    pub fn v_thr(&self) -> Option<f32> {
+        match *self {
+            PolicyConfig::Vap { v_thr, .. } | PolicyConfig::Cvap { v_thr, .. } => Some(v_thr),
+            _ => None,
+        }
+    }
+
+    /// True for models that propagate updates eagerly (asynchronously)
+    /// instead of only at the clock boundary.
+    pub fn is_async(&self) -> bool {
+        !matches!(self, PolicyConfig::Bsp | PolicyConfig::Ssp { .. })
+    }
+
+    /// Validate parameter ranges.
+    pub fn validate(&self) -> Result<()> {
+        if let Some(v) = self.v_thr() {
+            if !(v > 0.0) || !v.is_finite() {
+                return Err(Error::Config(format!("v_thr must be finite and > 0, got {v}")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Short human name used in metrics/bench output.
+    pub fn name(&self) -> String {
+        match *self {
+            PolicyConfig::Bsp => "bsp".into(),
+            PolicyConfig::Ssp { staleness } => format!("ssp(s={staleness})"),
+            PolicyConfig::Cap { staleness } => format!("cap(s={staleness})"),
+            PolicyConfig::Vap { v_thr, strong } => {
+                format!("{}vap(v={v_thr})", if strong { "s" } else { "w" })
+            }
+            PolicyConfig::Cvap { staleness, v_thr, strong } => {
+                format!("{}cvap(s={staleness},v={v_thr})", if strong { "s" } else { "w" })
+            }
+            PolicyConfig::BestEffort => "best-effort".into(),
+        }
+    }
+
+    /// Parse a policy spec string: `bsp`, `ssp:S`, `cap:S`, `vap:V`,
+    /// `svap:V`, `cvap:S:V`, `scvap:S:V`, `best-effort`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let bad = || Error::Config(format!("bad policy spec '{s}'"));
+        let p = match parts[0] {
+            "bsp" => PolicyConfig::Bsp,
+            "best-effort" | "none" => PolicyConfig::BestEffort,
+            "ssp" => PolicyConfig::Ssp {
+                staleness: parts.get(1).ok_or_else(bad)?.parse().map_err(|_| bad())?,
+            },
+            "cap" => PolicyConfig::Cap {
+                staleness: parts.get(1).ok_or_else(bad)?.parse().map_err(|_| bad())?,
+            },
+            "vap" | "svap" => PolicyConfig::Vap {
+                v_thr: parts.get(1).ok_or_else(bad)?.parse().map_err(|_| bad())?,
+                strong: parts[0] == "svap",
+            },
+            "cvap" | "scvap" => PolicyConfig::Cvap {
+                staleness: parts.get(1).ok_or_else(bad)?.parse().map_err(|_| bad())?,
+                v_thr: parts.get(2).ok_or_else(bad)?.parse().map_err(|_| bad())?,
+                strong: parts[0] == "scvap",
+            },
+            _ => return Err(bad()),
+        };
+        p.validate()?;
+        Ok(p)
+    }
+}
+
+/// Simulated-network parameters (substitutes for the paper's 8-node,
+/// 40 GbE PRObE cluster — see DESIGN.md §3).
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// One-way latency per message in microseconds (0 = direct delivery).
+    pub latency_us: u64,
+    /// Link bandwidth in bytes/sec (0 = infinite). Messages occupy the
+    /// link for `bytes / bandwidth` seconds, creating the congestion the
+    /// async models must tolerate.
+    pub bandwidth_bps: u64,
+    /// Extra latency jitter, uniform in `[0, jitter_us]`.
+    pub jitter_us: u64,
+    /// RNG seed for jitter reproducibility.
+    pub seed: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        // Default: ideal network — tests of consistency logic should not
+        // depend on timing. Benches override with realistic values.
+        NetConfig { latency_us: 0, bandwidth_bps: 0, jitter_us: 0, seed: 0x5EED }
+    }
+}
+
+impl NetConfig {
+    /// A profile resembling the paper's testbed: 40 GbE, ~20 µs RTT.
+    pub fn lan_40gbe() -> Self {
+        NetConfig { latency_us: 10, bandwidth_bps: 5_000_000_000, jitter_us: 5, seed: 0x5EED }
+    }
+
+    /// A slow/congested profile (1 GbE, 200 µs) for the straggler benches.
+    pub fn lan_1gbe() -> Self {
+        NetConfig { latency_us: 100, bandwidth_bps: 125_000_000, jitter_us: 50, seed: 0x5EED }
+    }
+
+    /// Transmission delay of a message of `bytes` under this profile
+    /// (latency is added separately by the delivery queue).
+    pub fn tx_time(&self, bytes: usize) -> Duration {
+        if self.bandwidth_bps == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_secs_f64(bytes as f64 / self.bandwidth_bps as f64)
+        }
+    }
+}
+
+/// Straggler injection: slows chosen workers down by a multiplicative
+/// factor, the failure mode the paper calls out for best-effort systems
+/// ("the system can potentially fail if stragglers present", §1).
+#[derive(Debug, Clone, Default)]
+pub struct StragglerConfig {
+    /// Worker ids to slow down.
+    pub workers: Vec<u32>,
+    /// Compute-time multiplier (e.g. 10.0 = 10× slower). 1.0 disables.
+    pub slowdown: f64,
+}
+
+/// Full system configuration.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    /// Number of server shard processes.
+    pub num_server_shards: u32,
+    /// Number of client (application) processes.
+    pub num_client_procs: u32,
+    /// Worker threads per client process. Total workers `P =
+    /// num_client_procs × threads_per_proc`.
+    pub threads_per_proc: u32,
+    /// Network simulation profile.
+    pub net: NetConfig,
+    /// Straggler injection.
+    pub stragglers: StragglerConfig,
+    /// Background flush interval for the async models, in microseconds:
+    /// how often the client egress thread drains the oplog ("whenever the
+    /// network bandwidth is available").
+    pub flush_interval_us: u64,
+    /// Max updates per wire batch (paper §4.2 batches messages).
+    pub max_batch_updates: usize,
+    /// Deadline for blocking waits (ms); exceeded ⇒ `Error::WaitTimeout`.
+    pub wait_timeout_ms: u64,
+    /// Directory holding AOT artifacts (`*.hlo.txt`).
+    pub artifacts_dir: PathBuf,
+    /// Enable the event-trace recorder (costly; used by tests/Fig-1 bench).
+    pub trace: bool,
+    /// Use magnitude-priority ordering when draining the oplog (paper
+    /// §4.2); `false` = FIFO. Ablation E6 flips this.
+    pub magnitude_priority: bool,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfigBuilder::default().build()
+    }
+}
+
+impl SystemConfig {
+    /// Start building a config.
+    pub fn builder() -> SystemConfigBuilder {
+        SystemConfigBuilder::default()
+    }
+
+    /// Total worker count `P`.
+    pub fn num_workers(&self) -> u32 {
+        self.num_client_procs * self.threads_per_proc
+    }
+
+    /// Load from a `key = value` file (one pair per line; `#` comments).
+    /// Recognized keys: `shards`, `procs`, `threads`, `latency_us`,
+    /// `bandwidth_bps`, `jitter_us`, `flush_interval_us`,
+    /// `max_batch_updates`, `wait_timeout_ms`, `artifacts_dir`, `trace`,
+    /// `magnitude_priority`, `straggler_workers` (comma list),
+    /// `straggler_slowdown`.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        let mut kv = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let mut b = SystemConfig::builder();
+        let parse_u32 = |kv: &HashMap<String, String>, k: &str| -> Result<Option<u32>> {
+            kv.get(k)
+                .map(|v| v.parse().map_err(|_| Error::Config(format!("bad {k}: {v}"))))
+                .transpose()
+        };
+        let parse_u64 = |kv: &HashMap<String, String>, k: &str| -> Result<Option<u64>> {
+            kv.get(k)
+                .map(|v| v.parse().map_err(|_| Error::Config(format!("bad {k}: {v}"))))
+                .transpose()
+        };
+        if let Some(v) = parse_u32(&kv, "shards")? {
+            b = b.num_server_shards(v);
+        }
+        if let Some(v) = parse_u32(&kv, "procs")? {
+            b = b.num_client_procs(v);
+        }
+        if let Some(v) = parse_u32(&kv, "threads")? {
+            b = b.threads_per_proc(v);
+        }
+        let mut net = NetConfig::default();
+        if let Some(v) = parse_u64(&kv, "latency_us")? {
+            net.latency_us = v;
+        }
+        if let Some(v) = parse_u64(&kv, "bandwidth_bps")? {
+            net.bandwidth_bps = v;
+        }
+        if let Some(v) = parse_u64(&kv, "jitter_us")? {
+            net.jitter_us = v;
+        }
+        b = b.net(net);
+        if let Some(v) = parse_u64(&kv, "flush_interval_us")? {
+            b = b.flush_interval_us(v);
+        }
+        if let Some(v) = parse_u64(&kv, "max_batch_updates")? {
+            b = b.max_batch_updates(v as usize);
+        }
+        if let Some(v) = parse_u64(&kv, "wait_timeout_ms")? {
+            b = b.wait_timeout_ms(v);
+        }
+        if let Some(v) = kv.get("artifacts_dir") {
+            b = b.artifacts_dir(v.clone());
+        }
+        if let Some(v) = kv.get("trace") {
+            b = b.trace(v == "true" || v == "1");
+        }
+        if let Some(v) = kv.get("magnitude_priority") {
+            b = b.magnitude_priority(v == "true" || v == "1");
+        }
+        let mut stragglers = StragglerConfig::default();
+        if let Some(v) = kv.get("straggler_workers") {
+            stragglers.workers = v
+                .split(',')
+                .filter(|s| !s.trim().is_empty())
+                .map(|s| s.trim().parse().map_err(|_| Error::Config(format!("bad worker id {s}"))))
+                .collect::<Result<Vec<u32>>>()?;
+        }
+        if let Some(v) = kv.get("straggler_slowdown") {
+            stragglers.slowdown =
+                v.parse().map_err(|_| Error::Config(format!("bad slowdown {v}")))?;
+        }
+        b = b.stragglers(stragglers);
+        let cfg = b.cfg;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check the topology.
+    pub fn validate(&self) -> Result<()> {
+        if self.num_server_shards == 0 {
+            return Err(Error::Config("need ≥ 1 server shard".into()));
+        }
+        if self.num_client_procs == 0 || self.threads_per_proc == 0 {
+            return Err(Error::Config("need ≥ 1 client process and ≥ 1 thread".into()));
+        }
+        if self.stragglers.slowdown < 0.0 {
+            return Err(Error::Config("straggler slowdown must be ≥ 0".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Builder for [`SystemConfig`].
+#[derive(Debug, Clone)]
+pub struct SystemConfigBuilder {
+    cfg: SystemConfig,
+}
+
+impl Default for SystemConfigBuilder {
+    fn default() -> Self {
+        SystemConfigBuilder {
+            cfg: SystemConfig {
+                num_server_shards: 1,
+                num_client_procs: 1,
+                threads_per_proc: 1,
+                net: NetConfig::default(),
+                stragglers: StragglerConfig::default(),
+                flush_interval_us: 100,
+                max_batch_updates: 4096,
+                wait_timeout_ms: 30_000,
+                artifacts_dir: PathBuf::from("artifacts"),
+                trace: false,
+                magnitude_priority: true,
+            },
+        }
+    }
+}
+
+impl SystemConfigBuilder {
+    /// Set the number of server shards.
+    pub fn num_server_shards(mut self, n: u32) -> Self {
+        self.cfg.num_server_shards = n;
+        self
+    }
+    /// Set the number of client processes.
+    pub fn num_client_procs(mut self, n: u32) -> Self {
+        self.cfg.num_client_procs = n;
+        self
+    }
+    /// Set worker threads per client process.
+    pub fn threads_per_proc(mut self, n: u32) -> Self {
+        self.cfg.threads_per_proc = n;
+        self
+    }
+    /// Set the network profile.
+    pub fn net(mut self, net: NetConfig) -> Self {
+        self.cfg.net = net;
+        self
+    }
+    /// Inject stragglers.
+    pub fn stragglers(mut self, s: StragglerConfig) -> Self {
+        self.cfg.stragglers = s;
+        self
+    }
+    /// Set the async flush interval (µs).
+    pub fn flush_interval_us(mut self, us: u64) -> Self {
+        self.cfg.flush_interval_us = us;
+        self
+    }
+    /// Set the max updates per wire batch.
+    pub fn max_batch_updates(mut self, n: usize) -> Self {
+        self.cfg.max_batch_updates = n;
+        self
+    }
+    /// Set the blocking-wait deadline (ms).
+    pub fn wait_timeout_ms(mut self, ms: u64) -> Self {
+        self.cfg.wait_timeout_ms = ms;
+        self
+    }
+    /// Set the artifacts directory.
+    pub fn artifacts_dir(mut self, p: impl Into<PathBuf>) -> Self {
+        self.cfg.artifacts_dir = p.into();
+        self
+    }
+    /// Enable/disable the event trace.
+    pub fn trace(mut self, on: bool) -> Self {
+        self.cfg.trace = on;
+        self
+    }
+    /// Enable/disable magnitude-priority update scheduling.
+    pub fn magnitude_priority(mut self, on: bool) -> Self {
+        self.cfg.magnitude_priority = on;
+        self
+    }
+    /// Finalize. Panics on invalid topology (programmer error); use
+    /// [`SystemConfig::validate`] for user-supplied configs.
+    pub fn build(self) -> SystemConfig {
+        self.cfg.validate().expect("invalid SystemConfig");
+        self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_are_valid() {
+        let c = SystemConfig::default();
+        assert_eq!(c.num_workers(), 1);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn policy_accessors() {
+        assert_eq!(PolicyConfig::Bsp.staleness(), Some(0));
+        assert_eq!(PolicyConfig::Ssp { staleness: 3 }.staleness(), Some(3));
+        assert_eq!(PolicyConfig::Vap { v_thr: 8.0, strong: false }.v_thr(), Some(8.0));
+        assert!(PolicyConfig::Cap { staleness: 1 }.is_async());
+        assert!(!PolicyConfig::Ssp { staleness: 1 }.is_async());
+        let c = PolicyConfig::Cvap { staleness: 2, v_thr: 1.0, strong: true };
+        assert_eq!(c.staleness(), Some(2));
+        assert_eq!(c.v_thr(), Some(1.0));
+    }
+
+    #[test]
+    fn policy_validation_rejects_bad_vthr() {
+        assert!(PolicyConfig::Vap { v_thr: 0.0, strong: false }.validate().is_err());
+        assert!(PolicyConfig::Vap { v_thr: f32::NAN, strong: false }.validate().is_err());
+        assert!(PolicyConfig::Vap { v_thr: -1.0, strong: true }.validate().is_err());
+        assert!(PolicyConfig::Vap { v_thr: 0.5, strong: true }.validate().is_ok());
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        assert_eq!(PolicyConfig::parse("bsp").unwrap(), PolicyConfig::Bsp);
+        assert_eq!(
+            PolicyConfig::parse("ssp:3").unwrap(),
+            PolicyConfig::Ssp { staleness: 3 }
+        );
+        assert_eq!(
+            PolicyConfig::parse("svap:2.5").unwrap(),
+            PolicyConfig::Vap { v_thr: 2.5, strong: true }
+        );
+        assert_eq!(
+            PolicyConfig::parse("cvap:1:4").unwrap(),
+            PolicyConfig::Cvap { staleness: 1, v_thr: 4.0, strong: false }
+        );
+        assert!(PolicyConfig::parse("vap").is_err());
+        assert!(PolicyConfig::parse("wat:1").is_err());
+        assert!(PolicyConfig::parse("vap:-1").is_err());
+    }
+
+    #[test]
+    fn config_file_parsing() {
+        let dir = std::env::temp_dir().join(format!("bapps-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.cfg");
+        std::fs::write(
+            &path,
+            "# comment\nshards = 4\nprocs = 2\nthreads = 8\nlatency_us = 10\n\
+             straggler_workers = 1,3\nstraggler_slowdown = 5.0\ntrace = true\n",
+        )
+        .unwrap();
+        let cfg = SystemConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.num_server_shards, 4);
+        assert_eq!(cfg.num_workers(), 16);
+        assert_eq!(cfg.net.latency_us, 10);
+        assert_eq!(cfg.stragglers.workers, vec![1, 3]);
+        assert_eq!(cfg.stragglers.slowdown, 5.0);
+        assert!(cfg.trace);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn config_file_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("bapps-cfg2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.cfg");
+        std::fs::write(&path, "shards 4\n").unwrap();
+        assert!(SystemConfig::from_file(&path).is_err());
+        std::fs::write(&path, "shards = many\n").unwrap();
+        assert!(SystemConfig::from_file(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tx_time_scales_with_bytes() {
+        let n = NetConfig { bandwidth_bps: 1000, ..NetConfig::default() };
+        assert_eq!(n.tx_time(500), Duration::from_millis(500));
+        let inf = NetConfig::default();
+        assert_eq!(inf.tx_time(1 << 30), Duration::ZERO);
+    }
+
+    #[test]
+    fn names_are_distinct() {
+        let names: Vec<String> = [
+            PolicyConfig::Bsp,
+            PolicyConfig::Ssp { staleness: 1 },
+            PolicyConfig::Cap { staleness: 1 },
+            PolicyConfig::Vap { v_thr: 1.0, strong: false },
+            PolicyConfig::Vap { v_thr: 1.0, strong: true },
+            PolicyConfig::Cvap { staleness: 1, v_thr: 1.0, strong: false },
+            PolicyConfig::BestEffort,
+        ]
+        .iter()
+        .map(|p| p.name())
+        .collect();
+        let set: std::collections::HashSet<_> = names.iter().collect();
+        assert_eq!(set.len(), names.len());
+    }
+}

@@ -1,0 +1,69 @@
+//! Clock-bounded Asynchronous Parallel (CAP) — paper §2.1.
+//!
+//! CAP applies SSP's clock-bounded guarantee to an **asynchronous**
+//! parameter server: "unlike SSP where updates are sent out only during
+//! the synchronization phase, CAP propagates updates whenever the network
+//! bandwidth is available. Similar to SSP, CAP guarantees bounded
+//! staleness — a client must see all updates older than certain
+//! timestamp."
+//!
+//! The read gate is therefore *identical* to SSP's
+//! ([`super::ssp::required_read_clock`]); what differs is the propagation
+//! discipline, which in this implementation is the client's background
+//! flusher ([`crate::client`]) draining the egress queue every
+//! `flush_interval_us` instead of only inside `Clock()`. The algorithmic
+//! upside the paper claims — workers "are more likely to compute with
+//! fresh data" — is measurable here as the staleness *distribution*
+//! ([`crate::metrics::StalenessHist`]): CAP's observed staleness
+//! concentrates near 0 while SSP's piles up at `s`.
+//!
+//! Correctness: the staleness analysis of Ho et al. applies unchanged
+//! ("we omit the proof of correctness for CAP as the analysis in [5]
+//! applies as well", §2.1) — eager propagation only ever *adds*
+//! best-effort in-window updates, term 3 of the paper's eq. (1).
+
+use crate::types::Clock;
+
+/// Expected upper bound on observed read staleness under CAP with bound
+/// `s`: the gate admits rows as stale as `s + 1` clocks behind the
+/// reader's current clock (reader at `c` accepts freshness `c − s − 1`).
+/// Used by tests asserting the guarantee empirically.
+pub fn max_observable_staleness(s: u32) -> Clock {
+    s + 1
+}
+
+/// Whether a cached row of freshness `row_clock` satisfies a reader at
+/// `reader_clock` under staleness `s` — the CAP/SSP read predicate in one
+/// place (clients call this; the controller in `client/` wires it up).
+pub fn read_admissible(reader_clock: Clock, row_clock: Clock, s: u32) -> bool {
+    row_clock >= super::ssp::required_read_clock(reader_clock, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admissibility_boundaries() {
+        // reader at 10, s=2 ⇒ requires row clock ≥ 7
+        assert!(read_admissible(10, 7, 2));
+        assert!(read_admissible(10, 9, 2));
+        assert!(!read_admissible(10, 6, 2));
+        // young reader never blocks
+        assert!(read_admissible(2, 0, 2));
+    }
+
+    #[test]
+    fn observable_staleness_bound() {
+        // If every read is admissible, observed staleness (reader_clock −
+        // row_clock) never exceeds s+1.
+        let s = 3;
+        for reader in 0..50u32 {
+            for row in 0..50u32 {
+                if read_admissible(reader, row, s) && reader >= row {
+                    assert!(reader - row <= max_observable_staleness(s));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Clock-Value-bounded Asynchronous Parallel (CVAP) — paper §2.3.
+//!
+//! CVAP is the conjunction of CAP and VAP: "the idea is that CVAP ensures
+//! all workers make enough progress but bounds the absolute difference
+//! between replicas. CVAP provides the consistency guarantees of both CAP
+//! and VAP." Like VAP it comes in weak and strong versions.
+//!
+//! There is no new gate logic here — the client controller applies the
+//! CAP read gate ([`super::ssp::required_read_clock`]) *and* the VAP write
+//! gate ([`super::vap::write_blocked`]); a strong CVAP shard additionally
+//! applies the release gate ([`super::vap::release_blocked`]). What CVAP
+//! buys, per the paper's §3, is that the solution quality of an iterative
+//! algorithm can be *assessed*: the clock bound caps how many update
+//! windows any view can be missing, the value bound caps the mass of each,
+//! so the noisy-view error (Lemma 1 / eq. (2)) is controlled in both
+//! count and magnitude — which is what makes Theorem 1's `O(√T)` regret
+//! hold with constants the application can tune.
+//!
+//! This module contributes the combined-bound arithmetic used by the
+//! benches and property tests.
+
+use crate::types::Clock;
+
+/// The combined view-discrepancy bound CVAP certifies: with staleness `s`,
+/// value bound `v_thr`, `P` workers and per-update magnitude bound `u`, a
+/// noisy view can miss (or have extra) at most `(s + 1) · (P − 1)` update
+/// *windows* of peers, each window carrying at most `max(u, v_thr)` mass
+/// (weak), i.e. `mass ≤ (s + 1) · (P − 1) · max(u, v_thr)`.
+pub fn view_discrepancy_bound(s: Clock, v_thr: f32, p: u32, u: f32) -> f32 {
+    (s + 1) as f32 * p.saturating_sub(1) as f32 * v_thr.max(u)
+}
+
+/// Theorem 1's regret bound for SGD under VAP/CVAP:
+/// `R[X] ≤ σL²√T + (F²/σ)√T + 2σL·v_thr·P·√T` with the paper's
+/// `σ = F / (L·√(v_thr·P))`. Returns the bound's value; benches compare
+/// measured regret against it.
+pub fn theorem1_regret_bound(t: u64, l: f64, f: f64, v_thr: f64, p: u32) -> f64 {
+    let sigma = f / (l * (v_thr * p as f64).sqrt());
+    let sqrt_t = (t as f64).sqrt();
+    sigma * l * l * sqrt_t + (f * f / sigma) * sqrt_t + 2.0 * sigma * l * v_thr * p as f64 * sqrt_t
+}
+
+/// The learning-rate schedule Theorem 1 assumes: `η_t = σ/√t` with
+/// `σ = F / (L √(v_thr · P))`.
+pub fn theorem1_eta(t: u64, l: f64, f: f64, v_thr: f64, p: u32) -> f64 {
+    let sigma = f / (l * (v_thr * p as f64).sqrt());
+    sigma / (t.max(1) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discrepancy_bound_monotone_in_all_knobs() {
+        let b = view_discrepancy_bound(1, 2.0, 4, 1.0);
+        assert!(view_discrepancy_bound(2, 2.0, 4, 1.0) > b);
+        assert!(view_discrepancy_bound(1, 3.0, 4, 1.0) > b);
+        assert!(view_discrepancy_bound(1, 2.0, 5, 1.0) > b);
+        assert_eq!(view_discrepancy_bound(1, 2.0, 1, 1.0), 0.0, "P=1 ⇒ no discrepancy");
+    }
+
+    #[test]
+    fn regret_bound_is_o_sqrt_t() {
+        // bound(4T)/bound(T) must be ≈ 2 (√ scaling)
+        let b1 = theorem1_regret_bound(10_000, 1.0, 1.0, 4.0, 8);
+        let b4 = theorem1_regret_bound(40_000, 1.0, 1.0, 4.0, 8);
+        let ratio = b4 / b1;
+        assert!((ratio - 2.0).abs() < 1e-9, "ratio={ratio}");
+    }
+
+    #[test]
+    fn regret_bound_grows_with_vthr_and_p() {
+        let base = theorem1_regret_bound(1000, 1.0, 1.0, 1.0, 2);
+        assert!(theorem1_regret_bound(1000, 1.0, 1.0, 4.0, 2) > base);
+        assert!(theorem1_regret_bound(1000, 1.0, 1.0, 1.0, 8) > base);
+    }
+
+    #[test]
+    fn eta_schedule_decays_as_inverse_sqrt() {
+        let e1 = theorem1_eta(1, 1.0, 1.0, 4.0, 4);
+        let e4 = theorem1_eta(4, 1.0, 1.0, 4.0, 4);
+        assert!((e1 / e4 - 2.0).abs() < 1e-12);
+        // t = 0 is clamped, not a division by zero
+        assert!(theorem1_eta(0, 1.0, 1.0, 4.0, 4).is_finite());
+    }
+}

@@ -1,0 +1,209 @@
+//! The paper's consistency models (§2) as executable gate logic.
+//!
+//! Every model is expressed as a *Consistency Policy* — pure decision
+//! functions over local state — consulted by the *Consistency Controller*
+//! machinery inside the client library and server shards (paper §4.3,
+//! Fig 3: "each table is associated with a Consistency Controller, which
+//! checks Consistency Policy and services user accesses accordingly").
+//!
+//! The four models, and where their gates act:
+//!
+//! | model | read gate (client) | write gate (client) | release gate (server) | propagation |
+//! |-------|--------------------|---------------------|----------------------|-------------|
+//! | BSP   | clock bound s=0    | —                   | —                    | at `Clock()` |
+//! | SSP   | clock bound s      | —                   | —                    | at `Clock()` |
+//! | CAP   | clock bound s      | —                   | —                    | eager        |
+//! | VAP (weak)  | —            | value bound v_thr   | —                    | eager        |
+//! | VAP (strong)| —            | value bound v_thr   | half-sync bound      | eager        |
+//! | CVAP  | clock bound s      | value bound v_thr   | (strong: half-sync)  | eager        |
+//!
+//! All models additionally guarantee **read-my-writes** (a worker's `Get`
+//! always reflects its own `Inc`s — implemented by overlaying the local
+//! op-log on the cached snapshot) and **FIFO consistency** (updates from a
+//! worker become visible in issue order — implemented by monotone batch
+//! ids over per-link FIFO channels). Those two are structural: they hold
+//! for every policy including `BestEffort`.
+
+pub mod cap;
+pub mod cvap;
+pub mod ssp;
+pub mod vap;
+
+use crate::config::PolicyConfig;
+use crate::types::Clock;
+
+/// A compiled consistency policy: the per-access decision functions for
+/// one table. Constructed from [`PolicyConfig`]; immutable afterwards.
+#[derive(Debug, Clone, Copy)]
+pub struct ConsistencyModel {
+    cfg: PolicyConfig,
+}
+
+impl ConsistencyModel {
+    /// Compile a policy config.
+    pub fn new(cfg: PolicyConfig) -> Self {
+        ConsistencyModel { cfg }
+    }
+
+    /// The underlying config.
+    pub fn config(&self) -> PolicyConfig {
+        self.cfg
+    }
+
+    /// Human-readable name (for metrics/bench rows).
+    pub fn name(&self) -> String {
+        self.cfg.name()
+    }
+
+    /// **Read gate.** The minimum row freshness (clock) a reader at clock
+    /// `c` may accept. A cached row with clock `r ≥ required` can be served
+    /// locally; otherwise the reader must pull and possibly block.
+    ///
+    /// Clock-bounded models (BSP/SSP/CAP/CVAP, paper §2.1): a worker at
+    /// clock `c` must see all updates in `[0, c−s−1]`, so the required
+    /// freshness is `c − s − 1` (saturating at 0: young readers never
+    /// block). Value-only and best-effort models never require freshness.
+    pub fn required_read_clock(&self, reader_clock: Clock) -> Clock {
+        match self.cfg {
+            PolicyConfig::Bsp => ssp::required_read_clock(reader_clock, 0),
+            PolicyConfig::Ssp { staleness } | PolicyConfig::Cap { staleness } => {
+                ssp::required_read_clock(reader_clock, staleness)
+            }
+            PolicyConfig::Cvap { staleness, .. } => {
+                ssp::required_read_clock(reader_clock, staleness)
+            }
+            PolicyConfig::Vap { .. } | PolicyConfig::BestEffort => 0,
+        }
+    }
+
+    /// **Write gate.** Should an `Inc` of `delta` on a parameter whose
+    /// signed accumulated unsynchronized sum is `pending_sum` block?
+    /// (VAP/CVAP only, paper §2.2 / Fig 1.)
+    pub fn write_blocked(&self, pending_sum: f32, delta: f32) -> bool {
+        match self.cfg {
+            PolicyConfig::Vap { v_thr, .. } | PolicyConfig::Cvap { v_thr, .. } => {
+                vap::write_blocked(pending_sum, delta, v_thr)
+            }
+            _ => false,
+        }
+    }
+
+    /// **Server release gate** (strong VAP/CVAP only, paper §2.2): may the
+    /// shard forward a batch contributing `batch_l1` to a parameter whose
+    /// current half-synchronized in-flight magnitude is `inflight_l1`,
+    /// given the largest single-update magnitude `u_obs` observed so far?
+    pub fn release_blocked(&self, inflight_l1: f32, batch_l1: f32, u_obs: f32) -> bool {
+        match self.cfg {
+            PolicyConfig::Vap { v_thr, strong: true }
+            | PolicyConfig::Cvap { v_thr, strong: true, .. } => {
+                vap::release_blocked(inflight_l1, batch_l1, u_obs, v_thr)
+            }
+            _ => false,
+        }
+    }
+
+    /// Does this model propagate updates eagerly (async flusher active)
+    /// rather than only at the clock boundary?
+    pub fn eager_propagation(&self) -> bool {
+        self.cfg.is_async()
+    }
+
+    /// The staleness bound, if any.
+    pub fn staleness(&self) -> Option<u32> {
+        self.cfg.staleness()
+    }
+
+    /// The value threshold, if any.
+    pub fn v_thr(&self) -> Option<f32> {
+        self.cfg.v_thr()
+    }
+
+    /// Theoretical replica-divergence bound `max |θ_A − θ_B|` for `P`
+    /// workers given the largest update magnitude `u` (paper §2.2):
+    /// weak VAP ⇒ `max(u, v_thr) · P`; strong VAP ⇒ `2 · max(u, v_thr)`;
+    /// clock-only and best-effort models have no value-divergence bound.
+    pub fn divergence_bound(&self, p: u32, u: f32) -> Option<f32> {
+        match self.cfg {
+            PolicyConfig::Vap { v_thr, strong } | PolicyConfig::Cvap { v_thr, strong, .. } => {
+                Some(vap::divergence_bound(v_thr, strong, p, u))
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bsp_is_zero_staleness_ssp() {
+        // The paper's BSP Lemma: zero-staleness CVAP/SSP reduces to BSP.
+        let bsp = ConsistencyModel::new(PolicyConfig::Bsp);
+        let ssp0 = ConsistencyModel::new(PolicyConfig::Ssp { staleness: 0 });
+        for c in 0..20 {
+            assert_eq!(bsp.required_read_clock(c), ssp0.required_read_clock(c));
+        }
+        assert_eq!(bsp.required_read_clock(5), 4);
+    }
+
+    #[test]
+    fn clock_gate_saturates_for_young_readers() {
+        let m = ConsistencyModel::new(PolicyConfig::Cap { staleness: 3 });
+        assert_eq!(m.required_read_clock(0), 0);
+        assert_eq!(m.required_read_clock(3), 0);
+        assert_eq!(m.required_read_clock(4), 0);
+        assert_eq!(m.required_read_clock(5), 1);
+        assert_eq!(m.required_read_clock(10), 6);
+    }
+
+    #[test]
+    fn vap_has_no_clock_gate_and_cap_no_value_gate() {
+        let vap = ConsistencyModel::new(PolicyConfig::Vap { v_thr: 8.0, strong: false });
+        assert_eq!(vap.required_read_clock(100), 0);
+        assert!(vap.write_blocked(8.0, 1.0));
+
+        let cap = ConsistencyModel::new(PolicyConfig::Cap { staleness: 1 });
+        assert!(!cap.write_blocked(1e9, 1e9));
+    }
+
+    #[test]
+    fn cvap_combines_both_gates() {
+        let m = ConsistencyModel::new(PolicyConfig::Cvap { staleness: 2, v_thr: 4.0, strong: false });
+        assert_eq!(m.required_read_clock(10), 7);
+        assert!(m.write_blocked(3.5, 1.0));
+        assert!(!m.write_blocked(2.0, 1.0));
+    }
+
+    #[test]
+    fn release_gate_only_for_strong() {
+        let weak = ConsistencyModel::new(PolicyConfig::Vap { v_thr: 2.0, strong: false });
+        assert!(!weak.release_blocked(100.0, 100.0, 1.0));
+        let strong = ConsistencyModel::new(PolicyConfig::Vap { v_thr: 2.0, strong: true });
+        assert!(strong.release_blocked(2.0, 1.0, 1.0));
+        assert!(!strong.release_blocked(0.0, 1.0, 1.0));
+    }
+
+    #[test]
+    fn divergence_bounds_match_paper() {
+        // weak: max(u, v_thr) * P ; strong: 2 * max(u, v_thr)
+        let weak = ConsistencyModel::new(PolicyConfig::Vap { v_thr: 8.0, strong: false });
+        assert_eq!(weak.divergence_bound(4, 2.0), Some(32.0));
+        let strong = ConsistencyModel::new(PolicyConfig::Vap { v_thr: 8.0, strong: true });
+        assert_eq!(strong.divergence_bound(4, 2.0), Some(16.0));
+        // u > v_thr dominates
+        assert_eq!(strong.divergence_bound(4, 10.0), Some(20.0));
+        let cap = ConsistencyModel::new(PolicyConfig::Cap { staleness: 1 });
+        assert_eq!(cap.divergence_bound(4, 1.0), None);
+    }
+
+    #[test]
+    fn eager_propagation_flags() {
+        assert!(!ConsistencyModel::new(PolicyConfig::Bsp).eager_propagation());
+        assert!(!ConsistencyModel::new(PolicyConfig::Ssp { staleness: 5 }).eager_propagation());
+        assert!(ConsistencyModel::new(PolicyConfig::Cap { staleness: 5 }).eager_propagation());
+        assert!(ConsistencyModel::new(PolicyConfig::Vap { v_thr: 1.0, strong: false })
+            .eager_propagation());
+        assert!(ConsistencyModel::new(PolicyConfig::BestEffort).eager_propagation());
+    }
+}

@@ -1,0 +1,58 @@
+//! Stale Synchronous Parallel (SSP) — the baseline bounded-staleness model
+//! of Ho et al. [NIPS 2013], which the paper's CAP generalizes to the
+//! asynchronous setting (§1, §2.1).
+//!
+//! Semantics: execution proceeds in clocks; updates generated in the
+//! interval `(c−1, c]` are timestamped `c` and are shipped during the
+//! synchronization phase of `Clock()`. A worker at clock `c` is guaranteed
+//! to observe **all** updates (from every worker) with timestamp
+//! `≤ c − s − 1`, plus its own writes; a worker may run at most `s` clocks
+//! ahead of the slowest worker before its reads force it to wait.
+//!
+//! With `s = 0` this is Bulk Synchronous Parallel — the paper's BSP Lemma.
+
+use crate::types::Clock;
+
+/// The freshness (row clock) a reader at `reader_clock` requires under
+/// staleness bound `s`: all updates timestamped `≤ reader_clock − s − 1`
+/// must be visible. Saturates at 0 so workers in their first `s+1` clocks
+/// never block.
+pub fn required_read_clock(reader_clock: Clock, s: u32) -> Clock {
+    reader_clock.saturating_sub(s + 1)
+}
+
+/// The maximum clock a worker may reach before the gate can possibly make
+/// it wait on a peer at `min_clock`: `min_clock + s + 1`. (At that clock
+/// its reads require freshness `min_clock`, exactly the frontier.) Used by
+/// tests to check the permitted-lead invariant.
+pub fn max_permitted_clock(min_clock: Clock, s: u32) -> Clock {
+    min_clock + s + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn required_clock_formula() {
+        // reader at clock c needs updates in [0, c-s-1]
+        assert_eq!(required_read_clock(10, 2), 7);
+        assert_eq!(required_read_clock(1, 0), 0);
+        assert_eq!(required_read_clock(2, 0), 1); // BSP: barrier on c-1
+        assert_eq!(required_read_clock(0, 3), 0);
+        assert_eq!(required_read_clock(3, 3), 0);
+    }
+
+    #[test]
+    fn permitted_lead_matches_gate() {
+        // A worker at the permitted max clock requires exactly min_clock;
+        // one clock beyond would require min_clock+1 which isn't there yet.
+        for s in 0..5u32 {
+            for min in 0..5u32 {
+                let max_c = max_permitted_clock(min, s);
+                assert_eq!(required_read_clock(max_c, s), min);
+                assert_eq!(required_read_clock(max_c + 1, s), min + 1);
+            }
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Value-bounded Asynchronous Parallel (VAP), weak and strong — paper §2.2.
+//!
+//! **Weak VAP** guarantees that for any worker, the accumulated sum of
+//! *unsynchronized local updates* of any parameter stays below a
+//! user-defined threshold `v_thr`. A worker attempting an update that
+//! would push the accumulated magnitude past `v_thr` blocks until the
+//! system has made enough of its earlier updates visible to all workers
+//! (Fig 1). The resulting replica-divergence bound is
+//! `|θ_A − θ_B| ≤ max(u, v_thr) · P` where `u` bounds any single update's
+//! magnitude and `P` is the number of workers.
+//!
+//! **Strong VAP** additionally bounds the total magnitude of
+//! *half-synchronized* updates — updates seen by at least one other worker
+//! but not yet by all — to `max(u, v_thr)` per parameter. The divergence
+//! bound tightens to `2 · max(u, v_thr)`, independent of `P`. We implement
+//! the half-sync bound as a **server-side release gate**: a shard defers
+//! forwarding a batch to the caching clients while the parameter's
+//! in-flight (forwarded-but-not-fully-acked) magnitude would exceed the
+//! bound.
+//!
+//! ### Accounting note
+//! The implementation tracks the accumulated **L1 mass** of
+//! unsynchronized updates per parameter at *process* granularity (the
+//! client library is the synchronization unit, as in Petuum PS). Since
+//! L1 mass is additive over the process's workers and dominates each
+//! worker's absolute accumulated sum, enforcing `L1 < v_thr` per process
+//! implies the paper's per-worker bound — it is conservative, never
+//! looser. Tests in `tests/consistency_bounds.rs` verify the per-worker
+//! bound directly from traces.
+
+/// Weak-VAP write gate over the parameter's **signed accumulated sum** of
+/// unsynchronized updates (the paper's "accumulated sum s of
+/// unsynchronized local updates"): block when the parameter already has
+/// pending mass and applying `delta` would take `|pending + delta|` past
+/// `v_thr`. Signed accounting matters: a `+1` followed by a `-1` leaves
+/// zero net divergence and must not consume budget (LDA's topic counts
+/// oscillate exactly like this).
+///
+/// The `pending != 0` conjunct prevents a single update larger than
+/// `v_thr` from deadlocking forever: the paper's divergence bound already
+/// accounts for oversized single updates through `u` (`max(u, v_thr)`),
+/// so letting a lone oversized update through preserves the bound.
+pub fn write_blocked(pending_sum: f32, delta: f32, v_thr: f32) -> bool {
+    pending_sum != 0.0 && (pending_sum + delta).abs() > v_thr
+}
+
+/// Strong-VAP server release gate: defer forwarding when the parameter's
+/// half-synchronized in-flight mass plus the batch's contribution would
+/// exceed `max(u_obs, v_thr)`. As with the write gate, an idle parameter
+/// (`inflight == 0`) always admits the next batch so oversized batches
+/// cannot wedge the pipeline (their excess is covered by `u`).
+pub fn release_blocked(inflight_l1: f32, batch_l1: f32, u_obs: f32, v_thr: f32) -> bool {
+    inflight_l1 > 0.0 && inflight_l1 + batch_l1 > v_thr.max(u_obs)
+}
+
+/// The paper's replica-divergence bound for VAP (§2.2): weak VAP gives
+/// `max(u, v_thr) · P`, strong VAP gives `2 · max(u, v_thr)` (independent
+/// of `P`).
+pub fn divergence_bound(v_thr: f32, strong: bool, p: u32, u: f32) -> f32 {
+    let m = v_thr.max(u);
+    if strong {
+        2.0 * m
+    } else {
+        m * p as f32
+    }
+}
+
+/// Lemma 1's bound on the reference-vs-noisy-view discrepancy under VAP:
+/// `|A_t| + |B_t| ≤ 2 · v_thr · (P − 1)` — the missing-plus-extra update
+/// mass between the true sequence `x_t` and any worker's noisy view.
+/// Benches compare measured discrepancies against this.
+pub fn lemma1_bound(v_thr: f32, p: u32) -> f32 {
+    2.0 * v_thr * (p.saturating_sub(1)) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure1_schedule() {
+        // Figure 1: v_thr = 8; updates (1,1),(2,3),(3,2),(4,1),(5,1) — the
+        // accumulated sum reaches 8; applying (6,2) would exceed it.
+        let v_thr = 8.0;
+        let deltas = [1.0f32, 3.0, 2.0, 1.0, 1.0];
+        let mut pending = 0.0;
+        for d in deltas {
+            assert!(!write_blocked(pending, d, v_thr), "update {d} must not block");
+            pending += d;
+        }
+        assert_eq!(pending, 8.0);
+        // (6,2) blocks
+        assert!(write_blocked(pending, 2.0, v_thr));
+        // after updates 1..4 become visible (mass 7 released): pending = 1
+        pending -= 7.0;
+        assert!(!write_blocked(pending, 2.0, v_thr), "(6,2) proceeds after release");
+    }
+
+    #[test]
+    fn oversized_single_update_is_admitted_when_idle() {
+        assert!(!write_blocked(0.0, 100.0, 8.0));
+        assert!(write_blocked(0.1, 100.0, 8.0));
+    }
+
+    #[test]
+    fn signed_cancellation_does_not_consume_budget() {
+        // pending +7 with a -2 delta nets to 5 ≤ 8: must not block.
+        assert!(!write_blocked(7.0, -2.0, 8.0));
+        // pending -7 with another -2 nets to -9: blocks.
+        assert!(write_blocked(-7.0, -2.0, 8.0));
+        // symmetric on the negative side
+        assert!(!write_blocked(-7.0, 2.0, 8.0));
+    }
+
+    #[test]
+    fn release_gate_uses_max_of_u_and_vthr() {
+        // bound = max(u, v_thr) = 10
+        assert!(!release_blocked(4.0, 6.0, 10.0, 8.0));
+        assert!(release_blocked(4.1, 6.0, 10.0, 8.0));
+        // bound = v_thr when it dominates
+        assert!(release_blocked(4.0, 6.0, 1.0, 8.0));
+        // idle parameter always admits
+        assert!(!release_blocked(0.0, 1e6, 1.0, 8.0));
+    }
+
+    #[test]
+    fn divergence_bounds() {
+        assert_eq!(divergence_bound(8.0, false, 4, 2.0), 32.0);
+        assert_eq!(divergence_bound(8.0, true, 4, 2.0), 16.0);
+        assert_eq!(divergence_bound(8.0, true, 1000, 2.0), 16.0, "strong is P-independent");
+        assert_eq!(divergence_bound(2.0, false, 3, 5.0), 15.0, "u dominates");
+    }
+
+    #[test]
+    fn lemma1_bound_shape() {
+        assert_eq!(lemma1_bound(4.0, 1), 0.0, "single worker: no discrepancy");
+        assert_eq!(lemma1_bound(4.0, 5), 32.0);
+        assert!(lemma1_bound(4.0, 9) > lemma1_bound(4.0, 5), "grows with P");
+    }
+}

@@ -1,0 +1,333 @@
+//! The system coordinator: launches shards, client processes and worker
+//! threads inside one OS process (the simulated cluster — see DESIGN.md §3
+//! for why this substitution preserves the paper's phenomena).
+//!
+//! Topology (paper Fig 2): `num_server_shards` server threads, each the
+//! event loop of a [`crate::server::ServerShard`]; `num_client_procs`
+//! client "processes", each a [`crate::client::ClientCore`] with an
+//! ingress thread, a flusher thread and `threads_per_proc` application
+//! worker threads driven by [`PsSystem::run_workers`].
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::client::{ClientCore, WorkerCtx};
+use crate::comm::msg::{Msg, Payload};
+use crate::comm::Network;
+use crate::config::SystemConfig;
+use crate::error::{Error, Result};
+use crate::metrics::NetMetrics;
+use crate::server::{ServerShard, TableRegistry};
+use crate::table::TableDesc;
+use crate::trace::TraceRecorder;
+use crate::types::{NodeId, ProcId, ShardId, WorkerId};
+
+/// A running parameter-server system.
+///
+/// ```no_run
+/// use bapps::prelude::*;
+/// let sys = PsSystem::launch(SystemConfig::default()).unwrap();
+/// # sys.shutdown().unwrap();
+/// ```
+pub struct PsSystem {
+    cfg: SystemConfig,
+    registry: Arc<TableRegistry>,
+    cores: Vec<Arc<ClientCore>>,
+    trace: Arc<TraceRecorder>,
+    network: Network,
+    server_threads: Vec<JoinHandle<()>>,
+    io_threads: Vec<JoinHandle<()>>,
+}
+
+impl PsSystem {
+    /// Launch shards, client cores and their background threads.
+    pub fn launch(cfg: SystemConfig) -> Result<Self> {
+        cfg.validate()?;
+        let network = Network::new(cfg.net.clone());
+        let registry = Arc::new(TableRegistry::default());
+        let trace = Arc::new(TraceRecorder::new(cfg.trace));
+
+        // Register every endpoint before spawning anything, so no early
+        // message can hit an unregistered mailbox.
+        let mut shard_eps = Vec::new();
+        for s in 0..cfg.num_server_shards {
+            shard_eps.push(network.register(NodeId::Server(ShardId(s))));
+        }
+        let mut client_eps = Vec::new();
+        for p in 0..cfg.num_client_procs {
+            client_eps.push(network.register(NodeId::Client(ProcId(p))));
+        }
+
+        let mut server_threads = Vec::new();
+        for (s, ep) in shard_eps.into_iter().enumerate() {
+            let shard = ServerShard::with_trace(
+                ShardId(s as u32),
+                cfg.num_client_procs,
+                registry.clone(),
+                network.sender(),
+                trace.clone(),
+            );
+            server_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("shard{s}"))
+                    .spawn(move || shard.run(ep))
+                    .map_err(Error::Io)?,
+            );
+        }
+
+        let mut cores = Vec::new();
+        let mut io_threads = Vec::new();
+        for (p, ep) in client_eps.into_iter().enumerate() {
+            let core = Arc::new(ClientCore::new(
+                ProcId(p as u32),
+                cfg.clone(),
+                registry.clone(),
+                network.sender(),
+                trace.clone(),
+            ));
+            let ingress = core.clone();
+            io_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("ingress{p}"))
+                    .spawn(move || ingress.run_ingress(ep))
+                    .map_err(Error::Io)?,
+            );
+            let flusher = core.clone();
+            io_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("flusher{p}"))
+                    .spawn(move || flusher.run_flusher())
+                    .map_err(Error::Io)?,
+            );
+            cores.push(core);
+        }
+
+        Ok(PsSystem { cfg, registry, cores, trace, network, server_threads, io_threads })
+    }
+
+    /// System configuration.
+    pub fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    /// Create a table on every shard and client (lazily instantiated on
+    /// first access). Must be called before workers touch the table.
+    pub fn create_table(&self, desc: TableDesc) -> Result<()> {
+        self.registry.insert(desc)
+    }
+
+    /// Run one closure on every worker thread (`P = procs × threads`),
+    /// collecting their return values in worker-id order. Blocks until all
+    /// workers finish; a panicking worker yields `Error::WorkerPanic`.
+    pub fn run_workers<F, R>(&self, f: F) -> Result<Vec<R>>
+    where
+        F: Fn(&mut WorkerCtx) -> R + Send + Sync + 'static,
+        R: Send + 'static,
+    {
+        let f = Arc::new(f);
+        let tpp = self.cfg.threads_per_proc;
+        let num_workers = self.cfg.num_workers();
+        // Register every worker in its process vector clock BEFORE any
+        // thread spawns: a fast-starting worker must never advance the
+        // process min (and emit ClockNotify promises) while a late sibling
+        // is still outside the clock.
+        for p in 0..self.cfg.num_client_procs {
+            for t in 0..tpp {
+                self.cores[p as usize].register_worker(WorkerId(p * tpp + t));
+            }
+        }
+        let mut joins = Vec::new();
+        for p in 0..self.cfg.num_client_procs {
+            for t in 0..tpp {
+                let wid = WorkerId(p * tpp + t);
+                let slowdown = if self.cfg.stragglers.workers.contains(&wid.0) {
+                    self.cfg.stragglers.slowdown
+                } else {
+                    1.0
+                };
+                let core = self.cores[p as usize].clone();
+                let f = f.clone();
+                joins.push((
+                    wid,
+                    std::thread::Builder::new()
+                        .name(format!("worker{}", wid.0))
+                        .spawn(move || {
+                            let mut ctx = WorkerCtx::new(wid, core, slowdown, num_workers);
+                            f(&mut ctx)
+                        })
+                        .map_err(Error::Io)?,
+                ));
+            }
+        }
+        let mut out = Vec::with_capacity(joins.len());
+        let mut panic_msg = None;
+        for (wid, j) in joins {
+            match j.join() {
+                Ok(r) => out.push(r),
+                Err(e) => {
+                    let msg = e
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "unknown panic".into());
+                    panic_msg.get_or_insert(format!("worker {}: {msg}", wid.0));
+                }
+            }
+        }
+        match panic_msg {
+            Some(m) => Err(Error::WorkerPanic(m)),
+            None => Ok(out),
+        }
+    }
+
+    /// The client core of process `p` (tests / advanced drivers).
+    pub fn client(&self, p: ProcId) -> Arc<ClientCore> {
+        self.cores[p.0 as usize].clone()
+    }
+
+    /// All client cores.
+    pub fn clients(&self) -> &[Arc<ClientCore>] {
+        &self.cores
+    }
+
+    /// Network metrics (message/byte counters).
+    pub fn net_metrics(&self) -> Arc<NetMetrics> {
+        self.network.metrics()
+    }
+
+    /// The event trace recorder.
+    pub fn trace(&self) -> Arc<TraceRecorder> {
+        self.trace.clone()
+    }
+
+    /// Aggregate worker metrics across processes into one summary line.
+    pub fn metrics_summary(&self) -> String {
+        self.cores
+            .iter()
+            .map(|c| format!("proc{}: {}", c.proc.0, c.metrics.summary()))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// Orderly shutdown: stop flushers (with a final drain), stop ingress
+    /// and shard loops, join all threads.
+    pub fn shutdown(mut self) -> Result<()> {
+        for core in &self.cores {
+            core.stop();
+        }
+        let sender = self.network.sender();
+        // Flushers exit on the stop flag; ingress/shards on Shutdown.
+        for p in 0..self.cfg.num_client_procs {
+            let _ = sender.send(Msg {
+                src: NodeId::Coordinator,
+                dst: NodeId::Client(ProcId(p)),
+                payload: Payload::Shutdown,
+            });
+        }
+        for s in 0..self.cfg.num_server_shards {
+            let _ = sender.send(Msg {
+                src: NodeId::Coordinator,
+                dst: NodeId::Server(ShardId(s)),
+                payload: Payload::Shutdown,
+            });
+        }
+        for j in self.io_threads.drain(..) {
+            j.join().map_err(|_| Error::Other("io thread panicked".into()))?;
+        }
+        for j in self.server_threads.drain(..) {
+            j.join().map_err(|_| Error::Other("server thread panicked".into()))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PolicyConfig;
+    use crate::table::{RowId, RowKind, TableId};
+
+    fn small_cfg() -> SystemConfig {
+        SystemConfig::builder()
+            .num_server_shards(2)
+            .num_client_procs(2)
+            .threads_per_proc(2)
+            .flush_interval_us(50)
+            .wait_timeout_ms(10_000)
+            .build()
+    }
+
+    fn table(policy: PolicyConfig) -> TableDesc {
+        TableDesc {
+            id: TableId(0),
+            num_rows: 16,
+            row_width: 4,
+            row_kind: RowKind::Dense,
+            policy,
+        }
+    }
+
+    #[test]
+    fn launch_and_shutdown() {
+        let sys = PsSystem::launch(small_cfg()).unwrap();
+        sys.shutdown().unwrap();
+    }
+
+    #[test]
+    fn bsp_counter_converges_to_total() {
+        let sys = PsSystem::launch(small_cfg()).unwrap();
+        sys.create_table(table(PolicyConfig::Bsp)).unwrap();
+        const CLOCKS: u32 = 5;
+        sys.run_workers(move |ctx| {
+            let t = ctx.table(TableId(0));
+            for _ in 0..CLOCKS {
+                t.inc(RowId(0), 0, 1.0).unwrap();
+                ctx.clock().unwrap();
+            }
+        })
+        .unwrap();
+        // 4 workers × 5 incs = 20; a fresh reader that advances one more
+        // clock must see everything stamped ≤ 5.
+        let vals = sys
+            .run_workers(move |ctx| {
+                for _ in 0..=CLOCKS {
+                    ctx.clock().unwrap();
+                }
+                let t = ctx.table(TableId(0));
+                t.get(RowId(0), 0).unwrap()
+            })
+            .unwrap();
+        for v in vals {
+            assert_eq!(v, 20.0, "BSP reader must see all 20 increments");
+        }
+        sys.shutdown().unwrap();
+    }
+
+    #[test]
+    fn worker_panic_is_reported() {
+        let sys = PsSystem::launch(small_cfg()).unwrap();
+        let err = sys
+            .run_workers(|ctx| {
+                if ctx.worker_id().0 == 1 {
+                    panic!("boom");
+                }
+            })
+            .unwrap_err();
+        assert!(matches!(err, Error::WorkerPanic(_)), "{err}");
+        sys.shutdown().unwrap();
+    }
+
+    #[test]
+    fn vap_writers_do_not_deadlock() {
+        let sys = PsSystem::launch(small_cfg()).unwrap();
+        sys.create_table(table(PolicyConfig::Vap { v_thr: 2.0, strong: false })).unwrap();
+        sys.run_workers(|ctx| {
+            let t = ctx.table(TableId(0));
+            for i in 0..100 {
+                t.inc(RowId((i % 4) as u64), 0, 1.0).unwrap();
+            }
+        })
+        .unwrap();
+        sys.shutdown().unwrap();
+    }
+}

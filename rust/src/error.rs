@@ -1,0 +1,114 @@
+//! Library-wide error type.
+//!
+//! A parameter server has three broad failure domains: configuration
+//! (bad table descriptors, inconsistent topology), runtime (channel
+//! disconnects during shutdown, PJRT load/compile failures) and API misuse
+//! (unknown table ids, out-of-range columns). All are folded into one
+//! [`Error`] enum so the public API can return a single [`Result`].
+
+use crate::table::{RowId, TableId};
+use crate::types::NodeId;
+
+/// Result alias used across the crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All errors produced by the BAPPS library.
+#[derive(Debug)]
+pub enum Error {
+    /// Invalid or inconsistent configuration detected at launch/creation.
+    Config(String),
+    /// A table id was used before the table was created.
+    UnknownTable(TableId),
+    /// A row id outside the table's `num_rows`.
+    RowOutOfRange { table: TableId, row: RowId, num_rows: u64 },
+    /// A column index outside the table's `row_width`.
+    ColOutOfRange { table: TableId, col: u32, width: u32 },
+    /// A message could not be delivered because the destination endpoint's
+    /// channel is closed (normal during shutdown, an error elsewhere).
+    Disconnected(NodeId),
+    /// A blocking wait (CAP staleness wait, VAP visibility wait) exceeded
+    /// the configured deadline — almost always a deadlock or a dead peer.
+    WaitTimeout { what: String, waited_ms: u64 },
+    /// The PJRT runtime failed to load/compile/execute an artifact.
+    Runtime(String),
+    /// An artifact file is missing — run `make artifacts` first.
+    MissingArtifact(std::path::PathBuf),
+    /// Worker panicked; carries the panic payload rendered to a string.
+    WorkerPanic(String),
+    /// Generic I/O error (config files, trace dumps).
+    Io(std::io::Error),
+    /// Anything else.
+    Other(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Config(s) => write!(f, "config error: {s}"),
+            Error::UnknownTable(t) => write!(f, "unknown table {:?}", t),
+            Error::RowOutOfRange { table, row, num_rows } => {
+                write!(f, "row {} out of range for table {:?} ({} rows)", row.0, table, num_rows)
+            }
+            Error::ColOutOfRange { table, col, width } => {
+                write!(f, "column {col} out of range for table {:?} (width {width})", table)
+            }
+            Error::Disconnected(n) => write!(f, "endpoint {n} disconnected"),
+            Error::WaitTimeout { what, waited_ms } => {
+                write!(f, "timed out after {waited_ms} ms waiting for {what}")
+            }
+            Error::Runtime(s) => write!(f, "runtime error: {s}"),
+            Error::MissingArtifact(p) => {
+                write!(f, "missing artifact {} — run `make artifacts`", p.display())
+            }
+            Error::WorkerPanic(s) => write!(f, "worker panicked: {s}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Other(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error::Other(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = Error::RowOutOfRange { table: TableId(3), row: RowId(42), num_rows: 10 };
+        let s = e.to_string();
+        assert!(s.contains("42") && s.contains("10"), "{s}");
+
+        let e = Error::WaitTimeout { what: "VAP visibility".into(), waited_ms: 500 };
+        assert!(e.to_string().contains("VAP visibility"));
+
+        let e = Error::MissingArtifact("artifacts/x.hlo.txt".into());
+        assert!(e.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn io_error_source_preserved() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = io.into();
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -1,0 +1,269 @@
+//! `bapps` CLI — launch the parameter server on one of the paper's
+//! workloads.
+//!
+//! ```text
+//! bapps table1 [--scale N]
+//! bapps lda   --workers 8 --topics 100 --policy vap:8
+//! bapps sgd   --workers 4 --policy cvap:2:4 --iters 200
+//! bapps mf    --workers 4 --epochs 20
+//! bapps transformer --steps 100        # requires `make artifacts`
+//! ```
+//!
+//! Policy specs: `bsp`, `ssp:S`, `cap:S`, `vap:V`, `svap:V`, `cvap:S:V`,
+//! `scvap:S:V`, `best-effort`.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use bapps::apps::lda::{run_lda, Corpus, LdaConfig, SyntheticCorpusConfig};
+use bapps::apps::mf::{run_mf, MfConfig, MfData};
+use bapps::apps::sgd::{run_sgd, LogRegData, LogRegDataConfig, SgdConfig};
+use bapps::apps::transformer::{train, TrainConfig, TransformerSpec};
+use bapps::config::{NetConfig, PolicyConfig, SystemConfig};
+use bapps::coordinator::PsSystem;
+use bapps::runtime::ComputePool;
+
+const USAGE: &str = "\
+bapps — bounded-asynchronous parameter server (Petuum-PS reproduction)
+
+USAGE: bapps <COMMAND> [OPTIONS]
+
+COMMANDS:
+  table1        print Table 1 (synthetic 20News corpus statistics)
+  lda           LDA topic modeling (the paper's §5 evaluation)
+  sgd           distributed SGD logistic regression (Theorem-1 workload)
+  mf            matrix factorization
+  transformer   end-to-end transformer-LM training (needs `make artifacts`)
+
+COMMON OPTIONS:
+  --workers N       total worker threads (default 4)
+  --shards N        server shards (default 2)
+  --policy SPEC     bsp | ssp:S | cap:S | vap:V | svap:V | cvap:S:V | scvap:S:V | best-effort
+                    (default vap:8)
+  --lan             simulate the paper's 40GbE LAN instead of an ideal network
+  --artifacts DIR   AOT artifacts directory (default 'artifacts')
+
+COMMAND OPTIONS:
+  table1:      --scale N (1 = full 20News scale; default 1)
+  lda:         --topics N --sweeps N --scale N --xla
+  sgd:         --iters N --batch N --n N --d N --xla
+  mf:          --m N --n N --rank N --epochs N
+  transformer: --steps N --eta F
+";
+
+/// Minimal flag parser: `--key value` pairs + bare `--flag` booleans.
+struct Args {
+    kv: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut kv = HashMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("unexpected argument '{a}'\n\n{USAGE}"))?;
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                kv.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.push(key.to_string());
+                i += 1;
+            }
+        }
+        Ok(Args { kv, flags })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.kv.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("bad value for --{key}: '{v}'")),
+        }
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+fn build_system(args: &Args) -> Result<(PsSystem, PolicyConfig, String)> {
+    let workers: u32 = args.get("workers", 4u32)?;
+    let shards: u32 = args.get("shards", 2u32)?;
+    let policy_spec: String = args.get("policy", "vap:8".to_string())?;
+    let policy = PolicyConfig::parse(&policy_spec).map_err(|e| anyhow!("{e}"))?;
+    let artifacts: String = args.get("artifacts", "artifacts".to_string())?;
+    let procs = if workers >= 2 && workers % 2 == 0 { 2 } else { 1 };
+    let cfg = SystemConfig::builder()
+        .num_server_shards(shards.max(1))
+        .num_client_procs(procs)
+        .threads_per_proc((workers / procs).max(1))
+        .net(if args.flag("lan") { NetConfig::lan_40gbe() } else { NetConfig::default() })
+        .artifacts_dir(artifacts.clone())
+        .build();
+    let sys = PsSystem::launch(cfg).map_err(|e| anyhow!("{e}"))?;
+    Ok((sys, policy, artifacts))
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        eprintln!("{USAGE}");
+        bail!("missing command");
+    };
+    let args = Args::parse(&argv[1..])?;
+
+    match cmd.as_str() {
+        "table1" => {
+            let scale: usize = args.get("scale", 1usize)?;
+            let cfg = if scale <= 1 {
+                SyntheticCorpusConfig::news20()
+            } else {
+                SyntheticCorpusConfig::news20_scaled(scale)
+            };
+            let corpus = Corpus::synthetic(&cfg);
+            println!("{}", corpus.stats());
+        }
+        "lda" => {
+            let (sys, policy, artifacts) = build_system(&args)?;
+            let scale: usize = args.get("scale", 8usize)?;
+            let topics: usize = args.get("topics", 100usize)?;
+            let sweeps: usize = args.get("sweeps", 5usize)?;
+            let xla = args.flag("xla");
+            let corpus =
+                Arc::new(Corpus::synthetic(&SyntheticCorpusConfig::news20_scaled(scale)));
+            println!("corpus:\n{}", corpus.stats());
+            let pool = if xla {
+                Some(Arc::new(ComputePool::start(&artifacts, 1).map_err(|e| anyhow!("{e}"))?))
+            } else {
+                None
+            };
+            let res = run_lda(
+                &sys,
+                corpus,
+                LdaConfig {
+                    num_topics: topics,
+                    sweeps,
+                    policy,
+                    use_xla: xla,
+                    ..LdaConfig::default()
+                },
+                pool,
+            )
+            .map_err(|e| anyhow!("{e}"))?;
+            println!(
+                "LDA [{}] tokens/s={:.0} wall={:.2}s loglik={:?}",
+                policy.name(),
+                res.tokens_per_sec,
+                res.wall_secs,
+                res.loglik_curve
+                    .iter()
+                    .map(|v| (v * 100.0).round() / 100.0)
+                    .collect::<Vec<_>>()
+            );
+            println!("{}", sys.metrics_summary());
+            sys.shutdown().map_err(|e| anyhow!("{e}"))?;
+        }
+        "sgd" => {
+            let (sys, policy, artifacts) = build_system(&args)?;
+            let iters: usize = args.get("iters", 200usize)?;
+            let batch: usize = args.get("batch", 32usize)?;
+            let n: usize = args.get("n", 8192usize)?;
+            let d: usize = args.get("d", 64usize)?;
+            let xla = args.flag("xla");
+            let data = Arc::new(LogRegData::synthetic(&LogRegDataConfig {
+                n,
+                d,
+                noise: 0.02,
+                seed: 13,
+            }));
+            let pool = if xla {
+                Some(Arc::new(ComputePool::start(&artifacts, 1).map_err(|e| anyhow!("{e}"))?))
+            } else {
+                None
+            };
+            let res = run_sgd(
+                &sys,
+                data,
+                SgdConfig { iters, batch, policy, use_xla: xla, ..SgdConfig::default() },
+                pool,
+            )
+            .map_err(|e| anyhow!("{e}"))?;
+            println!(
+                "SGD [{}] loss={:.4} acc={:.3} steps/s={:.0} wall={:.2}s",
+                policy.name(),
+                res.final_loss,
+                res.accuracy,
+                res.steps_per_sec,
+                res.wall_secs
+            );
+            sys.shutdown().map_err(|e| anyhow!("{e}"))?;
+        }
+        "mf" => {
+            let (sys, policy, _) = build_system(&args)?;
+            let m: usize = args.get("m", 200usize)?;
+            let n: usize = args.get("n", 200usize)?;
+            let rank: usize = args.get("rank", 8usize)?;
+            let epochs: usize = args.get("epochs", 20usize)?;
+            let data = Arc::new(MfData::synthetic(m, n, rank.min(4), 0.3, 7));
+            let res = run_mf(&sys, data, MfConfig { rank, epochs, policy, ..MfConfig::default() })
+                .map_err(|e| anyhow!("{e}"))?;
+            println!(
+                "MF [{}] rmse={:.4} ratings/s={:.0} curve={:?}",
+                policy.name(),
+                res.rmse,
+                res.ratings_per_sec,
+                res.rmse_curve
+                    .iter()
+                    .map(|v| (v * 1000.0).round() / 1000.0)
+                    .collect::<Vec<_>>()
+            );
+            sys.shutdown().map_err(|e| anyhow!("{e}"))?;
+        }
+        "transformer" => {
+            let (sys, policy, artifacts) = build_system(&args)?;
+            let steps: usize = args.get("steps", 100usize)?;
+            let eta: f32 = args.get("eta", 0.05f32)?;
+            let spec = Arc::new(
+                TransformerSpec::load(&artifacts)
+                    .map_err(|e| anyhow!("{e}"))
+                    .context("run `make artifacts` first")?,
+            );
+            println!(
+                "transformer: {} params, vocab={} d={} layers={}",
+                spec.num_params(),
+                spec.vocab,
+                spec.d_model,
+                spec.n_layers
+            );
+            let pool =
+                Arc::new(ComputePool::start(&artifacts, 1).map_err(|e| anyhow!("{e}"))?);
+            let res = train(
+                &sys,
+                spec,
+                pool,
+                TrainConfig { steps, eta, policy, ..TrainConfig::default() },
+            )
+            .map_err(|e| anyhow!("{e}"))?;
+            println!(
+                "transformer [{}] first-loss={:.4} last-loss={:.4} steps/s={:.2}",
+                policy.name(),
+                res.loss_curve.first().copied().unwrap_or(0.0),
+                res.loss_curve.last().copied().unwrap_or(0.0),
+                res.steps_per_sec
+            );
+            sys.shutdown().map_err(|e| anyhow!("{e}"))?;
+        }
+        "--help" | "-h" | "help" => println!("{USAGE}"),
+        other => {
+            eprintln!("{USAGE}");
+            bail!("unknown command '{other}'");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,207 @@
+//! Metrics: lock-free counters and histograms for the hot paths.
+//!
+//! Three metric families:
+//! * [`NetMetrics`] — messages/bytes by message kind (network pressure);
+//! * [`WorkerMetrics`] — per-worker op counts, block counts and blocked
+//!   time under each consistency gate (the cost of consistency, which is
+//!   exactly what the paper's models trade against staleness);
+//! * [`StalenessHist`] — distribution of observed read staleness (how far
+//!   behind the freshest state reads actually were), the empirical
+//!   counterpart of the `s` bound.
+
+use std::sync::Mutex;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Network counters by payload kind.
+#[derive(Default)]
+pub struct NetMetrics {
+    sends: Mutex<HashMap<&'static str, u64>>,
+    delivers: Mutex<HashMap<&'static str, u64>>,
+    bytes: AtomicU64,
+}
+
+impl NetMetrics {
+    /// Record an outbound message.
+    pub fn record_send(&self, kind: &'static str, bytes: usize) {
+        *self.sends.lock().unwrap().entry(kind).or_insert(0) += 1;
+        self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Record a delivered (post-delay) message.
+    pub fn record_deliver(&self, kind: &'static str) {
+        *self.delivers.lock().unwrap().entry(kind).or_insert(0) += 1;
+    }
+
+    /// Sends of one kind.
+    pub fn sends(&self, kind: &str) -> u64 {
+        self.sends.lock().unwrap().get(kind).copied().unwrap_or(0)
+    }
+
+    /// Total messages sent across kinds.
+    pub fn total_sends(&self) -> u64 {
+        self.sends.lock().unwrap().values().sum()
+    }
+
+    /// Total payload bytes sent.
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of all send counters.
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        let mut v: Vec<(String, u64)> =
+            self.sends.lock().unwrap().iter().map(|(k, v)| (k.to_string(), *v)).collect();
+        v.sort();
+        v
+    }
+}
+
+/// Per-worker operation and blocking counters. All atomic: worker threads
+/// bump them on the hot path, reporters read them concurrently.
+#[derive(Default, Debug)]
+pub struct WorkerMetrics {
+    /// `Get` calls served.
+    pub gets: AtomicU64,
+    /// `Inc` calls applied.
+    pub incs: AtomicU64,
+    /// `Clock()` calls.
+    pub clocks: AtomicU64,
+    /// Times a read blocked on the staleness gate (CAP/SSP/CVAP).
+    pub read_blocks: AtomicU64,
+    /// Nanoseconds spent blocked on reads.
+    pub read_block_ns: AtomicU64,
+    /// Times a write blocked on the value gate (VAP/CVAP).
+    pub write_blocks: AtomicU64,
+    /// Nanoseconds spent blocked on writes.
+    pub write_block_ns: AtomicU64,
+    /// Cache misses that triggered a network pull.
+    pub pulls: AtomicU64,
+}
+
+impl WorkerMetrics {
+    /// Record a read block of the given duration.
+    pub fn add_read_block(&self, d: Duration) {
+        self.read_blocks.fetch_add(1, Ordering::Relaxed);
+        self.read_block_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Record a write block of the given duration.
+    pub fn add_write_block(&self, d: Duration) {
+        self.write_blocks.fetch_add(1, Ordering::Relaxed);
+        self.write_block_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Compact single-line render for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "gets={} incs={} clocks={} pulls={} read_blocks={} ({:.1} ms) write_blocks={} ({:.1} ms)",
+            self.gets.load(Ordering::Relaxed),
+            self.incs.load(Ordering::Relaxed),
+            self.clocks.load(Ordering::Relaxed),
+            self.pulls.load(Ordering::Relaxed),
+            self.read_blocks.load(Ordering::Relaxed),
+            self.read_block_ns.load(Ordering::Relaxed) as f64 / 1e6,
+            self.write_blocks.load(Ordering::Relaxed),
+            self.write_block_ns.load(Ordering::Relaxed) as f64 / 1e6,
+        )
+    }
+}
+
+/// Power-of-two-bucketed histogram of observed read staleness (in clocks).
+/// Bucket `i` counts observations with staleness in `[2^(i-1), 2^i)`;
+/// bucket 0 counts exact-freshness reads.
+pub struct StalenessHist {
+    buckets: [AtomicU64; 16],
+}
+
+impl Default for StalenessHist {
+    fn default() -> Self {
+        StalenessHist { buckets: Default::default() }
+    }
+}
+
+impl StalenessHist {
+    /// Record one read that was `staleness` clocks behind the reader.
+    pub fn record(&self, staleness: u32) {
+        let idx = if staleness == 0 {
+            0
+        } else {
+            (32 - staleness.leading_zeros()).min(15) as usize
+        };
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Maximum *bucket upper bound* with any observation — an upper bound
+    /// on the worst staleness seen (used to check the `s` guarantee).
+    pub fn max_observed_bound(&self) -> u32 {
+        for i in (0..16).rev() {
+            if self.buckets[i].load(Ordering::Relaxed) > 0 {
+                return if i == 0 { 0 } else { 1 << i };
+            }
+        }
+        0
+    }
+
+    /// Bucket counts (for reports).
+    pub fn snapshot(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn net_metrics_accumulate() {
+        let m = NetMetrics::default();
+        m.record_send("push", 100);
+        m.record_send("push", 50);
+        m.record_send("pull", 10);
+        assert_eq!(m.sends("push"), 2);
+        assert_eq!(m.total_sends(), 3);
+        assert_eq!(m.bytes_sent(), 160);
+        let snap = m.snapshot();
+        assert_eq!(snap.len(), 2);
+    }
+
+    #[test]
+    fn worker_metrics_block_accounting() {
+        let m = WorkerMetrics::default();
+        m.add_read_block(Duration::from_millis(2));
+        m.add_write_block(Duration::from_millis(3));
+        m.add_write_block(Duration::from_millis(1));
+        assert_eq!(m.read_blocks.load(Ordering::Relaxed), 1);
+        assert_eq!(m.write_blocks.load(Ordering::Relaxed), 2);
+        assert!(m.summary().contains("write_blocks=2"));
+    }
+
+    #[test]
+    fn staleness_hist_buckets() {
+        let h = StalenessHist::default();
+        h.record(0);
+        h.record(1);
+        h.record(2);
+        h.record(3);
+        h.record(100);
+        assert_eq!(h.count(), 5);
+        assert!(h.max_observed_bound() >= 100);
+        assert!(h.snapshot()[0] == 1);
+    }
+
+    #[test]
+    fn staleness_hist_zero_only() {
+        let h = StalenessHist::default();
+        for _ in 0..10 {
+            h.record(0);
+        }
+        assert_eq!(h.max_observed_bound(), 0);
+    }
+}

@@ -1,0 +1,102 @@
+//! PJRT runtime: load JAX/Pallas computations AOT-lowered to HLO text and
+//! execute them from Rust.
+//!
+//! Build-time Python (`python/compile/aot.py`) lowers each L2 jax function
+//! — with its L1 Pallas kernels inlined (interpret mode) — to **HLO text**
+//! in `artifacts/<name>.hlo.txt`. The Rust side loads and compiles each
+//! artifact once; workers execute on the hot path with zero Python.
+//!
+//! HLO *text* (not a serialized `HloModuleProto`) is the interchange
+//! format: jax ≥ 0.5 emits protos with 64-bit instruction ids that the
+//! crate's pinned XLA rejects; the text parser reassigns ids and
+//! round-trips cleanly (see `/opt/xla-example/README.md`).
+//!
+//! ### Threading
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so PJRT
+//! objects must stay on their owning thread. [`ComputePool`] therefore
+//! runs `num_threads` service threads, each owning its own client and
+//! per-thread compiled-artifact cache; worker threads submit jobs over a
+//! channel and block on the reply. XLA's CPU backend parallelizes inside
+//! one execution, so a small pool (1–2) is usually right.
+
+mod engine;
+mod pool;
+
+pub use engine::{Computation, Engine};
+pub use pool::ComputePool;
+
+use crate::error::{Error, Result};
+
+/// An f32 tensor argument/result: flat row-major data + shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    /// Row-major values.
+    pub data: Vec<f32>,
+    /// Dimensions.
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    /// Build a tensor, validating that the shape covers the data.
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Runtime(format!(
+                "shape {shape:?} ({n} elems) does not match data len {}",
+                data.len()
+            )));
+        }
+        Ok(Tensor { data, shape })
+    }
+
+    /// A zero tensor of the given shape.
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { data: vec![0.0; n], shape }
+    }
+
+    /// A scalar tensor.
+    pub fn scalar(v: f32) -> Self {
+        Tensor { data: vec![v], shape: vec![] }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// The single value of a scalar/1-element tensor.
+    pub fn item(&self) -> Result<f32> {
+        if self.data.len() == 1 {
+            Ok(self.data[0])
+        } else {
+            Err(Error::Runtime(format!("item() on tensor of {} elems", self.data.len())))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_validation() {
+        assert!(Tensor::new(vec![0.0; 6], vec![2, 3]).is_ok());
+        assert!(Tensor::new(vec![0.0; 5], vec![2, 3]).is_err());
+        let z = Tensor::zeros(vec![4, 4]);
+        assert_eq!(z.len(), 16);
+        assert!(!z.is_empty());
+    }
+
+    #[test]
+    fn scalar_and_item() {
+        let s = Tensor::scalar(3.5);
+        assert_eq!(s.item().unwrap(), 3.5);
+        assert!(Tensor::zeros(vec![2]).item().is_err());
+    }
+}

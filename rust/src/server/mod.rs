@@ -1,0 +1,27 @@
+//! Server shards (paper §4, Fig 2).
+//!
+//! A shard is one "server process": it owns the hash-partition of every
+//! table's rows that maps to it, tracks client-process progress with a
+//! vector clock, and services the three communication primitives of §4.3:
+//!
+//! * **Client Push** — apply a batch of updates, then forward it to every
+//!   caching client process (*Server Push*), gated by strong-VAP's
+//!   half-synchronized-mass bound when the table's policy requires it;
+//! * **Client Pull** — reply with a row snapshot, *deferring* the reply
+//!   until the shard's min process clock reaches the freshness the
+//!   clock-bounded reader demands;
+//! * **Server Push** — forward batches (including an echo to the origin,
+//!   which is how origin caches converge) and collect per-process acks;
+//!   when every process has acked a batch the shard reports it **globally
+//!   visible** to the origin — the event that releases VAP-blocked
+//!   writers.
+//!
+//! The shard is single-threaded over its mailbox: one `Msg` at a time,
+//! which makes every per-table mutation trivially atomic — the same
+//! design as Petuum PS's server threads.
+
+mod shard;
+mod visibility;
+
+pub use shard::{ServerShard, TableRegistry};
+pub use visibility::VisibilityTracker;

@@ -1,0 +1,529 @@
+//! The shard event loop.
+
+use std::sync::RwLock;
+use std::collections::HashMap;
+
+use crate::clock::VectorClock;
+use crate::comm::msg::{Msg, Payload, PushBatch, ServerPushBatch};
+use crate::comm::{Endpoint, NetSender};
+use crate::config::PolicyConfig;
+use crate::consistency::ConsistencyModel;
+use crate::error::{Error, Result};
+use crate::table::{RowData, RowId, TableDesc, TableId, TableStore};
+use crate::types::{Clock, NodeId, ProcId, ShardId, WorkerId};
+
+use crate::trace::{Event, TraceRecorder};
+
+use super::visibility::VisibilityTracker;
+
+/// Shared registry of table descriptors. The coordinator inserts a
+/// descriptor at `create_table`; shards and clients lazily instantiate
+/// their per-table state on first access. Registered before any traffic
+/// for the table can exist, so lazy init never races a message.
+#[derive(Default)]
+pub struct TableRegistry {
+    tables: RwLock<HashMap<TableId, TableDesc>>,
+}
+
+impl TableRegistry {
+    /// Register a descriptor (coordinator only). Errors on duplicate id.
+    pub fn insert(&self, desc: TableDesc) -> Result<()> {
+        desc.validate()?;
+        let mut t = self.tables.write().unwrap();
+        if t.contains_key(&desc.id) {
+            return Err(Error::Config(format!("table {:?} already exists", desc.id)));
+        }
+        t.insert(desc.id, desc);
+        Ok(())
+    }
+
+    /// Look up a descriptor.
+    pub fn get(&self, id: TableId) -> Result<TableDesc> {
+        self.tables.read().unwrap().get(&id).cloned().ok_or(Error::UnknownTable(id))
+    }
+
+    /// All registered table ids (sorted).
+    pub fn ids(&self) -> Vec<TableId> {
+        let mut v: Vec<TableId> = self.tables.read().unwrap().keys().copied().collect();
+        v.sort();
+        v
+    }
+}
+
+/// Per-table state held by one shard.
+struct ServerTable {
+    desc: TableDesc,
+    model: ConsistencyModel,
+    store: TableStore,
+    /// Highest applied batch id per origin (monotone; FIFO links).
+    applied_upto: HashMap<ProcId, u64>,
+    vis: VisibilityTracker,
+}
+
+impl ServerTable {
+    fn new(desc: TableDesc, num_procs: u32) -> Self {
+        let model = ConsistencyModel::new(desc.policy);
+        let store = TableStore::new(desc.row_kind, desc.row_width);
+        ServerTable {
+            desc,
+            model,
+            store,
+            applied_upto: HashMap::new(),
+            vis: VisibilityTracker::new(num_procs),
+        }
+    }
+}
+
+/// A deferred pull awaiting the shard's min clock.
+struct DeferredPull {
+    needed: Clock,
+    table: TableId,
+    row: RowId,
+    worker: WorkerId,
+    requester: NodeId,
+}
+
+/// One server shard: owns its partition of every table, applies pushes,
+/// answers pulls, forwards server pushes and tracks visibility.
+pub struct ServerShard {
+    id: ShardId,
+    num_client_procs: u32,
+    registry: std::sync::Arc<TableRegistry>,
+    net: NetSender,
+    tables: HashMap<TableId, ServerTable>,
+    vclock: VectorClock<ProcId>,
+    deferred: Vec<DeferredPull>,
+    /// Highest min-clock frontier broadcast so far (monotone).
+    last_broadcast: Clock,
+    trace: std::sync::Arc<TraceRecorder>,
+}
+
+impl ServerShard {
+    /// Build shard state (run it with [`ServerShard::run`] on its own
+    /// thread).
+    pub fn new(
+        id: ShardId,
+        num_client_procs: u32,
+        registry: std::sync::Arc<TableRegistry>,
+        net: NetSender,
+    ) -> Self {
+        Self::with_trace(
+            id,
+            num_client_procs,
+            registry,
+            net,
+            std::sync::Arc::new(TraceRecorder::new(false)),
+        )
+    }
+
+    /// Build shard state with an event-trace recorder attached.
+    pub fn with_trace(
+        id: ShardId,
+        num_client_procs: u32,
+        registry: std::sync::Arc<TableRegistry>,
+        net: NetSender,
+        trace: std::sync::Arc<TraceRecorder>,
+    ) -> Self {
+        let vclock = VectorClock::new((0..num_client_procs).map(ProcId));
+        ServerShard {
+            id,
+            num_client_procs,
+            registry,
+            net,
+            tables: HashMap::new(),
+            vclock,
+            deferred: Vec::new(),
+            last_broadcast: 0,
+            trace,
+        }
+    }
+
+    /// The frontier the shard may safely *assert* to clients: the min
+    /// process clock, clamped below any strong-VAP-held batch (whose
+    /// updates have been applied but not yet forwarded). For weak models
+    /// this is simply the vector-clock minimum.
+    fn effective_min(&self) -> Clock {
+        let mut m = self.vclock.min_clock();
+        for t in self.tables.values() {
+            if let Some(held) = t.vis.min_held_clock() {
+                m = m.min(held.saturating_sub(1));
+            }
+        }
+        m
+    }
+
+    /// Broadcast / service deferred pulls if the effective frontier moved.
+    fn after_progress(&mut self) {
+        let m = self.effective_min();
+        if m <= self.last_broadcast && !(m == 0 && self.last_broadcast == 0) {
+            return;
+        }
+        if m > self.last_broadcast {
+            self.last_broadcast = m;
+            self.trace.record(|| Event::Broadcast {
+                at: std::time::Instant::now(),
+                shard: self.id.0,
+                clock: m,
+            });
+            for p in 0..self.num_client_procs {
+                let _ = self.net.send(Msg {
+                    src: NodeId::Server(self.id),
+                    dst: NodeId::Client(ProcId(p)),
+                    payload: Payload::MinClock { shard: self.id, clock: m },
+                });
+            }
+        }
+        // Service deferred pulls that are now satisfiable.
+        let (ready, rest): (Vec<_>, Vec<_>) =
+            self.deferred.drain(..).partition(|d| d.needed <= m);
+        self.deferred = rest;
+        for d in ready {
+            self.reply_pull(d.requester, d.table, d.row, d.worker);
+        }
+    }
+
+    /// Shard's node id on the bus.
+    pub fn node(&self) -> NodeId {
+        NodeId::Server(self.id)
+    }
+
+    /// Event loop: process messages until `Shutdown` (or bus close).
+    pub fn run(mut self, endpoint: Endpoint) {
+        loop {
+            match endpoint.recv() {
+                Ok(msg) => {
+                    if !self.handle(msg) {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Handle one message; returns `false` on shutdown. Public so unit and
+    /// property tests can drive a shard synchronously without threads.
+    pub fn handle(&mut self, msg: Msg) -> bool {
+        match msg.payload {
+            Payload::PushUpdates(batch) => self.on_push(batch),
+            Payload::PullRow { table, row, needed_clock, worker } => {
+                self.on_pull(msg.src, table, row, needed_clock, worker)
+            }
+            Payload::ClockNotify { proc, clock } => self.on_clock(proc, clock),
+            Payload::PushAck { table, origin, batch_id, .. } => {
+                self.on_push_ack(table, origin, batch_id)
+            }
+            Payload::Shutdown => return false,
+            // Server never receives these:
+            Payload::PullReply { .. }
+            | Payload::ServerPush(_)
+            | Payload::VisibilityAck { .. }
+            | Payload::MinClock { .. } => {}
+        }
+        true
+    }
+
+    /// Current min client-process clock at this shard (tests).
+    pub fn min_clock(&self) -> Clock {
+        self.vclock.min_clock()
+    }
+
+    /// Read a row snapshot directly (tests).
+    pub fn row_snapshot(&self, table: TableId, row: RowId) -> Option<RowData> {
+        self.tables.get(&table).and_then(|t| t.store.get(row)).map(|sr| sr.data.clone())
+    }
+
+    fn table(&mut self, id: TableId) -> &mut ServerTable {
+        if !self.tables.contains_key(&id) {
+            let desc = self.registry.get(id).expect("message for unregistered table");
+            self.tables.insert(id, ServerTable::new(desc, self.num_client_procs));
+        }
+        self.tables.get_mut(&id).unwrap()
+    }
+
+    fn on_push(&mut self, batch: PushBatch) {
+        let num_procs = self.num_client_procs;
+        self.trace.record(|| Event::ShardApplied {
+            at: std::time::Instant::now(),
+            shard: self.id.0,
+            origin: batch.origin,
+            batch_id: batch.batch_id,
+            rows: batch.updates.len(),
+        });
+        let t = self.table(batch.table);
+        // Apply to the authoritative partition.
+        for (row, u) in &batch.updates {
+            t.store.apply(*row, u);
+        }
+        // FIFO links + monotone batcher ids ⇒ strictly increasing.
+        let prev = t.applied_upto.insert(batch.origin, batch.batch_id);
+        debug_assert!(prev.map_or(true, |p| p < batch.batch_id), "batch reorder from origin");
+        t.vis.observe(&batch);
+        // Admit through the (strong-VAP) release gate, then forward.
+        if let Some(b) = t.vis.admit(&t.model, batch) {
+            let min_clock = self.effective_min();
+            Self::forward(&self.net, self.id, num_procs, min_clock, b);
+        }
+    }
+
+    fn forward(net: &NetSender, shard: ShardId, num_procs: u32, min_clock: Clock, b: PushBatch) {
+        for p in 0..num_procs {
+            let push = ServerPushBatch {
+                table: b.table,
+                origin: b.origin,
+                batch_id: b.batch_id,
+                updates: b.updates.clone(),
+                min_clock,
+            };
+            let _ = net.send(Msg {
+                src: NodeId::Server(shard),
+                dst: NodeId::Client(ProcId(p)),
+                payload: Payload::ServerPush(push),
+            });
+        }
+    }
+
+    fn on_pull(
+        &mut self,
+        requester: NodeId,
+        table: TableId,
+        row: RowId,
+        needed: Clock,
+        worker: WorkerId,
+    ) {
+        if self.effective_min() >= needed {
+            self.reply_pull(requester, table, row, worker);
+        } else {
+            self.deferred.push(DeferredPull { needed, table, row, worker, requester });
+        }
+    }
+
+    fn reply_pull(&mut self, requester: NodeId, table: TableId, row: RowId, worker: WorkerId) {
+        let min_clock = self.effective_min();
+        let t = self.table(table);
+        let data = t
+            .store
+            .get(row)
+            .map(|sr| sr.data.clone())
+            .unwrap_or_else(|| RowData::zeros(t.desc.row_kind, t.desc.row_width));
+        let _ = self.net.send(Msg {
+            src: NodeId::Server(self.id),
+            dst: requester,
+            payload: Payload::PullReply { table, row, data, clock: min_clock, worker },
+        });
+    }
+
+    fn on_clock(&mut self, proc: ProcId, clock: Clock) {
+        if self.vclock.advance_to(proc, clock).is_some() {
+            self.after_progress();
+        }
+    }
+
+    fn on_push_ack(&mut self, table: TableId, origin: ProcId, batch_id: u64) {
+        let num_procs = self.num_client_procs;
+        let shard = self.id;
+        let released = {
+            let t = self.table(table);
+            if !t.vis.ack(origin, batch_id) {
+                return;
+            }
+            t.vis.release_ready(&t.model)
+        };
+        // Globally visible: notify the origin (releases VAP writers).
+        let _ = self.net.send(Msg {
+            src: NodeId::Server(shard),
+            dst: NodeId::Client(origin),
+            payload: Payload::VisibilityAck { table, batch_id },
+        });
+        // Mass released: forward any batches the gate now admits.
+        let min_clock = self.effective_min();
+        for b in released {
+            Self::forward(&self.net, shard, num_procs, min_clock, b);
+        }
+        // Releasing holds may raise the broadcastable frontier.
+        self.after_progress();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Network;
+    use crate::config::NetConfig;
+    use crate::table::{RowKind, RowUpdate};
+    use std::sync::Arc;
+
+    fn setup(num_procs: u32, policy: PolicyConfig) -> (ServerShard, Vec<Endpoint>, Network) {
+        let net = Network::new(NetConfig::default());
+        let registry = Arc::new(TableRegistry::default());
+        registry
+            .insert(TableDesc {
+                id: TableId(0),
+                num_rows: 64,
+                row_width: 4,
+                row_kind: RowKind::Dense,
+                policy,
+            })
+            .unwrap();
+        let shard = ServerShard::new(ShardId(0), num_procs, registry, net.sender());
+        let _sep = net.register(NodeId::Server(ShardId(0)));
+        let clients: Vec<Endpoint> =
+            (0..num_procs).map(|p| net.register(NodeId::Client(ProcId(p)))).collect();
+        (shard, clients, net)
+    }
+
+    fn push(origin: u32, id: u64, row: u64, delta: f32) -> Msg {
+        Msg {
+            src: NodeId::Client(ProcId(origin)),
+            dst: NodeId::Server(ShardId(0)),
+            payload: Payload::PushUpdates(PushBatch {
+                table: TableId(0),
+                origin: ProcId(origin),
+                batch_id: id,
+                updates: vec![(RowId(row), RowUpdate::single(0, delta))],
+                clock: 1,
+            }),
+        }
+    }
+
+    #[test]
+    fn push_applies_and_forwards_to_all_procs() {
+        let (mut shard, clients, _net) = setup(2, PolicyConfig::Cap { staleness: 1 });
+        shard.handle(push(0, 0, 3, 2.5));
+        assert_eq!(shard.row_snapshot(TableId(0), RowId(3)).unwrap().get(0), Some(2.5));
+        for c in &clients {
+            match c.recv().unwrap().payload {
+                Payload::ServerPush(b) => {
+                    assert_eq!(b.batch_id, 0);
+                    assert_eq!(b.origin, ProcId(0));
+                }
+                p => panic!("expected ServerPush, got {}", p.kind()),
+            }
+        }
+    }
+
+    #[test]
+    fn pull_defers_until_min_clock() {
+        let (mut shard, clients, _net) = setup(2, PolicyConfig::Ssp { staleness: 0 });
+        // Worker needs clock 1; min clock is 0 → deferred.
+        shard.handle(Msg {
+            src: NodeId::Client(ProcId(0)),
+            dst: NodeId::Server(ShardId(0)),
+            payload: Payload::PullRow {
+                table: TableId(0),
+                row: RowId(1),
+                needed_clock: 1,
+                worker: WorkerId(0),
+            },
+        });
+        assert!(clients[0].try_recv().is_none(), "pull must be deferred");
+        // proc 1 reaches clock 1, then proc 0 — min advances.
+        shard.handle(Msg {
+            src: NodeId::Client(ProcId(1)),
+            dst: NodeId::Server(ShardId(0)),
+            payload: Payload::ClockNotify { proc: ProcId(1), clock: 1 },
+        });
+        assert!(clients[0].try_recv().is_none());
+        shard.handle(Msg {
+            src: NodeId::Client(ProcId(0)),
+            dst: NodeId::Server(ShardId(0)),
+            payload: Payload::ClockNotify { proc: ProcId(0), clock: 1 },
+        });
+        // Client 0 gets MinClock broadcast + the deferred PullReply.
+        let mut got_reply = false;
+        let mut got_minclock = false;
+        while let Some(m) = clients[0].try_recv() {
+            match m.payload {
+                Payload::PullReply { clock, worker, .. } => {
+                    assert_eq!(clock, 1);
+                    assert_eq!(worker, WorkerId(0));
+                    got_reply = true;
+                }
+                Payload::MinClock { clock, .. } => {
+                    assert_eq!(clock, 1);
+                    got_minclock = true;
+                }
+                _ => {}
+            }
+        }
+        assert!(got_reply && got_minclock);
+    }
+
+    #[test]
+    fn all_acks_trigger_visibility_to_origin() {
+        let (mut shard, clients, _net) = setup(3, PolicyConfig::Vap { v_thr: 8.0, strong: false });
+        shard.handle(push(1, 0, 0, 1.0));
+        // drain server pushes
+        for c in &clients {
+            assert!(matches!(c.recv().unwrap().payload, Payload::ServerPush(_)));
+        }
+        for by in 0..3u32 {
+            shard.handle(Msg {
+                src: NodeId::Client(ProcId(by)),
+                dst: NodeId::Server(ShardId(0)),
+                payload: Payload::PushAck {
+                    table: TableId(0),
+                    origin: ProcId(1),
+                    batch_id: 0,
+                    by: ProcId(by),
+                },
+            });
+        }
+        match clients[1].recv().unwrap().payload {
+            Payload::VisibilityAck { batch_id, .. } => assert_eq!(batch_id, 0),
+            p => panic!("expected VisibilityAck, got {}", p.kind()),
+        }
+        assert!(clients[0].try_recv().is_none(), "only origin gets the visibility ack");
+    }
+
+    #[test]
+    fn strong_vap_defers_forwarding_until_acks() {
+        let (mut shard, clients, _net) = setup(2, PolicyConfig::Vap { v_thr: 4.0, strong: true });
+        shard.handle(push(0, 0, 7, 3.0));
+        shard.handle(push(0, 1, 7, 3.0)); // inflight would be 6 > 4 → held
+        // Each client got exactly one ServerPush (batch 0).
+        for c in &clients {
+            match c.recv().unwrap().payload {
+                Payload::ServerPush(b) => assert_eq!(b.batch_id, 0),
+                p => panic!("unexpected {}", p.kind()),
+            }
+            assert!(c.try_recv().is_none(), "batch 1 must be held");
+        }
+        // Both procs ack batch 0 → batch 1 released.
+        for by in 0..2u32 {
+            shard.handle(Msg {
+                src: NodeId::Client(ProcId(by)),
+                dst: NodeId::Server(ShardId(0)),
+                payload: Payload::PushAck {
+                    table: TableId(0),
+                    origin: ProcId(0),
+                    batch_id: 0,
+                    by: ProcId(by),
+                },
+            });
+        }
+        // origin got VisibilityAck(0); everyone now gets ServerPush(1).
+        let mut saw_push1 = 0;
+        for c in &clients {
+            while let Some(m) = c.try_recv() {
+                if let Payload::ServerPush(b) = m.payload {
+                    assert_eq!(b.batch_id, 1);
+                    saw_push1 += 1;
+                }
+            }
+        }
+        assert_eq!(saw_push1, 2);
+        // Server value reflects both batches regardless of gating.
+        assert_eq!(shard.row_snapshot(TableId(0), RowId(7)).unwrap().get(0), Some(6.0));
+    }
+
+    #[test]
+    fn shutdown_stops_loop() {
+        let (mut shard, _clients, _net) = setup(1, PolicyConfig::Bsp);
+        assert!(!shard.handle(Msg {
+            src: NodeId::Coordinator,
+            dst: NodeId::Server(ShardId(0)),
+            payload: Payload::Shutdown,
+        }));
+    }
+}

@@ -1,0 +1,305 @@
+//! Batch-visibility bookkeeping and the strong-VAP release gate.
+//!
+//! A pushed batch goes through three states at the owning shard:
+//!
+//! 1. **applied** — merged into the shard's authoritative rows;
+//! 2. **in flight** ("half-synchronized" once ≥ 1 foreign process applied
+//!    it) — forwarded to the `P` client processes, awaiting their acks;
+//! 3. **globally visible** — all `P` acks received; the shard notifies the
+//!    origin, whose VAP accounting releases the batch's mass.
+//!
+//! Under **strong VAP** (paper §2.2) the transition 1→2 is gated: the
+//! total in-flight L1 mass per parameter may not exceed
+//! `max(u_obs, v_thr)`. Held batches queue **per origin** so FIFO update
+//! visibility per worker is preserved (releasing origin B's batch while
+//! origin A's waits is allowed — FIFO is per sender).
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::comm::msg::PushBatch;
+use crate::consistency::ConsistencyModel;
+use crate::table::RowId;
+use crate::types::ProcId;
+
+/// Per-parameter key used for in-flight mass accounting.
+pub type ParamKey = (RowId, u32);
+
+/// Tracks ack counts, in-flight mass and held batches for one table on one
+/// shard.
+pub struct VisibilityTracker {
+    /// Expected acks per batch = number of client processes.
+    num_procs: u32,
+    /// `(origin, batch_id) → acks still missing`.
+    pending: HashMap<(ProcId, u64), u32>,
+    /// Strong-VAP: in-flight L1 mass per parameter.
+    inflight: HashMap<ParamKey, f32>,
+    /// Strong-VAP: the per-parameter masses each in-flight batch carries
+    /// (so they can be released on final ack).
+    batch_mass: HashMap<(ProcId, u64), Vec<(ParamKey, f32)>>,
+    /// Strong-VAP: batches held back by the release gate, FIFO per origin.
+    held: HashMap<ProcId, VecDeque<PushBatch>>,
+    /// Largest single-update magnitude observed (the paper's `u`).
+    u_obs: f32,
+}
+
+impl VisibilityTracker {
+    /// New tracker expecting `num_procs` acks per batch.
+    pub fn new(num_procs: u32) -> Self {
+        VisibilityTracker {
+            num_procs,
+            pending: HashMap::new(),
+            inflight: HashMap::new(),
+            batch_mass: HashMap::new(),
+            held: HashMap::new(),
+            u_obs: 0.0,
+        }
+    }
+
+    /// Observed per-update magnitude bound `u` so far.
+    pub fn u_obs(&self) -> f32 {
+        self.u_obs
+    }
+
+    /// Record the magnitudes contained in a freshly applied batch (keeps
+    /// `u_obs` current regardless of gating).
+    pub fn observe(&mut self, batch: &PushBatch) {
+        for (_, u) in &batch.updates {
+            self.u_obs = self.u_obs.max(u.magnitude());
+        }
+    }
+
+    /// Try to admit `batch` for forwarding under `model`'s release gate.
+    /// Returns `Some(batch)` if it may be forwarded now (in-flight
+    /// accounting already updated), or `None` if it was queued. Batches
+    /// from an origin with queued predecessors are always queued to keep
+    /// per-origin FIFO.
+    pub fn admit(&mut self, model: &ConsistencyModel, batch: PushBatch) -> Option<PushBatch> {
+        let origin_queue_nonempty =
+            self.held.get(&batch.origin).map_or(false, |q| !q.is_empty());
+        if origin_queue_nonempty || !self.gate_passes(model, &batch) {
+            self.held.entry(batch.origin).or_default().push_back(batch);
+            return None;
+        }
+        self.start_flight(&batch);
+        Some(batch)
+    }
+
+    /// Record one process's ack of `(origin, batch_id)`. Returns `true`
+    /// when that was the final ack (batch now globally visible).
+    pub fn ack(&mut self, origin: ProcId, batch_id: u64) -> bool {
+        match self.pending.get_mut(&(origin, batch_id)) {
+            Some(n) => {
+                *n -= 1;
+                if *n == 0 {
+                    self.pending.remove(&(origin, batch_id));
+                    if let Some(masses) = self.batch_mass.remove(&(origin, batch_id)) {
+                        for (param, m) in masses {
+                            if let Some(v) = self.inflight.get_mut(&param) {
+                                *v -= m;
+                                if *v <= 0.0 {
+                                    self.inflight.remove(&param);
+                                }
+                            }
+                        }
+                    }
+                    true
+                } else {
+                    false
+                }
+            }
+            None => false, // duplicate/unknown ack: ignore
+        }
+    }
+
+    /// After a release of in-flight mass, pop every held batch that now
+    /// passes the gate (per-origin FIFO, round-robin across origins).
+    pub fn release_ready(&mut self, model: &ConsistencyModel) -> Vec<PushBatch> {
+        let mut out = Vec::new();
+        loop {
+            let mut progressed = false;
+            let origins: Vec<ProcId> = self
+                .held
+                .iter()
+                .filter(|(_, q)| !q.is_empty())
+                .map(|(o, _)| *o)
+                .collect();
+            for origin in origins {
+                let passes = {
+                    let q = self.held.get(&origin).unwrap();
+                    q.front().map_or(false, |b| self.gate_passes(model, b))
+                };
+                if passes {
+                    let batch = self.held.get_mut(&origin).unwrap().pop_front().unwrap();
+                    self.start_flight(&batch);
+                    out.push(batch);
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Number of batches currently held by the gate (all origins).
+    pub fn held_count(&self) -> usize {
+        self.held.values().map(|q| q.len()).sum()
+    }
+
+    /// The smallest clock stamp over all held batches, if any. The shard
+    /// clamps its broadcast min clock below this: a `MinClock(m)`
+    /// broadcast asserts every update stamped `≤ m` has been *forwarded*,
+    /// which held batches would violate (matters for strong CVAP, where
+    /// the clock gate and the release gate coexist).
+    pub fn min_held_clock(&self) -> Option<crate::types::Clock> {
+        self.held.values().flat_map(|q| q.iter().map(|b| b.clock)).min()
+    }
+
+    /// Number of batches awaiting acks.
+    pub fn in_flight_count(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Current in-flight mass of one parameter (tests/benches).
+    pub fn inflight_mass(&self, param: ParamKey) -> f32 {
+        self.inflight.get(&param).copied().unwrap_or(0.0)
+    }
+
+    fn gate_passes(&self, model: &ConsistencyModel, batch: &PushBatch) -> bool {
+        for (row, u) in &batch.updates {
+            for (col, v) in u.iter_nonzero() {
+                let key = (*row, col);
+                let inflight = self.inflight.get(&key).copied().unwrap_or(0.0);
+                if model.release_blocked(inflight, v.abs(), self.u_obs) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    fn start_flight(&mut self, batch: &PushBatch) {
+        self.pending.insert((batch.origin, batch.batch_id), self.num_procs);
+        let mut masses = Vec::new();
+        for (row, u) in &batch.updates {
+            for (col, v) in u.iter_nonzero() {
+                let key = (*row, col);
+                *self.inflight.entry(key).or_insert(0.0) += v.abs();
+                masses.push((key, v.abs()));
+            }
+        }
+        self.batch_mass.insert((batch.origin, batch.batch_id), masses);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PolicyConfig;
+    use crate::table::{RowUpdate, TableId};
+
+    fn batch(origin: u32, id: u64, row: u64, delta: f32) -> PushBatch {
+        PushBatch {
+            table: TableId(0),
+            origin: ProcId(origin),
+            batch_id: id,
+            updates: vec![(RowId(row), RowUpdate::single(0, delta))],
+            clock: 0,
+        }
+    }
+
+    fn weak() -> ConsistencyModel {
+        ConsistencyModel::new(PolicyConfig::Vap { v_thr: 4.0, strong: false })
+    }
+    fn strong() -> ConsistencyModel {
+        ConsistencyModel::new(PolicyConfig::Vap { v_thr: 4.0, strong: true })
+    }
+
+    #[test]
+    fn weak_vap_admits_everything() {
+        let mut t = VisibilityTracker::new(2);
+        let m = weak();
+        for i in 0..20 {
+            let b = batch(0, i, 0, 3.0);
+            t.observe(&b);
+            assert!(t.admit(&m, b).is_some());
+        }
+        assert_eq!(t.held_count(), 0);
+        assert_eq!(t.in_flight_count(), 20);
+    }
+
+    #[test]
+    fn final_ack_marks_visible() {
+        let mut t = VisibilityTracker::new(3);
+        let m = weak();
+        let b = batch(1, 7, 0, 1.0);
+        t.observe(&b);
+        t.admit(&m, b).unwrap();
+        assert!(!t.ack(ProcId(1), 7));
+        assert!(!t.ack(ProcId(1), 7));
+        assert!(t.ack(ProcId(1), 7), "third ack is final");
+        assert!(!t.ack(ProcId(1), 7), "duplicate ack ignored");
+        assert_eq!(t.in_flight_count(), 0);
+    }
+
+    #[test]
+    fn strong_gate_holds_second_batch_on_same_param() {
+        let mut t = VisibilityTracker::new(2);
+        let m = strong();
+        // v_thr = 4: first batch of mass 3 admitted; second of mass 3 on the
+        // same param would make in-flight 6 > 4 → held.
+        let b1 = batch(0, 0, 5, 3.0);
+        t.observe(&b1);
+        assert!(t.admit(&m, b1).is_some());
+        let b2 = batch(0, 1, 5, 3.0);
+        t.observe(&b2);
+        assert!(t.admit(&m, b2).is_none());
+        assert_eq!(t.held_count(), 1);
+        assert_eq!(t.inflight_mass((RowId(5), 0)), 3.0);
+
+        // Acks for b1 release mass; b2 becomes forwardable.
+        t.ack(ProcId(0), 0);
+        assert!(t.ack(ProcId(0), 0));
+        let released = t.release_ready(&m);
+        assert_eq!(released.len(), 1);
+        assert_eq!(released[0].batch_id, 1);
+        assert_eq!(t.inflight_mass((RowId(5), 0)), 3.0);
+    }
+
+    #[test]
+    fn strong_gate_preserves_per_origin_fifo() {
+        let mut t = VisibilityTracker::new(1);
+        let m = strong();
+        let b1 = batch(0, 0, 5, 3.0);
+        t.observe(&b1);
+        t.admit(&m, b1).unwrap();
+        // batch 1 held (same param), batch 2 touches another row but must
+        // queue behind batch 1 (same origin).
+        let b2 = batch(0, 1, 5, 3.0);
+        t.observe(&b2);
+        assert!(t.admit(&m, b2).is_none());
+        let b3 = batch(0, 2, 99, 0.5);
+        t.observe(&b3);
+        assert!(t.admit(&m, b3).is_none(), "must queue behind held predecessor");
+        // another origin is NOT blocked
+        let b4 = batch(1, 0, 99, 0.5);
+        t.observe(&b4);
+        assert!(t.admit(&m, b4).is_some());
+
+        t.ack(ProcId(0), 0);
+        let rel = t.release_ready(&m);
+        let ids: Vec<u64> = rel.iter().map(|b| b.batch_id).collect();
+        assert_eq!(ids, vec![1, 2], "held batches release in origin order");
+    }
+
+    #[test]
+    fn oversized_batch_admitted_when_param_idle() {
+        let mut t = VisibilityTracker::new(1);
+        let m = strong();
+        let b = batch(0, 0, 1, 100.0); // way over v_thr
+        t.observe(&b);
+        assert_eq!(t.u_obs(), 100.0);
+        assert!(t.admit(&m, b).is_some(), "idle param admits oversized batch");
+    }
+}

@@ -1,0 +1,145 @@
+//! Tables, rows and row updates (paper §4.1).
+//!
+//! Petuum PS organizes shared parameters as *tables*: a parameter is
+//! identified by `(table id, row id, column id)`. Rows are the unit of
+//! distribution (hash-partitioned over server shards) and of transmission
+//! (pulls and pushes move whole rows / row-deltas). Both **dense** rows
+//! (`Vec<f32>`) and **sparse** rows (index→value maps) are supported, and
+//! different tables may use different consistency models.
+
+mod row;
+mod storage;
+
+pub use row::{RowData, RowUpdate};
+pub use storage::TableStore;
+
+
+use crate::config::PolicyConfig;
+use crate::types::ShardId;
+
+/// Identifies one table. The data in one table is homogeneous (f32 here)
+/// and one table is bound to one consistency policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TableId(pub u32);
+
+/// Identifies a row within a table. Rows are the unit of distribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RowId(pub u64);
+
+/// Dense or sparse row representation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowKind {
+    /// Fixed-width `Vec<f32>` row; column ids are direct indices.
+    Dense,
+    /// Map from column id to value; absent columns read as 0.0.
+    Sparse,
+}
+
+/// Everything needed to create a table on every shard and client.
+#[derive(Debug, Clone)]
+pub struct TableDesc {
+    /// Table id, chosen by the application; must be unique.
+    pub id: TableId,
+    /// Number of rows. Row ids must be `< num_rows`.
+    pub num_rows: u64,
+    /// Width of each row (dense: exact; sparse: column-id upper bound).
+    pub row_width: u32,
+    /// Dense or sparse rows.
+    pub row_kind: RowKind,
+    /// The consistency model governing this table. Different tables may use
+    /// different models (paper §4.1).
+    pub policy: PolicyConfig,
+}
+
+impl TableDesc {
+    /// The shard that owns `row`, by hash partitioning. Row is the unit of
+    /// data distribution (paper §4.1); we use a multiplicative hash so
+    /// consecutive row ids spread across shards (LDA touches word ids in
+    /// corpus order — modulo would be fine, but hashing also decorrelates
+    /// hot vocabulary prefixes).
+    pub fn shard_of(&self, row: RowId, num_shards: u32) -> ShardId {
+        // SplitMix64 finalizer — cheap, well-distributed, stable across runs.
+        let mut z = row.0 ^ (self.id.0 as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        ShardId((z % num_shards as u64) as u32)
+    }
+
+    /// Validate the descriptor (row counts, widths) before creation.
+    pub fn validate(&self) -> crate::error::Result<()> {
+        if self.num_rows == 0 {
+            return Err(crate::error::Error::Config(format!(
+                "table {:?}: num_rows must be > 0",
+                self.id
+            )));
+        }
+        if self.row_width == 0 {
+            return Err(crate::error::Error::Config(format!(
+                "table {:?}: row_width must be > 0",
+                self.id
+            )));
+        }
+        self.policy.validate()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn desc(id: u32) -> TableDesc {
+        TableDesc {
+            id: TableId(id),
+            num_rows: 1000,
+            row_width: 8,
+            row_kind: RowKind::Dense,
+            policy: PolicyConfig::Ssp { staleness: 1 },
+        }
+    }
+
+    #[test]
+    fn shard_partitioning_is_stable_and_in_range() {
+        let d = desc(1);
+        for r in 0..1000u64 {
+            let s1 = d.shard_of(RowId(r), 4);
+            let s2 = d.shard_of(RowId(r), 4);
+            assert_eq!(s1, s2);
+            assert!(s1.0 < 4);
+        }
+    }
+
+    #[test]
+    fn shard_partitioning_is_roughly_balanced() {
+        let d = desc(2);
+        let mut counts = [0usize; 8];
+        for r in 0..8000u64 {
+            counts[d.shard_of(RowId(r), 8).0 as usize] += 1;
+        }
+        for &c in &counts {
+            // expect ~1000 per shard; allow 25% imbalance
+            assert!((750..=1250).contains(&c), "imbalanced: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn different_tables_hash_rows_differently() {
+        let d1 = desc(1);
+        let d2 = desc(2);
+        let differs = (0..100u64)
+            .any(|r| d1.shard_of(RowId(r), 16) != d2.shard_of(RowId(r), 16));
+        assert!(differs);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_tables() {
+        let mut d = desc(0);
+        d.num_rows = 0;
+        assert!(d.validate().is_err());
+        let mut d = desc(0);
+        d.row_width = 0;
+        assert!(d.validate().is_err());
+        assert!(desc(0).validate().is_ok());
+    }
+}

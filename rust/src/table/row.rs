@@ -1,0 +1,290 @@
+//! Row values and row updates.
+//!
+//! Updates are deltas applied with the abelian `+` operator (paper §2:
+//! `θ ← θ + δ`, associative and commutative), so updates from different
+//! workers can be aggregated by summation in any order — the property every
+//! consistency model here leans on.
+
+use std::collections::BTreeMap;
+
+/// The materialized value of one row: dense vector or sparse map.
+///
+/// Sparse rows read missing columns as `0.0` and drop entries that return
+/// to exactly `0.0` after an update (LDA count rows shrink when topics die).
+#[derive(Debug, Clone, PartialEq)]
+pub enum RowData {
+    /// Fixed-width dense row.
+    Dense(Vec<f32>),
+    /// Sparse row: sorted column→value map.
+    Sparse(BTreeMap<u32, f32>),
+}
+
+impl RowData {
+    /// A zeroed row of the given kind/width.
+    pub fn zeros(kind: super::RowKind, width: u32) -> Self {
+        match kind {
+            super::RowKind::Dense => RowData::Dense(vec![0.0; width as usize]),
+            super::RowKind::Sparse => RowData::Sparse(BTreeMap::new()),
+        }
+    }
+
+    /// Read one column (sparse absent ⇒ 0.0; dense out-of-range ⇒ None).
+    pub fn get(&self, col: u32) -> Option<f32> {
+        match self {
+            RowData::Dense(v) => v.get(col as usize).copied(),
+            RowData::Sparse(m) => Some(m.get(&col).copied().unwrap_or(0.0)),
+        }
+    }
+
+    /// Materialize as a dense vector of `width` (sparse fills zeros).
+    pub fn to_dense(&self, width: u32) -> Vec<f32> {
+        match self {
+            RowData::Dense(v) => v.clone(),
+            RowData::Sparse(m) => {
+                let mut out = vec![0.0; width as usize];
+                for (&c, &v) in m {
+                    if (c as usize) < out.len() {
+                        out[c as usize] = v;
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Apply an update delta in place.
+    pub fn apply(&mut self, update: &RowUpdate) {
+        match (self, update) {
+            (RowData::Dense(v), RowUpdate::Dense(d)) => {
+                for (x, dx) in v.iter_mut().zip(d.iter()) {
+                    *x += dx;
+                }
+            }
+            (RowData::Dense(v), RowUpdate::Sparse(pairs)) => {
+                for &(c, dv) in pairs {
+                    if let Some(x) = v.get_mut(c as usize) {
+                        *x += dv;
+                    }
+                }
+            }
+            (RowData::Sparse(m), RowUpdate::Sparse(pairs)) => {
+                for &(c, dv) in pairs {
+                    let e = m.entry(c).or_insert(0.0);
+                    *e += dv;
+                    if *e == 0.0 {
+                        m.remove(&c);
+                    }
+                }
+            }
+            (RowData::Sparse(m), RowUpdate::Dense(d)) => {
+                for (c, &dv) in d.iter().enumerate() {
+                    if dv != 0.0 {
+                        let e = m.entry(c as u32).or_insert(0.0);
+                        *e += dv;
+                        if *e == 0.0 {
+                            m.remove(&(c as u32));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Number of explicitly stored values.
+    pub fn nnz(&self) -> usize {
+        match self {
+            RowData::Dense(v) => v.len(),
+            RowData::Sparse(m) => m.len(),
+        }
+    }
+
+    /// Approximate serialized size in bytes (for the bandwidth simulator).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            RowData::Dense(v) => 4 * v.len(),
+            RowData::Sparse(m) => 8 * m.len(),
+        }
+    }
+}
+
+/// A delta to one row: dense vector of per-column deltas, or sparse
+/// `(col, delta)` pairs. Updates form the oplog entries, the wire batches
+/// and the VAP magnitude-accounting unit.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RowUpdate {
+    /// Per-column deltas, aligned with a dense row.
+    Dense(Vec<f32>),
+    /// Sorted-by-construction `(col, delta)` pairs.
+    Sparse(Vec<(u32, f32)>),
+}
+
+impl RowUpdate {
+    /// A single-column delta.
+    pub fn single(col: u32, delta: f32) -> Self {
+        RowUpdate::Sparse(vec![(col, delta)])
+    }
+
+    /// Merge another update into this one (summing overlapping columns).
+    /// Associativity + commutativity of `+` make any merge order valid.
+    pub fn merge(&mut self, other: &RowUpdate) {
+        match (&mut *self, other) {
+            (RowUpdate::Dense(a), RowUpdate::Dense(b)) => {
+                if a.len() < b.len() {
+                    a.resize(b.len(), 0.0);
+                }
+                for (x, y) in a.iter_mut().zip(b.iter()) {
+                    *x += y;
+                }
+            }
+            (RowUpdate::Dense(a), RowUpdate::Sparse(pairs)) => {
+                for &(c, dv) in pairs {
+                    if a.len() <= c as usize {
+                        a.resize(c as usize + 1, 0.0);
+                    }
+                    a[c as usize] += dv;
+                }
+            }
+            (RowUpdate::Sparse(pairs), other) => {
+                let mut m: BTreeMap<u32, f32> = pairs.iter().copied().collect();
+                match other {
+                    RowUpdate::Dense(b) => {
+                        for (c, &dv) in b.iter().enumerate() {
+                            if dv != 0.0 {
+                                *m.entry(c as u32).or_insert(0.0) += dv;
+                            }
+                        }
+                    }
+                    RowUpdate::Sparse(bp) => {
+                        for &(c, dv) in bp {
+                            *m.entry(c).or_insert(0.0) += dv;
+                        }
+                    }
+                }
+                *self = RowUpdate::Sparse(m.into_iter().collect());
+            }
+        }
+    }
+
+    /// L∞ magnitude of the update — the paper's `|u|` used both for the
+    /// VAP value bound and for magnitude-priority scheduling (§4.2: "we by
+    /// default prioritize updates with larger magnitude").
+    pub fn magnitude(&self) -> f32 {
+        match self {
+            RowUpdate::Dense(v) => v.iter().fold(0.0f32, |m, x| m.max(x.abs())),
+            RowUpdate::Sparse(p) => p.iter().fold(0.0f32, |m, (_, x)| m.max(x.abs())),
+        }
+    }
+
+    /// L1 mass of the update (used for per-parameter VAP accounting when
+    /// aggregating across columns).
+    pub fn l1(&self) -> f32 {
+        match self {
+            RowUpdate::Dense(v) => v.iter().map(|x| x.abs()).sum(),
+            RowUpdate::Sparse(p) => p.iter().map(|(_, x)| x.abs()).sum(),
+        }
+    }
+
+    /// Per-column iterator of `(col, delta)` with zero deltas skipped.
+    pub fn iter_nonzero(&self) -> Box<dyn Iterator<Item = (u32, f32)> + '_> {
+        match self {
+            RowUpdate::Dense(v) => Box::new(
+                v.iter().enumerate().filter(|(_, &x)| x != 0.0).map(|(c, &x)| (c as u32, x)),
+            ),
+            RowUpdate::Sparse(p) => Box::new(p.iter().copied().filter(|&(_, x)| x != 0.0)),
+        }
+    }
+
+    /// Approximate serialized size in bytes (bandwidth simulation).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            RowUpdate::Dense(v) => 4 * v.len(),
+            RowUpdate::Sparse(p) => 8 * p.len(),
+        }
+    }
+
+    /// True when every delta is exactly zero.
+    pub fn is_zero(&self) -> bool {
+        match self {
+            RowUpdate::Dense(v) => v.iter().all(|&x| x == 0.0),
+            RowUpdate::Sparse(p) => p.iter().all(|&(_, x)| x == 0.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::RowKind;
+
+    #[test]
+    fn dense_apply_and_get() {
+        let mut r = RowData::zeros(RowKind::Dense, 4);
+        r.apply(&RowUpdate::Dense(vec![1.0, 2.0, 3.0, 4.0]));
+        r.apply(&RowUpdate::single(2, -3.0));
+        assert_eq!(r.get(0), Some(1.0));
+        assert_eq!(r.get(2), Some(0.0));
+        assert_eq!(r.get(4), None);
+        assert_eq!(r.to_dense(4), vec![1.0, 2.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn sparse_apply_drops_zeros() {
+        let mut r = RowData::zeros(RowKind::Sparse, 100);
+        r.apply(&RowUpdate::single(7, 2.0));
+        r.apply(&RowUpdate::single(9, 1.0));
+        assert_eq!(r.nnz(), 2);
+        r.apply(&RowUpdate::single(7, -2.0));
+        assert_eq!(r.nnz(), 1, "zeroed entry must be dropped");
+        assert_eq!(r.get(7), Some(0.0));
+        assert_eq!(r.get(9), Some(1.0));
+    }
+
+    #[test]
+    fn sparse_row_accepts_dense_update() {
+        let mut r = RowData::zeros(RowKind::Sparse, 4);
+        r.apply(&RowUpdate::Dense(vec![0.0, 5.0, 0.0, -1.0]));
+        assert_eq!(r.nnz(), 2);
+        assert_eq!(r.to_dense(4), vec![0.0, 5.0, 0.0, -1.0]);
+    }
+
+    #[test]
+    fn merge_is_commutative_on_result() {
+        let a0 = RowUpdate::Sparse(vec![(1, 1.0), (3, 2.0)]);
+        let b0 = RowUpdate::Dense(vec![0.5, -1.0, 0.0, 1.0]);
+        let mut ab = a0.clone();
+        ab.merge(&b0);
+        let mut ba = b0.clone();
+        ba.merge(&a0);
+        // representations differ (sparse vs dense) but the effect on a row
+        // must be identical.
+        let mut r1 = RowData::zeros(RowKind::Dense, 4);
+        let mut r2 = RowData::zeros(RowKind::Dense, 4);
+        r1.apply(&ab);
+        r2.apply(&ba);
+        assert_eq!(r1.to_dense(4), r2.to_dense(4));
+    }
+
+    #[test]
+    fn magnitude_and_l1() {
+        let u = RowUpdate::Sparse(vec![(0, -3.0), (5, 2.0)]);
+        assert_eq!(u.magnitude(), 3.0);
+        assert_eq!(u.l1(), 5.0);
+        let u = RowUpdate::Dense(vec![0.0, 0.0]);
+        assert_eq!(u.magnitude(), 0.0);
+        assert!(u.is_zero());
+    }
+
+    #[test]
+    fn iter_nonzero_skips_zeros() {
+        let u = RowUpdate::Dense(vec![0.0, 1.0, 0.0, -2.0]);
+        let got: Vec<_> = u.iter_nonzero().collect();
+        assert_eq!(got, vec![(1, 1.0), (3, -2.0)]);
+    }
+
+    #[test]
+    fn wire_bytes_reflect_representation() {
+        assert_eq!(RowUpdate::Dense(vec![0.0; 10]).wire_bytes(), 40);
+        assert_eq!(RowUpdate::Sparse(vec![(1, 1.0)]).wire_bytes(), 8);
+        assert_eq!(RowData::Dense(vec![0.0; 3]).wire_bytes(), 12);
+    }
+}

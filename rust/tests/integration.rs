@@ -1,0 +1,202 @@
+//! Cross-layer integration tests: the Rust PJRT runtime executing the
+//! JAX/Pallas AOT artifacts, and the apps running on top of both.
+//!
+//! These tests need `make artifacts` to have run (the Makefile `test`
+//! target guarantees it); they self-skip when artifacts are absent so
+//! plain `cargo test` still passes in a fresh checkout.
+
+use std::sync::Arc;
+
+use bapps::apps::sgd::{run_sgd, LogRegData, LogRegDataConfig, SgdConfig};
+use bapps::apps::transformer::{train, TrainConfig, TransformerSpec};
+use bapps::config::{PolicyConfig, SystemConfig};
+use bapps::coordinator::PsSystem;
+use bapps::runtime::{ComputePool, Tensor};
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts/logreg_grad.hlo.txt").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+/// The AOT logreg gradient must match the pure-Rust implementation on the
+/// same minibatch (L1+L2+runtime vs L3 reference — the full-stack
+/// correctness check).
+#[test]
+fn pjrt_logreg_grad_matches_rust_reference() {
+    require_artifacts!();
+    let pool = ComputePool::start("artifacts", 1).unwrap();
+    let data = LogRegData::synthetic(&LogRegDataConfig { n: 128, d: 64, noise: 0.0, seed: 5 });
+    let w: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) / 64.0).collect();
+    let idx: Vec<usize> = (0..128).collect();
+
+    // artifact computes SUM grad over B=128
+    let out = pool
+        .run(
+            "logreg_grad",
+            vec![
+                Tensor::new(w.clone(), vec![64]).unwrap(),
+                Tensor::new(data.x.clone(), vec![128, 64]).unwrap(),
+                Tensor::new(data.y.clone(), vec![128]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let grad_sum = &out[0];
+    assert_eq!(grad_sum.shape, vec![64]);
+    let loss_sum = out[1].data[0];
+    assert!(loss_sum.is_finite() && loss_sum > 0.0);
+
+    let rust_mean = data.grad(&w, &idx); // mean over batch
+    for (i, (xla_sum, rust)) in grad_sum.data.iter().zip(&rust_mean).enumerate() {
+        let xla_mean = xla_sum / 128.0;
+        assert!(
+            (xla_mean - rust).abs() < 1e-3 * (1.0 + rust.abs()),
+            "grad[{i}]: pjrt {xla_mean} vs rust {rust}"
+        );
+    }
+    pool.shutdown();
+}
+
+/// The LDA artifact agrees with the sampler's own probability formula.
+#[test]
+fn pjrt_lda_probs_match_formula() {
+    require_artifacts!();
+    let pool = ComputePool::start("artifacts", 1).unwrap();
+    // meta bakes B=128, K=128
+    let b = 128usize;
+    let k = 128usize;
+    let n_wk: Vec<f32> = (0..b * k).map(|i| (i % 7) as f32).collect();
+    let n_dk: Vec<f32> = (0..k).map(|i| (i % 5) as f32).collect();
+    let n_k: Vec<f32> = (0..k).map(|i| 10.0 + (i % 3) as f32).collect();
+    let (alpha, beta, vbeta) = (0.1f32, 0.01f32, 534.85f32);
+    let out = pool
+        .run(
+            "lda_topic_probs",
+            vec![
+                Tensor::new(n_wk.clone(), vec![b, k]).unwrap(),
+                Tensor::new(n_dk.clone(), vec![k]).unwrap(),
+                Tensor::new(n_k.clone(), vec![k]).unwrap(),
+                Tensor::scalar(alpha),
+                Tensor::scalar(beta),
+                Tensor::scalar(vbeta),
+            ],
+        )
+        .unwrap();
+    let probs = &out[0];
+    assert_eq!(probs.shape, vec![b, k]);
+    for i in 0..b {
+        for j in 0..k {
+            let want = (n_dk[j] + alpha) * (n_wk[i * k + j] + beta) / (n_k[j] + vbeta);
+            let got = probs.data[i * k + j];
+            assert!(
+                (got - want).abs() < 1e-5 * (1.0 + want.abs()),
+                "probs[{i},{j}] {got} vs {want}"
+            );
+        }
+    }
+    pool.shutdown();
+}
+
+/// Distributed SGD with gradients computed by the AOT artifact converges
+/// just like the pure-Rust path (all three layers compose under VAP).
+#[test]
+fn sgd_through_pjrt_converges() {
+    require_artifacts!();
+    let system = PsSystem::launch(
+        SystemConfig::builder()
+            .num_server_shards(2)
+            .num_client_procs(2)
+            .threads_per_proc(1)
+            .flush_interval_us(50)
+            .build(),
+    )
+    .unwrap();
+    let data = Arc::new(LogRegData::synthetic(&LogRegDataConfig {
+        n: 2048,
+        d: 64, // must match the artifact's D
+        noise: 0.02,
+        seed: 23,
+    }));
+    let pool = Arc::new(ComputePool::start("artifacts", 1).unwrap());
+    let res = run_sgd(
+        &system,
+        data.clone(),
+        SgdConfig {
+            iters: 30,
+            batch: 128, // must match the artifact's B
+            policy: PolicyConfig::Vap { v_thr: 4.0, strong: false },
+            eta: Some(0.25),
+            use_xla: true,
+            ..SgdConfig::default()
+        },
+        Some(pool),
+    )
+    .unwrap();
+    assert!(res.accuracy > 0.8, "accuracy {}", res.accuracy);
+    system.shutdown().unwrap();
+}
+
+/// End-to-end transformer smoke: a few data-parallel steps through the
+/// full stack; loss must be finite and ≈ ln(V) at init.
+#[test]
+fn transformer_smoke_three_steps() {
+    require_artifacts!();
+    let spec = Arc::new(TransformerSpec::load("artifacts").unwrap());
+    let system = PsSystem::launch(
+        SystemConfig::builder()
+            .num_server_shards(2)
+            .num_client_procs(1)
+            .threads_per_proc(2)
+            .flush_interval_us(100)
+            .wait_timeout_ms(120_000)
+            .build(),
+    )
+    .unwrap();
+    let pool = Arc::new(ComputePool::start("artifacts", 1).unwrap());
+    let res = train(
+        &system,
+        spec.clone(),
+        pool,
+        TrainConfig {
+            steps: 3,
+            eta: 0.1,
+            policy: PolicyConfig::Ssp { staleness: 1 },
+            seed: 42,
+            log_every: 0,
+        },
+    )
+    .unwrap();
+    assert_eq!(res.loss_curve.len(), 3);
+    let first = res.loss_curve[0];
+    let uniform = (spec.vocab as f64).ln();
+    assert!(first.is_finite());
+    assert!(
+        (first - uniform).abs() < 1.0,
+        "initial loss {first} should be near ln(V) = {uniform}"
+    );
+    system.shutdown().unwrap();
+}
+
+/// Artifact input-shape mismatches surface as errors, not wrong numbers.
+#[test]
+fn pjrt_shape_mismatch_is_an_error() {
+    require_artifacts!();
+    let pool = ComputePool::start("artifacts", 1).unwrap();
+    let r = pool.run(
+        "logreg_grad",
+        vec![
+            Tensor::zeros(vec![32]), // artifact expects D=64
+            Tensor::zeros(vec![128, 32]),
+            Tensor::zeros(vec![128]),
+        ],
+    );
+    assert!(r.is_err(), "mismatched shapes must fail loudly");
+    pool.shutdown();
+}

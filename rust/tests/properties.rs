@@ -1,0 +1,296 @@
+//! Property-based tests (via the in-tree `quickprop` mini-harness) over
+//! the coordinator-side invariants: routing, batching, merge algebra,
+//! vector clocks, VAP accounting and the visibility tracker.
+
+use bapps::clock::VectorClock;
+use bapps::comm::batcher::Batcher;
+use bapps::comm::msg::PushBatch;
+use bapps::comm::priority::{DrainOrder, UpdateQueue};
+use bapps::config::PolicyConfig;
+use bapps::consistency::ConsistencyModel;
+use bapps::server::VisibilityTracker;
+use bapps::table::{RowData, RowId, RowKind, RowUpdate, TableDesc, TableId};
+use bapps::types::ProcId;
+use bapps::util::quickprop::{forall, sparse_update, vec_f32};
+use bapps::util::Rng64;
+
+fn any_desc(rng: &mut Rng64) -> TableDesc {
+    TableDesc {
+        id: TableId(rng.below(8) as u32),
+        num_rows: rng.range(1, 500) as u64,
+        row_width: rng.range(1, 64) as u32,
+        row_kind: if rng.chance(0.5) { RowKind::Dense } else { RowKind::Sparse },
+        policy: PolicyConfig::Cap { staleness: rng.below(4) as u32 },
+    }
+}
+
+/// Routing: every row maps to exactly one shard, stably, in range.
+#[test]
+fn prop_routing_total_stable_in_range() {
+    forall(300, 0xA001, |rng| {
+        let desc = any_desc(rng);
+        let shards = rng.range(1, 17) as u32;
+        let row = RowId(rng.below(desc.num_rows as usize) as u64);
+        let s1 = desc.shard_of(row, shards);
+        let s2 = desc.shard_of(row, shards);
+        assert_eq!(s1, s2);
+        assert!(s1.0 < shards);
+    });
+}
+
+/// Update algebra: applying a merge of updates equals applying them
+/// one-by-one, in any order (associativity + commutativity, paper §2).
+#[test]
+fn prop_merge_equals_sequential_apply() {
+    forall(300, 0xA002, |rng| {
+        let width = rng.range(1, 32) as u32;
+        let kind = if rng.chance(0.5) { RowKind::Dense } else { RowKind::Sparse };
+        let n = rng.range(1, 6);
+        let ups: Vec<RowUpdate> = (0..n)
+            .map(|_| {
+                if rng.chance(0.5) {
+                    RowUpdate::Dense(
+                        (0..width).map(|_| (rng.f32() * 2.0 - 1.0) * 4.0).collect(),
+                    )
+                } else {
+                    RowUpdate::Sparse(sparse_update(rng, width, 4.0))
+                }
+            })
+            .collect();
+
+        // sequential
+        let mut seq = RowData::zeros(kind, width);
+        for u in &ups {
+            seq.apply(u);
+        }
+        // merged (in a shuffled order)
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut merged = ups[order[0]].clone();
+        for &i in &order[1..] {
+            merged.merge(&ups[i]);
+        }
+        let mut whole = RowData::zeros(kind, width);
+        whole.apply(&merged);
+
+        let a = seq.to_dense(width);
+        let b = whole.to_dense(width);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-3, "merge mismatch: {a:?} vs {b:?}");
+        }
+    });
+}
+
+/// Batcher: every drained update lands in exactly one batch, routed to
+/// its owning shard, with strictly increasing batch ids.
+#[test]
+fn prop_batcher_partitions_updates() {
+    forall(200, 0xA003, |rng| {
+        let desc = any_desc(rng);
+        let shards = rng.range(1, 9) as u32;
+        let max_batch = rng.range(1, 50);
+        let mut batcher = Batcher::new(ProcId(rng.below(4) as u32), max_batch);
+        let n_rows = rng.range(1, 60);
+        let updates: Vec<(RowId, RowUpdate)> = (0..n_rows)
+            .map(|i| (RowId(i as u64 % desc.num_rows), RowUpdate::single(0, rng.f32())))
+            .collect();
+        let total_in = updates.len();
+        let batches = batcher.make_batches(&desc, shards, updates, 1);
+        let mut total_out = 0;
+        let mut last_id = None;
+        for (shard, b) in &batches {
+            assert!(b.updates.len() <= max_batch);
+            for (row, _) in &b.updates {
+                assert_eq!(desc.shard_of(*row, shards), *shard);
+                total_out += 1;
+            }
+            if let Some(prev) = last_id {
+                assert!(b.batch_id > prev, "ids must increase");
+            }
+            last_id = Some(b.batch_id);
+        }
+        assert_eq!(total_in, total_out);
+    });
+}
+
+/// UpdateQueue: drains preserve total mass per (row, col) regardless of
+/// the drain order policy and chunk sizes.
+#[test]
+fn prop_update_queue_conserves_mass() {
+    forall(200, 0xA004, |rng| {
+        let order = if rng.chance(0.5) { DrainOrder::Fifo } else { DrainOrder::Magnitude };
+        let mut q = UpdateQueue::new(order);
+        let mut expected: std::collections::HashMap<(u64, u32), f32> =
+            std::collections::HashMap::new();
+        for _ in 0..rng.range(1, 80) {
+            let row = rng.below(8) as u64;
+            let col = rng.below(4) as u32;
+            let d = (rng.f32() * 2.0 - 1.0) * 3.0;
+            q.push(RowId(row), RowUpdate::single(col, d));
+            *expected.entry((row, col)).or_insert(0.0) += d;
+        }
+        let mut got: std::collections::HashMap<(u64, u32), f32> =
+            std::collections::HashMap::new();
+        while !q.is_empty() {
+            for (row, u) in q.drain(rng.range(1, 5)) {
+                for (c, d) in u.iter_nonzero() {
+                    *got.entry((row.0, c)).or_insert(0.0) += d;
+                }
+            }
+        }
+        for (k, v) in &expected {
+            let g = got.get(k).copied().unwrap_or(0.0);
+            assert!((g - v).abs() < 1e-3, "mass mismatch at {k:?}: {g} vs {v}");
+        }
+    });
+}
+
+/// Vector clock: min/max/skew are consistent with a model map under an
+/// arbitrary tick sequence.
+#[test]
+fn prop_vector_clock_matches_model() {
+    forall(200, 0xA005, |rng| {
+        let n = rng.range(1, 10);
+        let mut vc = VectorClock::new(0..n as u32);
+        let mut model = vec![0u32; n];
+        for _ in 0..rng.range(0, 100) {
+            let e = rng.below(n) as u32;
+            vc.tick(e);
+            model[e as usize] += 1;
+        }
+        assert_eq!(vc.min_clock(), *model.iter().min().unwrap());
+        assert_eq!(vc.max_clock(), *model.iter().max().unwrap());
+        assert_eq!(vc.skew(), model.iter().max().unwrap() - model.iter().min().unwrap());
+    });
+}
+
+/// Write gate: admitted updates never push |pending| past
+/// max(u_seen, v_thr) — the quantity the weak-VAP divergence bound rests
+/// on (per worker).
+#[test]
+fn prop_vap_gate_bounds_admitted_mass() {
+    forall(300, 0xA006, |rng| {
+        let v_thr = 0.5 + rng.f32() * 8.0;
+        let model = ConsistencyModel::new(PolicyConfig::Vap { v_thr, strong: false });
+        let mut pending = 0.0f32;
+        let mut u_seen = 0.0f32;
+        for _ in 0..rng.range(1, 50) {
+            let d = (rng.f32() * 2.0 - 1.0) * 6.0;
+            if !model.write_blocked(pending, d) {
+                pending += d;
+                u_seen = u_seen.max(d.abs());
+                assert!(
+                    pending.abs() <= v_thr.max(u_seen) + 1e-4,
+                    "pending {pending} exceeded max({u_seen},{v_thr})"
+                );
+            } else if rng.chance(0.3) {
+                // simulate visibility acks releasing some mass
+                pending *= rng.f32();
+            }
+        }
+    });
+}
+
+/// Visibility tracker: under arbitrary admit/ack interleavings, (a) a
+/// batch is reported visible exactly once, after exactly `P` acks; (b)
+/// strong-VAP in-flight mass per parameter never exceeds
+/// max(u_obs, v_thr) by more than one batch's contribution.
+#[test]
+fn prop_visibility_tracker_acks() {
+    forall(150, 0xA007, |rng| {
+        let procs = rng.range(1, 5) as u32;
+        let strong = rng.chance(0.5);
+        let v_thr = 1.0 + rng.f32() * 4.0;
+        let model = ConsistencyModel::new(PolicyConfig::Vap { v_thr, strong });
+        let mut vt = VisibilityTracker::new(procs);
+        let mut in_flight: Vec<(ProcId, u64)> = Vec::new();
+        let mut acks_given: std::collections::HashMap<(u32, u64), u32> =
+            std::collections::HashMap::new();
+        let mut next_id = vec![0u64; 3];
+        let mut visible = 0usize;
+        let mut admitted = 0usize;
+        for _ in 0..rng.range(1, 60) {
+            if rng.chance(0.6) || in_flight.is_empty() {
+                let origin = rng.below(3) as u32;
+                let b = PushBatch {
+                    table: TableId(0),
+                    origin: ProcId(origin),
+                    batch_id: next_id[origin as usize],
+                    updates: vec![(
+                        RowId(rng.below(3) as u64),
+                        RowUpdate::single(0, (rng.f32() * 2.0 - 1.0) * 2.0),
+                    )],
+                    clock: 1,
+                };
+                next_id[origin as usize] += 1;
+                vt.observe(&b);
+                if let Some(b) = vt.admit(&model, b) {
+                    admitted += 1;
+                    in_flight.push((b.origin, b.batch_id));
+                }
+            } else {
+                let i = rng.below(in_flight.len());
+                let (origin, id) = in_flight[i];
+                let e = acks_given.entry((origin.0, id)).or_insert(0);
+                if *e < procs {
+                    *e += 1;
+                    if vt.ack(origin, id) {
+                        visible += 1;
+                        in_flight.remove(i);
+                        admitted += {
+                            let rel = vt.release_ready(&model);
+                            for b in &rel {
+                                in_flight.push((b.origin, b.batch_id));
+                            }
+                            rel.len()
+                        };
+                    } else {
+                        assert!(*e < procs, "ack count reached P without visibility");
+                    }
+                }
+            }
+        }
+        // drain: ack everything remaining
+        while let Some((origin, id)) = in_flight.pop() {
+            let e = acks_given.entry((origin.0, id)).or_insert(0);
+            while *e < procs {
+                *e += 1;
+                if vt.ack(origin, id) {
+                    visible += 1;
+                    for b in vt.release_ready(&model) {
+                        in_flight.push((b.origin, b.batch_id));
+                        admitted += 1;
+                    }
+                    break;
+                }
+            }
+        }
+        assert_eq!(visible, admitted, "every admitted batch becomes visible exactly once");
+        assert_eq!(vt.in_flight_count(), 0);
+        assert_eq!(vt.held_count(), 0, "no batch may stay held forever");
+    });
+}
+
+/// Row data survives dense↔sparse round trips of arbitrary updates.
+#[test]
+fn prop_dense_sparse_equivalence() {
+    forall(200, 0xA008, |rng| {
+        let width = rng.range(1, 24) as u32;
+        let mut dense = RowData::zeros(RowKind::Dense, width);
+        let mut sparse = RowData::zeros(RowKind::Sparse, width);
+        for _ in 0..rng.range(1, 30) {
+            let u = if rng.chance(0.5) {
+                RowUpdate::Dense(vec_f32(rng, width as usize, 2.0))
+            } else {
+                RowUpdate::Sparse(sparse_update(rng, width, 2.0))
+            };
+            dense.apply(&u);
+            sparse.apply(&u);
+        }
+        let a = dense.to_dense(width);
+        let b = sparse.to_dense(width);
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!((x - y).abs() < 1e-3, "col {i}: dense {x} vs sparse {y}");
+        }
+    });
+}
