@@ -15,7 +15,7 @@ use bapps::config::{PolicyConfig, SystemConfig};
 use bapps::coordinator::PsSystem;
 use bapps::runtime::ComputePool;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let full = args.iter().any(|a| a == "--full");
     let xla = args.iter().any(|a| a == "--xla");
@@ -39,8 +39,7 @@ fn main() -> anyhow::Result<()> {
             .threads_per_proc(4)
             .flush_interval_us(100)
             .build(),
-    )
-    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    )?;
 
     // K scaled down from the paper's 2000 (see DESIGN.md §3); policy is
     // the paper's: weak VAP.
@@ -56,7 +55,7 @@ fn main() -> anyhow::Result<()> {
     // The AOT artifact bakes K=128; --xla requires a matching topic count.
     let lda_cfg = if xla { LdaConfig { num_topics: 128, ..lda_cfg } } else { lda_cfg };
     let pool = if xla {
-        Some(Arc::new(ComputePool::start("artifacts", 1).map_err(|e| anyhow::anyhow!("{e}"))?))
+        Some(Arc::new(ComputePool::start("artifacts", 1)?))
     } else {
         None
     };
@@ -69,7 +68,7 @@ fn main() -> anyhow::Result<()> {
         lda_cfg.policy.name(),
         if xla { "[Pallas kernel inner loop]" } else { "[pure-Rust inner loop]" },
     );
-    let res = run_lda(&system, corpus, lda_cfg, pool).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let res = run_lda(&system, corpus, lda_cfg, pool)?;
 
     println!("\nresults:");
     println!("  tokens processed : {}", res.tokens_processed);
@@ -80,6 +79,6 @@ fn main() -> anyhow::Result<()> {
         println!("    sweep {:>2}: {:+.4}", i + 1, ll);
     }
     println!("\n{}", system.metrics_summary());
-    system.shutdown().map_err(|e| anyhow::anyhow!("{e}"))?;
+    system.shutdown()?;
     Ok(())
 }

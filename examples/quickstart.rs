@@ -8,7 +8,7 @@
 
 use bapps::prelude::*;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 2 server shards, 2 client processes × 2 worker threads = P = 4.
     let cfg = SystemConfig::builder()
         .num_server_shards(2)
@@ -16,7 +16,7 @@ fn main() -> anyhow::Result<()> {
         .threads_per_proc(2)
         .flush_interval_us(100)
         .build();
-    let system = PsSystem::launch(cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let system = PsSystem::launch(cfg)?;
 
     // A clock-bounded table (CAP, s = 2)...
     system
@@ -26,8 +26,7 @@ fn main() -> anyhow::Result<()> {
             row_width: 8,
             row_kind: RowKind::Dense,
             policy: PolicyConfig::Cap { staleness: 2 },
-        })
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        })?;
     // ...and a value-bounded one (weak VAP, v_thr = 8) — Figure 1's knob.
     system
         .create_table(TableDesc {
@@ -36,8 +35,7 @@ fn main() -> anyhow::Result<()> {
             row_width: 8,
             row_kind: RowKind::Sparse,
             policy: PolicyConfig::Vap { v_thr: 8.0, strong: false },
-        })
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        })?;
 
     let sums = system
         .run_workers(|ctx| {
@@ -54,8 +52,7 @@ fn main() -> anyhow::Result<()> {
             }
             // read-my-writes: this worker's contribution is always visible
             vap_table.get(RowId(0), 0).unwrap()
-        })
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        })?;
 
     println!("per-worker final reads of vap[0,0]: {sums:?}");
     println!("(each ≥ its own 10.0 contribution — read-my-writes)");
@@ -65,7 +62,7 @@ fn main() -> anyhow::Result<()> {
         system.net_metrics().total_sends(),
         system.net_metrics().bytes_sent()
     );
-    system.shutdown().map_err(|e| anyhow::anyhow!("{e}"))?;
+    system.shutdown()?;
     println!("done.");
     Ok(())
 }

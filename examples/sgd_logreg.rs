@@ -15,7 +15,7 @@ use bapps::consistency::cvap::theorem1_regret_bound;
 use bapps::coordinator::PsSystem;
 use bapps::runtime::ComputePool;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let xla = std::env::args().any(|a| a == "--xla");
 
     let system = PsSystem::launch(
@@ -25,8 +25,7 @@ fn main() -> anyhow::Result<()> {
             .threads_per_proc(2)
             .flush_interval_us(100)
             .build(),
-    )
-    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    )?;
     let p = system.config().num_workers();
 
     let data = Arc::new(LogRegData::synthetic(&LogRegDataConfig {
@@ -50,7 +49,7 @@ fn main() -> anyhow::Result<()> {
         seed: 17,
     };
     let pool = if xla {
-        Some(Arc::new(ComputePool::start("artifacts", 1).map_err(|e| anyhow::anyhow!("{e}"))?))
+        Some(Arc::new(ComputePool::start("artifacts", 1)?))
     } else {
         None
     };
@@ -62,8 +61,7 @@ fn main() -> anyhow::Result<()> {
         cfg.policy.name(),
         if xla { "[logreg_grad AOT artifact]" } else { "[pure-Rust gradient]" },
     );
-    let res = run_sgd(&system, data.clone(), cfg.clone(), pool)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let res = run_sgd(&system, data.clone(), cfg.clone(), pool)?;
 
     println!("\nresults:");
     println!("  loss(0)      : {zero_loss:.4}");
@@ -90,6 +88,6 @@ fn main() -> anyhow::Result<()> {
     println!("  R[X]/T                      : {:.4} (→ 0 as T grows)", regret / t as f64);
     println!("  within bound                : {}", regret <= bound);
 
-    system.shutdown().map_err(|e| anyhow::anyhow!("{e}"))?;
+    system.shutdown()?;
     Ok(())
 }

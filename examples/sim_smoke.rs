@@ -1,0 +1,25 @@
+//! CI smoke slice of the deterministic-simulation acceptance sweep:
+//! 64 pinned seeds per policy under the chaos fault mix (the full
+//! 1000+-seed sweep lives in `rust/tests/sim_faults.rs`). Pinned seeds
+//! keep failures quotable: re-running the printed seed reproduces the
+//! exact schedule.
+
+use bapps::config::PolicyConfig;
+use bapps::sim::{sweep, SimConfig};
+
+fn main() {
+    let policies = [
+        PolicyConfig::Bsp,
+        PolicyConfig::Ssp { staleness: 1 },
+        PolicyConfig::Cap { staleness: 1 },
+        PolicyConfig::Vap { v_thr: 2.0, strong: false },
+        PolicyConfig::Vap { v_thr: 2.0, strong: true },
+        PolicyConfig::Cvap { staleness: 2, v_thr: 2.0, strong: true },
+    ];
+    for pol in policies {
+        let out = sweep(&SimConfig::default().with_policy(pol), 9000..9064);
+        assert!(out.ok(), "policy {:?}:\n{}", pol, out.describe());
+        println!("{:?}: {} seeds clean", pol, out.runs);
+    }
+    println!("sim smoke sweep: all policies clean");
+}

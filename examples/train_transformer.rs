@@ -29,15 +29,15 @@ fn arg<T: std::str::FromStr>(name: &str, default: T) -> T {
         .unwrap_or(default)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let steps: usize = arg("--steps", 300);
     let eta: f32 = arg("--eta", 0.25);
     let policy_spec: String = arg("--policy", "ssp:1".to_string());
-    let policy = PolicyConfig::parse(&policy_spec).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let policy = PolicyConfig::parse(&policy_spec)?;
 
     let spec = Arc::new(
         TransformerSpec::load("artifacts")
-            .map_err(|e| anyhow::anyhow!("{e} — run `make artifacts` first"))?,
+            .map_err(|e| format!("{e} — run `make artifacts` first"))?,
     );
     println!(
         "transformer LM: {} params (vocab={} d={} layers={} heads={} seq={} batch={})",
@@ -61,9 +61,8 @@ fn main() -> anyhow::Result<()> {
             .flush_interval_us(200)
             .wait_timeout_ms(300_000)
             .build(),
-    )
-    .map_err(|e| anyhow::anyhow!("{e}"))?;
-    let pool = Arc::new(ComputePool::start("artifacts", 2).map_err(|e| anyhow::anyhow!("{e}"))?);
+    )?;
+    let pool = Arc::new(ComputePool::start("artifacts", 2)?);
 
     println!("training {steps} steps/worker, eta={eta}, policy={}...", policy.name());
     let vocab = spec.vocab;
@@ -72,8 +71,7 @@ fn main() -> anyhow::Result<()> {
         spec.clone(),
         pool,
         TrainConfig { steps, eta, policy, seed: 1234, log_every: 10 },
-    )
-    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    )?;
 
     println!("\nloss curve (mean over workers, every 10 steps):");
     for (i, l) in res.loss_curve.iter().enumerate() {
@@ -90,6 +88,6 @@ fn main() -> anyhow::Result<()> {
         (vocab as f64).ln(),
         (4f64).ln()
     );
-    system.shutdown().map_err(|e| anyhow::anyhow!("{e}"))?;
+    system.shutdown()?;
     Ok(())
 }

@@ -233,6 +233,92 @@ impl ClientCore {
         Ok(())
     }
 
+    /// ---- non-blocking access paths (deterministic simulation) ----
+    ///
+    /// The blocking paths above park workers on a condvar with wall-clock
+    /// timeouts, which a virtual-time scheduler cannot drive. These
+    /// variants perform the *same* gate checks and the same side effects
+    /// (pull issuance on a staleness miss, flush-on-block on a value-gate
+    /// miss) but return immediately, letting the simulator re-poll after
+    /// delivering more messages.
+
+    /// Non-blocking clock-gated read: `Ok(None)` when the staleness gate
+    /// holds the read back (a pull with sufficient freshness has been
+    /// requested; retry after ingress progress).
+    pub fn try_get(
+        &self,
+        table: TableId,
+        row: RowId,
+        col: u32,
+        reader_clock: Clock,
+    ) -> Result<Option<f32>> {
+        let t = self.table(table)?;
+        let mut st = t.state.lock().unwrap();
+        Self::check_bounds(&st, row, Some(col))?;
+        if !st.read_admissible(row, reader_clock) {
+            let required = st.model.required_read_clock(reader_clock);
+            let needs_pull =
+                st.inflight_pulls.get(&row).map_or(true, |&needed| needed < required);
+            if needs_pull {
+                st.inflight_pulls.insert(row, required);
+                let shard = st.desc.shard_of(row, self.cfg.num_server_shards);
+                self.metrics.pulls.fetch_add(1, Ordering::Relaxed);
+                let _ = self.net.send(Msg {
+                    src: NodeId::Client(self.proc),
+                    dst: NodeId::Server(shard),
+                    payload: Payload::PullRow {
+                        table,
+                        row,
+                        needed_clock: required,
+                        worker: WorkerId(u32::MAX),
+                    },
+                });
+            }
+            return Ok(None);
+        }
+        self.metrics.gets.fetch_add(1, Ordering::Relaxed);
+        let eff = st.effective_clock(row);
+        self.staleness.record(reader_clock.saturating_sub(eff));
+        Ok(Some(st.read(row, col)))
+    }
+
+    /// Non-blocking value-gated increment: `Ok(false)` when the write gate
+    /// blocks the delta (pending mass has been flushed onto the wire so
+    /// visibility can drain it; retry after ingress progress).
+    pub fn try_inc(&self, table: TableId, row: RowId, col: u32, delta: f32) -> Result<bool> {
+        let t = self.table(table)?;
+        let mut st = t.state.lock().unwrap();
+        Self::check_bounds(&st, row, Some(col))?;
+        if !st.write_admissible(row, col, delta) {
+            // Same rationale as the blocking path: blocked mass can only
+            // drain once it is on the wire.
+            self.flush_locked(&mut st, usize::MAX);
+            return Ok(false);
+        }
+        st.apply_inc(row, col, delta);
+        if balance_checks() {
+            st.assert_balance("try_inc");
+        }
+        self.metrics.incs.fetch_add(1, Ordering::Relaxed);
+        Ok(true)
+    }
+
+    /// Apply an increment **bypassing the VAP write gate**. This exists
+    /// solely as a sabotage hook for the deterministic simulator's oracle
+    /// self-tests ([`crate::sim`]): a harness that never flags a broken
+    /// gate proves nothing, so the sim deliberately routes writes through
+    /// here and asserts its value-bound oracle fires. Never call this from
+    /// application code.
+    #[doc(hidden)]
+    pub fn sabotage_inc(&self, table: TableId, row: RowId, col: u32, delta: f32) -> Result<()> {
+        let t = self.table(table)?;
+        let mut st = t.state.lock().unwrap();
+        Self::check_bounds(&st, row, Some(col))?;
+        st.apply_inc(row, col, delta);
+        self.metrics.incs.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
     /// `Clock()` for one worker: flush every table (the SSP sync phase;
     /// for eager tables an incremental flush), tick the thread clock, and
     /// notify all shards if the process min advanced.
@@ -261,8 +347,12 @@ impl ClientCore {
     }
 
     /// Flush all tables' egress queues (sync phase / shutdown drain).
+    /// Tables are visited in id order so the emitted message sequence is a
+    /// pure function of the system state (the deterministic simulator's
+    /// trace-identity guarantee depends on it).
     pub fn flush_all_tables(&self) -> Result<()> {
-        let ids: Vec<TableId> = self.tables.read().unwrap().keys().copied().collect();
+        let mut ids: Vec<TableId> = self.tables.read().unwrap().keys().copied().collect();
+        ids.sort_unstable_by_key(|id| id.0);
         for id in ids {
             let t = self.table(id)?;
             let mut st = t.state.lock().unwrap();
@@ -271,11 +361,13 @@ impl ClientCore {
         Ok(())
     }
 
-    /// Flush eager tables only (flusher thread body).
+    /// Flush eager tables only (flusher thread body). Id order, for the
+    /// same determinism reason as [`ClientCore::flush_all_tables`].
     fn flush_eager_tables(&self) {
-        let handles: Vec<Arc<ClientTable>> =
-            self.tables.read().unwrap().values().cloned().collect();
-        for t in handles {
+        let mut handles: Vec<(TableId, Arc<ClientTable>)> =
+            self.tables.read().unwrap().iter().map(|(id, t)| (*id, t.clone())).collect();
+        handles.sort_unstable_by_key(|(id, _)| id.0);
+        for (_, t) in handles {
             let mut st = t.state.lock().unwrap();
             if st.model.eager_propagation() && st.has_unsent() {
                 self.flush_locked(&mut st, self.cfg.max_batch_updates);
@@ -529,10 +621,12 @@ impl ClientCore {
                     clock,
                 });
                 // Raise the floor on *every* table (the broadcast is
-                // per-shard, covering all its partitions).
-                let handles: Vec<Arc<ClientTable>> =
-                    self.tables.read().unwrap().values().cloned().collect();
-                for t in handles {
+                // per-shard, covering all its partitions). Id order keeps
+                // wakeup side effects deterministic under simulation.
+                let mut handles: Vec<(TableId, Arc<ClientTable>)> =
+                    self.tables.read().unwrap().iter().map(|(id, t)| (*id, t.clone())).collect();
+                handles.sort_unstable_by_key(|(id, _)| id.0);
+                for (_, t) in handles {
                     {
                         let mut st = t.state.lock().unwrap();
                         st.apply_min_clock(shard, clock);

@@ -109,17 +109,56 @@ struct Shared {
     inject: Mutex<Option<Sender<Scheduled>>>,
 }
 
-/// Cloneable sending handle.
+/// Pluggable delivery backend behind [`NetSender`].
+///
+/// The production implementation is the in-process bus below ([`Network`]
+/// hands out senders wired to it); the deterministic simulator
+/// (`crate::sim`) substitutes its own virtual-time transport. Components
+/// (client cores, server shards) only ever hold a [`NetSender`], so they
+/// are oblivious to which backend carries their traffic.
+///
+/// Contract every implementation must honor, because the consistency
+/// protocol depends on it: **per-directed-link FIFO, exactly-once**
+/// delivery. Cross-link ordering is unconstrained.
+pub trait Transport: Send + Sync {
+    /// Deliver (or schedule delivery of) one addressed message.
+    fn send(&self, msg: Msg) -> Result<()>;
+    /// Counters for messages/bytes by payload kind.
+    fn metrics(&self) -> Arc<NetMetrics>;
+}
+
+/// Cloneable sending handle over a [`Transport`] implementation.
 #[derive(Clone)]
 pub struct NetSender {
-    shared: Arc<Shared>,
+    inner: Arc<dyn Transport>,
 }
 
 impl NetSender {
-    /// Send a message; delivery obeys the network profile. Returns
+    /// Wrap any transport implementation in a sending handle.
+    pub fn from_transport(inner: Arc<dyn Transport>) -> Self {
+        NetSender { inner }
+    }
+
+    /// Send a message; delivery semantics are the backend's. Returns
     /// `Err(Disconnected)` only if the destination endpoint was dropped
     /// (normal during shutdown).
     pub fn send(&self, msg: Msg) -> Result<()> {
+        self.inner.send(msg)
+    }
+
+    /// Network metrics handle (messages/bytes by kind).
+    pub fn metrics(&self) -> Arc<NetMetrics> {
+        self.inner.metrics()
+    }
+}
+
+/// The production [`Transport`]: delivery via the shared in-process bus.
+struct BusTransport {
+    shared: Arc<Shared>,
+}
+
+impl Transport for BusTransport {
+    fn send(&self, msg: Msg) -> Result<()> {
         let bytes = msg.payload.wire_bytes();
         self.shared.metrics.record_send(msg.payload.kind(), bytes);
 
@@ -188,8 +227,7 @@ impl NetSender {
         }
     }
 
-    /// Network metrics handle (messages/bytes by kind).
-    pub fn metrics(&self) -> Arc<NetMetrics> {
+    fn metrics(&self) -> Arc<NetMetrics> {
         self.shared.metrics.clone()
     }
 }
@@ -262,7 +300,7 @@ impl Network {
 
     /// A cloneable sender handle.
     pub fn sender(&self) -> NetSender {
-        NetSender { shared: self.shared.clone() }
+        NetSender::from_transport(Arc::new(BusTransport { shared: self.shared.clone() }))
     }
 
     /// Network metrics (messages/bytes by kind).

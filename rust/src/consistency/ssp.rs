@@ -16,17 +16,19 @@ use crate::types::Clock;
 /// The freshness (row clock) a reader at `reader_clock` requires under
 /// staleness bound `s`: all updates timestamped `≤ reader_clock − s − 1`
 /// must be visible. Saturates at 0 so workers in their first `s+1` clocks
-/// never block.
+/// never block; `s + 1` itself saturates so `s = u32::MAX` means
+/// "unbounded staleness" rather than overflowing back to a tight bound.
 pub fn required_read_clock(reader_clock: Clock, s: u32) -> Clock {
-    reader_clock.saturating_sub(s + 1)
+    reader_clock.saturating_sub(s.saturating_add(1))
 }
 
 /// The maximum clock a worker may reach before the gate can possibly make
-/// it wait on a peer at `min_clock`: `min_clock + s + 1`. (At that clock
-/// its reads require freshness `min_clock`, exactly the frontier.) Used by
-/// tests to check the permitted-lead invariant.
+/// it wait on a peer at `min_clock`: `min_clock + s + 1`, saturating at
+/// `u32::MAX`. (At that clock its reads require freshness `min_clock`,
+/// exactly the frontier.) Used by tests to check the permitted-lead
+/// invariant.
 pub fn max_permitted_clock(min_clock: Clock, s: u32) -> Clock {
-    min_clock + s + 1
+    min_clock.saturating_add(s).saturating_add(1)
 }
 
 #[cfg(test)]
@@ -41,6 +43,31 @@ mod tests {
         assert_eq!(required_read_clock(2, 0), 1); // BSP: barrier on c-1
         assert_eq!(required_read_clock(0, 3), 0);
         assert_eq!(required_read_clock(3, 3), 0);
+    }
+
+    #[test]
+    fn required_clock_saturates_at_extremes() {
+        // s = u32::MAX encodes unbounded staleness: no read ever blocks,
+        // even for a reader at the maximum clock. Without the inner
+        // saturating_add this would overflow to s+1 = 0 and demand full
+        // freshness — the exact opposite semantics.
+        assert_eq!(required_read_clock(u32::MAX, u32::MAX), 0);
+        assert_eq!(required_read_clock(10, u32::MAX), 0);
+        assert_eq!(required_read_clock(0, u32::MAX), 0);
+        // BSP (s = 0) at the clock ceiling still requires c − 1.
+        assert_eq!(required_read_clock(u32::MAX, 0), u32::MAX - 1);
+        // Clock 0 readers never block regardless of s.
+        for s in [0, 1, 7, u32::MAX] {
+            assert_eq!(required_read_clock(0, s), 0);
+        }
+    }
+
+    #[test]
+    fn max_permitted_clock_saturates() {
+        assert_eq!(max_permitted_clock(u32::MAX, 0), u32::MAX);
+        assert_eq!(max_permitted_clock(0, u32::MAX), u32::MAX);
+        assert_eq!(max_permitted_clock(u32::MAX - 1, 0), u32::MAX);
+        assert_eq!(max_permitted_clock(0, 0), 1);
     }
 
     #[test]

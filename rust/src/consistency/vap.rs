@@ -113,6 +113,34 @@ mod tests {
     }
 
     #[test]
+    fn write_gate_negative_and_mixed_sign_edges() {
+        // Saturated on the negative side: another push outward blocks...
+        assert!(write_blocked(-8.0, -1.0, 8.0));
+        // ...but a pull back toward zero never does.
+        assert!(!write_blocked(-8.0, 1.0, 8.0));
+        // A large opposite-sign delta that lands back inside the band
+        // (|4 − 9| = 5 ≤ 8) is admitted — signed accounting, not L1.
+        assert!(!write_blocked(4.0, -9.0, 8.0));
+        // A small pending with a big same-sign delta overshoots: blocks.
+        assert!(write_blocked(-0.5, -8.0, 8.0));
+        // The idle-parameter escape hatch works for arbitrarily large
+        // deltas regardless of sign.
+        assert!(!write_blocked(0.0, 100.0, 8.0));
+        assert!(!write_blocked(0.0, -100.0, 8.0));
+    }
+
+    #[test]
+    fn release_gate_oversize_observed_u() {
+        // u_obs = 10 > v_thr = 2 ⇒ the release bound is 10, not 2.
+        // inflight 5 + batch 4 = 9 ≤ 10: admitted.
+        assert!(!release_blocked(5.0, 4.0, 10.0, 2.0));
+        // inflight 5 + batch 6 = 11 > 10: held.
+        assert!(release_blocked(5.0, 6.0, 10.0, 2.0));
+        // Idle parameter always admits, even past both bounds.
+        assert!(!release_blocked(0.0, 100.0, 10.0, 2.0));
+    }
+
+    #[test]
     fn release_gate_uses_max_of_u_and_vthr() {
         // bound = max(u, v_thr) = 10
         assert!(!release_blocked(4.0, 6.0, 10.0, 8.0));

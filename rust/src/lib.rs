@@ -18,7 +18,12 @@
 //!   factorization, and a data-parallel transformer-LM driver ([`apps`]);
 //! * a **PJRT runtime** that loads JAX/Pallas computations AOT-lowered to
 //!   HLO text at build time, so Python is never on the worker path
-//!   ([`runtime`]).
+//!   ([`runtime`]);
+//! * a **deterministic simulation harness** that drives the real
+//!   client/server/consistency stack over a seeded virtual-time network
+//!   with injected faults (delay, reorder, duplicate, drop-with-retry,
+//!   stragglers) and checks the paper's bounds as executable oracles
+//!   ([`sim`]).
 //!
 //! ## Quickstart
 //!
@@ -59,6 +64,7 @@ pub mod error;
 pub mod metrics;
 pub mod runtime;
 pub mod server;
+pub mod sim;
 pub mod table;
 pub mod trace;
 pub mod util;

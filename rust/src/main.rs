@@ -15,14 +15,13 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Context, Result};
-
 use bapps::apps::lda::{run_lda, Corpus, LdaConfig, SyntheticCorpusConfig};
 use bapps::apps::mf::{run_mf, MfConfig, MfData};
 use bapps::apps::sgd::{run_sgd, LogRegData, LogRegDataConfig, SgdConfig};
 use bapps::apps::transformer::{train, TrainConfig, TransformerSpec};
 use bapps::config::{NetConfig, PolicyConfig, SystemConfig};
 use bapps::coordinator::PsSystem;
+use bapps::error::{Error, Result};
 use bapps::runtime::ComputePool;
 
 const USAGE: &str = "\
@@ -68,7 +67,7 @@ impl Args {
             let a = &argv[i];
             let key = a
                 .strip_prefix("--")
-                .ok_or_else(|| anyhow!("unexpected argument '{a}'\n\n{USAGE}"))?;
+                .ok_or_else(|| Error::Other(format!("unexpected argument '{a}'\n\n{USAGE}")))?;
             if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
                 kv.insert(key.to_string(), argv[i + 1].clone());
                 i += 2;
@@ -83,7 +82,9 @@ impl Args {
     fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
         match self.kv.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow!("bad value for --{key}: '{v}'")),
+            Some(v) => {
+                v.parse().map_err(|_| Error::Other(format!("bad value for --{key}: '{v}'")))
+            }
         }
     }
 
@@ -96,7 +97,7 @@ fn build_system(args: &Args) -> Result<(PsSystem, PolicyConfig, String)> {
     let workers: u32 = args.get("workers", 4u32)?;
     let shards: u32 = args.get("shards", 2u32)?;
     let policy_spec: String = args.get("policy", "vap:8".to_string())?;
-    let policy = PolicyConfig::parse(&policy_spec).map_err(|e| anyhow!("{e}"))?;
+    let policy = PolicyConfig::parse(&policy_spec)?;
     let artifacts: String = args.get("artifacts", "artifacts".to_string())?;
     let procs = if workers >= 2 && workers % 2 == 0 { 2 } else { 1 };
     let cfg = SystemConfig::builder()
@@ -106,7 +107,7 @@ fn build_system(args: &Args) -> Result<(PsSystem, PolicyConfig, String)> {
         .net(if args.flag("lan") { NetConfig::lan_40gbe() } else { NetConfig::default() })
         .artifacts_dir(artifacts.clone())
         .build();
-    let sys = PsSystem::launch(cfg).map_err(|e| anyhow!("{e}"))?;
+    let sys = PsSystem::launch(cfg)?;
     Ok((sys, policy, artifacts))
 }
 
@@ -114,7 +115,7 @@ fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first().cloned() else {
         eprintln!("{USAGE}");
-        bail!("missing command");
+        return Err(Error::Other("missing command".into()));
     };
     let args = Args::parse(&argv[1..])?;
 
@@ -139,7 +140,7 @@ fn main() -> Result<()> {
                 Arc::new(Corpus::synthetic(&SyntheticCorpusConfig::news20_scaled(scale)));
             println!("corpus:\n{}", corpus.stats());
             let pool = if xla {
-                Some(Arc::new(ComputePool::start(&artifacts, 1).map_err(|e| anyhow!("{e}"))?))
+                Some(Arc::new(ComputePool::start(&artifacts, 1)?))
             } else {
                 None
             };
@@ -154,8 +155,7 @@ fn main() -> Result<()> {
                     ..LdaConfig::default()
                 },
                 pool,
-            )
-            .map_err(|e| anyhow!("{e}"))?;
+            )?;
             println!(
                 "LDA [{}] tokens/s={:.0} wall={:.2}s loglik={:?}",
                 policy.name(),
@@ -167,7 +167,7 @@ fn main() -> Result<()> {
                     .collect::<Vec<_>>()
             );
             println!("{}", sys.metrics_summary());
-            sys.shutdown().map_err(|e| anyhow!("{e}"))?;
+            sys.shutdown()?;
         }
         "sgd" => {
             let (sys, policy, artifacts) = build_system(&args)?;
@@ -183,7 +183,7 @@ fn main() -> Result<()> {
                 seed: 13,
             }));
             let pool = if xla {
-                Some(Arc::new(ComputePool::start(&artifacts, 1).map_err(|e| anyhow!("{e}"))?))
+                Some(Arc::new(ComputePool::start(&artifacts, 1)?))
             } else {
                 None
             };
@@ -192,8 +192,7 @@ fn main() -> Result<()> {
                 data,
                 SgdConfig { iters, batch, policy, use_xla: xla, ..SgdConfig::default() },
                 pool,
-            )
-            .map_err(|e| anyhow!("{e}"))?;
+            )?;
             println!(
                 "SGD [{}] loss={:.4} acc={:.3} steps/s={:.0} wall={:.2}s",
                 policy.name(),
@@ -202,7 +201,7 @@ fn main() -> Result<()> {
                 res.steps_per_sec,
                 res.wall_secs
             );
-            sys.shutdown().map_err(|e| anyhow!("{e}"))?;
+            sys.shutdown()?;
         }
         "mf" => {
             let (sys, policy, _) = build_system(&args)?;
@@ -211,8 +210,7 @@ fn main() -> Result<()> {
             let rank: usize = args.get("rank", 8usize)?;
             let epochs: usize = args.get("epochs", 20usize)?;
             let data = Arc::new(MfData::synthetic(m, n, rank.min(4), 0.3, 7));
-            let res = run_mf(&sys, data, MfConfig { rank, epochs, policy, ..MfConfig::default() })
-                .map_err(|e| anyhow!("{e}"))?;
+            let res = run_mf(&sys, data, MfConfig { rank, epochs, policy, ..MfConfig::default() })?;
             println!(
                 "MF [{}] rmse={:.4} ratings/s={:.0} curve={:?}",
                 policy.name(),
@@ -223,7 +221,7 @@ fn main() -> Result<()> {
                     .map(|v| (v * 1000.0).round() / 1000.0)
                     .collect::<Vec<_>>()
             );
-            sys.shutdown().map_err(|e| anyhow!("{e}"))?;
+            sys.shutdown()?;
         }
         "transformer" => {
             let (sys, policy, artifacts) = build_system(&args)?;
@@ -231,8 +229,7 @@ fn main() -> Result<()> {
             let eta: f32 = args.get("eta", 0.05f32)?;
             let spec = Arc::new(
                 TransformerSpec::load(&artifacts)
-                    .map_err(|e| anyhow!("{e}"))
-                    .context("run `make artifacts` first")?,
+                    .map_err(|e| Error::Other(format!("{e} — run `make artifacts` first")))?,
             );
             println!(
                 "transformer: {} params, vocab={} d={} layers={}",
@@ -242,14 +239,13 @@ fn main() -> Result<()> {
                 spec.n_layers
             );
             let pool =
-                Arc::new(ComputePool::start(&artifacts, 1).map_err(|e| anyhow!("{e}"))?);
+                Arc::new(ComputePool::start(&artifacts, 1)?);
             let res = train(
                 &sys,
                 spec,
                 pool,
                 TrainConfig { steps, eta, policy, ..TrainConfig::default() },
-            )
-            .map_err(|e| anyhow!("{e}"))?;
+            )?;
             println!(
                 "transformer [{}] first-loss={:.4} last-loss={:.4} steps/s={:.2}",
                 policy.name(),
@@ -257,12 +253,12 @@ fn main() -> Result<()> {
                 res.loss_curve.last().copied().unwrap_or(0.0),
                 res.steps_per_sec
             );
-            sys.shutdown().map_err(|e| anyhow!("{e}"))?;
+            sys.shutdown()?;
         }
         "--help" | "-h" | "help" => println!("{USAGE}"),
         other => {
             eprintln!("{USAGE}");
-            bail!("unknown command '{other}'");
+            return Err(Error::Other(format!("unknown command '{other}'")));
         }
     }
     Ok(())

@@ -1,116 +1,208 @@
 //! Single-threaded PJRT engine (owned by one [`super::ComputePool`]
 //! service thread; `PjRtClient` is `Rc`-based and must not cross threads).
+//!
+//! Two backends share one API surface:
+//!
+//! * with `--features xla` the real PJRT backend loads AOT-lowered HLO
+//!   text and executes it;
+//! * without it (the default — the offline build has no `xla` crate) a
+//!   std-only stub stands in. The stub preserves the *error contract*:
+//!   missing artifact files still surface as [`Error::MissingArtifact`]
+//!   (so `make artifacts` hints keep working and artifact-gated tests
+//!   self-skip exactly as before), and anything that would need a real
+//!   compiler reports [`Error::Runtime`] instead of wrong numbers.
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
+#[cfg(feature = "xla")]
+pub use real::{Computation, Engine};
+#[cfg(not(feature = "xla"))]
+pub use stub::{Computation, Engine};
 
-use crate::error::{Error, Result};
+#[cfg(feature = "xla")]
+mod real {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::rc::Rc;
 
-use super::Tensor;
+    use crate::error::{Error, Result};
+    use crate::runtime::Tensor;
 
-/// A compiled executable (thread-confined).
-pub struct Computation {
-    exe: xla::PjRtLoadedExecutable,
-    name: String,
+    /// A compiled executable (thread-confined).
+    pub struct Computation {
+        exe: xla::PjRtLoadedExecutable,
+        name: String,
+    }
+
+    impl Computation {
+        /// Artifact name (file stem).
+        pub fn name(&self) -> &str {
+            &self.name
+        }
+
+        /// Execute with f32 tensor inputs; returns the flattened tuple of f32
+        /// outputs. The artifact must have been lowered with
+        /// `return_tuple=True` (our `aot.py` always does).
+        pub fn run_f32(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for t in inputs {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .map_err(|e| Error::Runtime(format!("reshape input: {e}")))?;
+                literals.push(lit);
+            }
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| Error::Runtime(format!("execute {}: {e}", self.name)))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| Error::Runtime(format!("to_literal {}: {e}", self.name)))?;
+            let parts = out
+                .to_tuple()
+                .map_err(|e| Error::Runtime(format!("tuple decompose {}: {e}", self.name)))?;
+            let mut tensors = Vec::with_capacity(parts.len());
+            for p in parts {
+                let shape = p
+                    .array_shape()
+                    .map_err(|e| Error::Runtime(format!("output shape {}: {e}", self.name)))?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = p
+                    .to_vec::<f32>()
+                    .map_err(|e| Error::Runtime(format!("output data {}: {e}", self.name)))?;
+                tensors.push(Tensor { data, shape: dims });
+            }
+            Ok(tensors)
+        }
+    }
+
+    /// One PJRT CPU client + a cache of compiled artifacts.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        cache: HashMap<String, Rc<Computation>>,
+        artifacts_dir: PathBuf,
+    }
+
+    impl Engine {
+        /// Create a CPU engine rooted at `artifacts_dir`.
+        pub fn cpu(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| Error::Runtime(format!("pjrt cpu: {e}")))?;
+            Ok(Engine { client, cache: HashMap::new(), artifacts_dir: artifacts_dir.into() })
+        }
+
+        /// PJRT platform name (diagnostics).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load and compile `artifacts_dir/<name>.hlo.txt` (cached).
+        pub fn load(&mut self, name: &str) -> Result<Rc<Computation>> {
+            if let Some(c) = self.cache.get(name) {
+                return Ok(c.clone());
+            }
+            let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+            let comp = self.load_path(name, &path)?;
+            self.cache.insert(name.to_string(), comp.clone());
+            Ok(comp)
+        }
+
+        /// Load and compile an explicit HLO-text path (uncached).
+        pub fn load_path(&self, name: &str, path: &Path) -> Result<Rc<Computation>> {
+            if !path.exists() {
+                return Err(Error::MissingArtifact(path.to_path_buf()));
+            }
+            let path_str = path
+                .to_str()
+                .ok_or_else(|| Error::Runtime(format!("non-utf8 path {}", path.display())))?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)
+                .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {}: {e}", path.display())))?;
+            Ok(Rc::new(Computation { exe, name: name.to_string() }))
+        }
+    }
 }
 
-impl Computation {
-    /// Artifact name (file stem).
-    pub fn name(&self) -> &str {
-        &self.name
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::rc::Rc;
+
+    use crate::error::{Error, Result};
+    use crate::runtime::Tensor;
+
+    /// Stand-in for a compiled executable; executing it is an error.
+    pub struct Computation {
+        name: String,
     }
 
-    /// Execute with f32 tensor inputs; returns the flattened tuple of f32
-    /// outputs. The artifact must have been lowered with
-    /// `return_tuple=True` (our `aot.py` always does).
-    pub fn run_f32(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for t in inputs {
-            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(&t.data)
-                .reshape(&dims)
-                .map_err(|e| Error::Runtime(format!("reshape input: {e}")))?;
-            literals.push(lit);
+    impl Computation {
+        /// Artifact name (file stem).
+        pub fn name(&self) -> &str {
+            &self.name
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| Error::Runtime(format!("execute {}: {e}", self.name)))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| Error::Runtime(format!("to_literal {}: {e}", self.name)))?;
-        let parts = out
-            .to_tuple()
-            .map_err(|e| Error::Runtime(format!("tuple decompose {}: {e}", self.name)))?;
-        let mut tensors = Vec::with_capacity(parts.len());
-        for p in parts {
-            let shape = p
-                .array_shape()
-                .map_err(|e| Error::Runtime(format!("output shape {}: {e}", self.name)))?;
-            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-            let data = p
-                .to_vec::<f32>()
-                .map_err(|e| Error::Runtime(format!("output data {}: {e}", self.name)))?;
-            tensors.push(Tensor { data, shape: dims });
+
+        /// Always fails: the stub cannot execute HLO.
+        pub fn run_f32(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            Err(Error::Runtime(format!(
+                "cannot execute '{}': bapps was built without the `xla` feature",
+                self.name
+            )))
         }
-        Ok(tensors)
-    }
-}
-
-/// One PJRT CPU client + a cache of compiled artifacts.
-pub struct Engine {
-    client: xla::PjRtClient,
-    cache: HashMap<String, Rc<Computation>>,
-    artifacts_dir: PathBuf,
-}
-
-impl Engine {
-    /// Create a CPU engine rooted at `artifacts_dir`.
-    pub fn cpu(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
-        let client =
-            xla::PjRtClient::cpu().map_err(|e| Error::Runtime(format!("pjrt cpu: {e}")))?;
-        Ok(Engine { client, cache: HashMap::new(), artifacts_dir: artifacts_dir.into() })
     }
 
-    /// PJRT platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Artifact-path bookkeeping without a PJRT client.
+    pub struct Engine {
+        cache: HashMap<String, Rc<Computation>>,
+        artifacts_dir: PathBuf,
     }
 
-    /// Load and compile `artifacts_dir/<name>.hlo.txt` (cached).
-    pub fn load(&mut self, name: &str) -> Result<Rc<Computation>> {
-        if let Some(c) = self.cache.get(name) {
-            return Ok(c.clone());
+    impl Engine {
+        /// Create a stub engine rooted at `artifacts_dir` (always succeeds).
+        pub fn cpu(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+            Ok(Engine { cache: HashMap::new(), artifacts_dir: artifacts_dir.into() })
         }
-        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
-        let comp = self.load_path(name, &path)?;
-        self.cache.insert(name.to_string(), comp.clone());
-        Ok(comp)
-    }
 
-    /// Load and compile an explicit HLO-text path (uncached).
-    pub fn load_path(&self, name: &str, path: &Path) -> Result<Rc<Computation>> {
-        if !path.exists() {
-            return Err(Error::MissingArtifact(path.to_path_buf()));
+        /// Backend name (diagnostics).
+        pub fn platform(&self) -> String {
+            "cpu-stub (xla feature disabled)".to_string()
         }
-        let path_str = path
-            .to_str()
-            .ok_or_else(|| Error::Runtime(format!("non-utf8 path {}", path.display())))?;
-        let proto = xla::HloModuleProto::from_text_file(path_str)
-            .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| Error::Runtime(format!("compile {}: {e}", path.display())))?;
-        Ok(Rc::new(Computation { exe, name: name.to_string() }))
+
+        /// Resolve `artifacts_dir/<name>.hlo.txt`; missing files report
+        /// [`Error::MissingArtifact`], present ones [`Error::Runtime`]
+        /// (the stub has no compiler).
+        pub fn load(&mut self, name: &str) -> Result<Rc<Computation>> {
+            if let Some(c) = self.cache.get(name) {
+                return Ok(c.clone());
+            }
+            let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+            let comp = self.load_path(name, &path)?;
+            self.cache.insert(name.to_string(), comp.clone());
+            Ok(comp)
+        }
+
+        /// Check an explicit HLO-text path; see [`Engine::load`].
+        pub fn load_path(&self, name: &str, path: &Path) -> Result<Rc<Computation>> {
+            if !path.exists() {
+                return Err(Error::MissingArtifact(path.to_path_buf()));
+            }
+            let _ = name;
+            Err(Error::Runtime(format!(
+                "cannot compile {}: bapps was built without the `xla` feature",
+                path.display()
+            )))
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::error::Error;
 
     #[test]
     fn missing_artifact_is_reported() {

@@ -55,6 +55,18 @@ struct ServerTable {
     desc: TableDesc,
     model: ConsistencyModel,
     store: TableStore,
+    /// Forwarded-prefix replica: batches are applied here at *forward*
+    /// time (admission through the release gate), not at arrival. Pull
+    /// replies are served from this store, never from `store`: a reply
+    /// built from the authoritative store could include a batch whose
+    /// `ServerPush` is still in flight to the puller, and the push would
+    /// then re-apply those deltas on top of the installed snapshot.
+    /// Serving the forwarded prefix makes the composition exactly-once —
+    /// on the FIFO shard→client link, every push forwarded before the
+    /// reply is delivered before it (already inside the snapshot), and
+    /// every push forwarded after it is delivered after (applied once on
+    /// top).
+    fwd: TableStore,
     /// Highest applied batch id per origin (monotone; FIFO links).
     applied_upto: HashMap<ProcId, u64>,
     vis: VisibilityTracker,
@@ -64,10 +76,12 @@ impl ServerTable {
     fn new(desc: TableDesc, num_procs: u32) -> Self {
         let model = ConsistencyModel::new(desc.policy);
         let store = TableStore::new(desc.row_kind, desc.row_width);
+        let fwd = TableStore::new(desc.row_kind, desc.row_width);
         ServerTable {
             desc,
             model,
             store,
+            fwd,
             applied_upto: HashMap::new(),
             vis: VisibilityTracker::new(num_procs),
         }
@@ -259,8 +273,13 @@ impl ServerShard {
         let prev = t.applied_upto.insert(batch.origin, batch.batch_id);
         debug_assert!(prev.map_or(true, |p| p < batch.batch_id), "batch reorder from origin");
         t.vis.observe(&batch);
-        // Admit through the (strong-VAP) release gate, then forward.
+        // Admit through the (strong-VAP) release gate, then forward. The
+        // forwarded-prefix replica advances in lockstep with the forwards
+        // so pull replies compose exactly-once with in-flight pushes.
         if let Some(b) = t.vis.admit(&t.model, batch) {
+            for (row, u) in &b.updates {
+                t.fwd.apply(*row, u);
+            }
             let min_clock = self.effective_min();
             Self::forward(&self.net, self.id, num_procs, min_clock, b);
         }
@@ -301,8 +320,10 @@ impl ServerShard {
     fn reply_pull(&mut self, requester: NodeId, table: TableId, row: RowId, worker: WorkerId) {
         let min_clock = self.effective_min();
         let t = self.table(table);
+        // Serve the *forwarded prefix*, not the authoritative store: see
+        // the `ServerTable::fwd` docs for the exactly-once argument.
         let data = t
-            .store
+            .fwd
             .get(row)
             .map(|sr| sr.data.clone())
             .unwrap_or_else(|| RowData::zeros(t.desc.row_kind, t.desc.row_width));
@@ -335,7 +356,16 @@ impl ServerShard {
             dst: NodeId::Client(origin),
             payload: Payload::VisibilityAck { table, batch_id },
         });
-        // Mass released: forward any batches the gate now admits.
+        // Mass released: forward any batches the gate now admits, keeping
+        // the forwarded-prefix replica in lockstep.
+        {
+            let t = self.table(table);
+            for b in &released {
+                for (row, u) in &b.updates {
+                    t.fwd.apply(*row, u);
+                }
+            }
+        }
         let min_clock = self.effective_min();
         for b in released {
             Self::forward(&self.net, shard, num_procs, min_clock, b);

@@ -117,12 +117,16 @@ impl VisibilityTracker {
         let mut out = Vec::new();
         loop {
             let mut progressed = false;
-            let origins: Vec<ProcId> = self
+            // Origin order: the release sequence (and therefore the forward
+            // message order) must be a pure function of tracker state for
+            // the deterministic simulator's trace-identity guarantee.
+            let mut origins: Vec<ProcId> = self
                 .held
                 .iter()
                 .filter(|(_, q)| !q.is_empty())
                 .map(|(o, _)| *o)
                 .collect();
+            origins.sort_unstable_by_key(|o| o.0);
             for origin in origins {
                 let passes = {
                     let q = self.held.get(&origin).unwrap();

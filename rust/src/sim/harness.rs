@@ -1,0 +1,953 @@
+//! The deterministic event loop, workloads and oracles.
+//!
+//! [`Sim::run`] builds the real stack — [`ClientCore`] per process,
+//! [`ServerShard`] per shard — wired over a [`SimNet`], then interleaves
+//! message deliveries and worker steps in virtual time. Workers run a
+//! seeded random script of gated reads/writes against one table; the
+//! [`Oracle`] checks every consistency bound from independent mirrors
+//! (it never trusts the client's own ledgers).
+//!
+//! See [`crate::sim`] for the determinism contract and the fault model.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::Arc;
+
+use crate::client::ClientCore;
+use crate::comm::bus::Transport;
+use crate::comm::{Msg, NetSender, Payload};
+use crate::config::{PolicyConfig, SystemConfig};
+use crate::consistency::vap;
+use crate::server::{ServerShard, TableRegistry};
+use crate::table::{RowId, RowKind, TableDesc, TableId};
+use crate::trace::TraceRecorder;
+use crate::types::{Clock, NodeId, ProcId, ShardId, WorkerId};
+use crate::util::Rng64;
+
+use super::net::{SimNet, SimNetStats};
+use super::vtrace::SimTrace;
+use super::{Sabotage, SimConfig};
+
+/// The single simulated table.
+const TABLE: TableId = TableId(0);
+
+/// Workload deltas are dyadic (exact in f32), so every sum any replica can
+/// compute is exact and order-independent — quiescence checks use `==`,
+/// not tolerances.
+const DELTAS: [f32; 6] = [-1.0, -0.5, -0.25, 0.25, 0.5, 1.0];
+
+/// Violations stored per run before the run bails out (sabotage runs
+/// would otherwise flood).
+const MAX_VIOLATIONS: usize = 64;
+
+/// Consecutive retries of one op before the harness declares livelock.
+const RETRY_CAP: u64 = 100_000;
+
+/// Total event budget per run (clean runs use a few thousand).
+const STEP_BUDGET: u64 = 50_000_000;
+
+/// One detected consistency-bound violation.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Virtual time (µs) of detection.
+    pub at: u64,
+    /// Oracle that fired: `staleness`, `value-bound`, `read-my-writes`,
+    /// `fifo`, `divergence`, `batch-order`, `clock-skew`, `quiescence`,
+    /// `livelock`.
+    pub kind: &'static str,
+    /// Human-readable specifics.
+    pub detail: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[t={}µs] {}: {}", self.at, self.kind, self.detail)
+    }
+}
+
+/// Outcome of one simulated run.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Seed that produced this run (reproduces it exactly).
+    pub seed: u64,
+    /// Policy name (`PolicyConfig::name`).
+    pub policy: String,
+    /// FNV-1a fingerprint of the full event trace.
+    pub trace_hash: u64,
+    /// Number of trace lines (events).
+    pub trace_lines: u64,
+    /// Every oracle violation (empty ⇒ the run upheld all bounds).
+    pub violations: Vec<Violation>,
+    /// Violations dropped past [`MAX_VIOLATIONS`].
+    pub violations_truncated: u64,
+    /// Network delivery counters.
+    pub net: SimNetStats,
+    /// Successfully completed ops (including clock ticks).
+    pub ops_completed: u64,
+    /// Op attempts that came back gated (retried later).
+    pub retries: u64,
+    /// Last trace lines (only populated by [`Sim::run_traced`]).
+    pub trace_tail: Vec<String>,
+}
+
+impl SimReport {
+    /// Did the run uphold every checked bound?
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Multi-line failure/summary text for logs.
+    pub fn describe(&self) -> String {
+        let mut s = format!(
+            "seed={} policy={} events={} hash={:016x} ops={} retries={} \
+             sent={} delivered={} retrans={} dup_inj={} dup_filt={}\n",
+            self.seed,
+            self.policy,
+            self.trace_lines,
+            self.trace_hash,
+            self.ops_completed,
+            self.retries,
+            self.net.sent,
+            self.net.delivered,
+            self.net.delayed_retrans,
+            self.net.duplicates_injected,
+            self.net.duplicates_filtered,
+        );
+        if self.ok() {
+            s.push_str("no violations\n");
+        } else {
+            s.push_str(&format!(
+                "{} violation(s) (+{} truncated):\n",
+                self.violations.len(),
+                self.violations_truncated
+            ));
+            for v in &self.violations {
+                s.push_str(&format!("  {v}\n"));
+            }
+        }
+        for line in &self.trace_tail {
+            s.push_str(&format!("  | {line}\n"));
+        }
+        s
+    }
+}
+
+/// One scripted operation. `FifoWrite` is two gated increments (column 0
+/// then column 1) and resumes at the blocked stage on retry so column 0 is
+/// never double-applied.
+#[derive(Debug, Clone, Copy)]
+enum Op {
+    IncShared { row: u64, col: u32, delta: f32 },
+    GetShared { row: u64, col: u32 },
+    IncOwn { delta: f32 },
+    GetOwn,
+    FifoWrite,
+    FifoRead,
+    Tick,
+}
+
+/// One simulated worker thread: a seeded script plus resumable op state.
+struct SimWorker {
+    wid: WorkerId,
+    proc: usize,
+    rng: Rng64,
+    /// True clock mirror: number of completed `Clock()` calls. The
+    /// staleness oracle judges reads against this, independent of what
+    /// the worker told the gate (sabotage!).
+    clock: Clock,
+    round: u32,
+    op_in_round: usize,
+    cur: Option<Op>,
+    fifo_stage: u8,
+    retries_cur: u64,
+    /// Exact running sum of this worker's private row (read-my-writes).
+    own_expected: f32,
+    cost_us: u64,
+    done: bool,
+}
+
+impl SimWorker {
+    /// Next scripted op, or `None` when the script is exhausted.
+    fn plan_next(&mut self, cfg: &SimConfig) -> Option<Op> {
+        if self.round >= cfg.rounds {
+            return None;
+        }
+        if self.op_in_round >= cfg.ops_per_round {
+            return Some(Op::Tick);
+        }
+        if cfg.sabotage == Sabotage::WriteGate {
+            // Hammer one parameter with +1s so the pending sum provably
+            // crosses any v_thr ≥ u_obs = 1 before the first release.
+            return Some(Op::IncShared { row: 0, col: 0, delta: 1.0 });
+        }
+        let op = match self.rng.below(10) {
+            0..=3 => Op::IncShared {
+                row: self.rng.below(cfg.shared_rows as usize) as u64,
+                col: self.rng.below(cfg.cols as usize) as u32,
+                delta: DELTAS[self.rng.below(DELTAS.len())],
+            },
+            4 | 5 => Op::GetShared {
+                row: self.rng.below(cfg.shared_rows as usize) as u64,
+                col: self.rng.below(cfg.cols as usize) as u32,
+            },
+            6 => Op::IncOwn { delta: DELTAS[self.rng.below(DELTAS.len())] },
+            7 => Op::GetOwn,
+            8 => Op::FifoWrite,
+            _ => Op::FifoRead,
+        };
+        Some(op)
+    }
+
+    fn finish_op(&mut self) {
+        if matches!(self.cur, Some(Op::Tick)) {
+            self.round += 1;
+            self.op_in_round = 0;
+        } else {
+            self.op_in_round += 1;
+        }
+        self.cur = None;
+        self.retries_cur = 0;
+        self.fifo_stage = 0;
+    }
+}
+
+/// Independent invariant mirrors. Fed by the harness with deliveries and
+/// op outcomes; records [`Violation`]s.
+pub struct Oracle {
+    policy: PolicyConfig,
+    /// VAP ledger mirror: signed pending sum per `(proc, row, col)`.
+    /// Grows at admitted writes, shrinks when the origin's
+    /// `VisibilityAck` is *delivered* — the same release point the client
+    /// uses, but tracked from the wire, not from client internals.
+    pending: HashMap<(u32, u64, u32), f64>,
+    /// Per-param signed masses of each pushed batch, keyed
+    /// `(origin, batch_id)`, recorded when the push crosses the wire.
+    batch_mass: HashMap<(u32, u64), Vec<((u64, u32), f64)>>,
+    /// Last batch id seen per `(origin, shard)` (strict monotonicity).
+    last_batch: HashMap<(u32, u32), u64>,
+    /// Largest |delta| any worker wrote (the paper's `u`).
+    u_obs: f32,
+    violations: Vec<Violation>,
+    truncated: u64,
+}
+
+impl Oracle {
+    /// Fresh oracle for one run under `policy`.
+    pub fn new(policy: PolicyConfig) -> Self {
+        Oracle {
+            policy,
+            pending: HashMap::new(),
+            batch_mass: HashMap::new(),
+            last_batch: HashMap::new(),
+            u_obs: 0.0,
+            violations: Vec::new(),
+            truncated: 0,
+        }
+    }
+
+    /// Violations recorded so far.
+    pub fn violations(&self) -> &[Violation] {
+        &self.violations
+    }
+
+    fn violate(&mut self, at: u64, kind: &'static str, detail: String) {
+        if self.violations.len() >= MAX_VIOLATIONS {
+            self.truncated += 1;
+            return;
+        }
+        self.violations.push(Violation { at, kind, detail });
+    }
+
+    /// Observe one wire delivery (before it is dispatched to the node).
+    pub fn observe_delivery(&mut self, at: u64, msg: &Msg) {
+        match (&msg.payload, msg.dst) {
+            (Payload::PushUpdates(b), NodeId::Server(s)) => {
+                let key = (b.origin.0, s.0);
+                if let Some(&prev) = self.last_batch.get(&key) {
+                    if b.batch_id <= prev {
+                        self.violate(
+                            at,
+                            "batch-order",
+                            format!(
+                                "origin {} batch {} after {} at shard {}",
+                                b.origin.0, b.batch_id, prev, s.0
+                            ),
+                        );
+                    }
+                }
+                self.last_batch.insert(key, b.batch_id);
+                if self.policy.v_thr().is_some() {
+                    let mut masses: Vec<((u64, u32), f64)> = Vec::new();
+                    for (row, u) in &b.updates {
+                        for (col, v) in u.iter_nonzero() {
+                            masses.push(((row.0, col), v as f64));
+                        }
+                    }
+                    self.batch_mass.insert((b.origin.0, b.batch_id), masses);
+                }
+            }
+            (Payload::VisibilityAck { batch_id, .. }, NodeId::Client(p)) => {
+                if let Some(masses) = self.batch_mass.remove(&(p.0, *batch_id)) {
+                    for ((row, col), m) in masses {
+                        let e = self.pending.entry((p.0, row, col)).or_insert(0.0);
+                        *e -= m;
+                        if e.abs() < 1e-12 {
+                            self.pending.remove(&(p.0, row, col));
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Record an admitted write and check the VAP value bound: past the
+    /// write gate, per-param pending mass must stay within
+    /// `max(v_thr, u_obs)`.
+    pub fn record_write(&mut self, at: u64, proc: u32, row: u64, col: u32, delta: f32) {
+        self.u_obs = self.u_obs.max(delta.abs());
+        if let Some(v_thr) = self.policy.v_thr() {
+            let e = self.pending.entry((proc, row, col)).or_insert(0.0);
+            *e += delta as f64;
+            let sum = *e;
+            let bound = v_thr.max(self.u_obs) as f64 + 1e-6;
+            if sum.abs() > bound {
+                self.violate(
+                    at,
+                    "value-bound",
+                    format!(
+                        "proc {proc} row {row} col {col}: |pending {sum}| > max(v_thr, u) = {bound}"
+                    ),
+                );
+            }
+        }
+    }
+
+    /// A gated read succeeded: its effective row clock must satisfy the
+    /// staleness bound for the worker's *true* clock.
+    pub fn check_staleness(&mut self, at: u64, wid: WorkerId, true_clock: Clock, row: u64, eff: Clock) {
+        if let Some(s) = self.policy.staleness() {
+            let required = true_clock.saturating_sub(s.saturating_add(1));
+            if eff < required {
+                self.violate(
+                    at,
+                    "staleness",
+                    format!(
+                        "worker {} at clock {true_clock} read row {row} at effective clock \
+                         {eff} < required {required} (s = {s})",
+                        wid.0
+                    ),
+                );
+            }
+        }
+    }
+
+    /// Replica views must stay within the paper's divergence bound
+    /// (checked at each clock tick for the value-bounded policies).
+    ///
+    /// Slack: the implementation's accounting is process-granular and
+    /// signed, so transient states can exceed the *strong* bound
+    /// `2·max(u, v_thr)` by the gated in-flight mass; the check allows 2×
+    /// for strong (the sharp per-origin invariant is carried by
+    /// [`Oracle::record_write`], and quiescence demands exact equality).
+    /// The weak bound `max(u, v_thr)·P` needs no slack: every view
+    /// difference decomposes into per-origin un-released pending sums,
+    /// each within `max(u, v_thr)`, over at most `procs ≤ P` origins.
+    pub fn check_divergence(&mut self, at: u64, cfg: &SimConfig, cores: &[ClientCore]) {
+        let Some(v_thr) = self.policy.v_thr() else { return };
+        let strong = matches!(
+            self.policy,
+            PolicyConfig::Vap { strong: true, .. } | PolicyConfig::Cvap { strong: true, .. }
+        );
+        let bound = vap::divergence_bound(v_thr, strong, cfg.num_workers(), self.u_obs);
+        let slack = if strong { 2.0 } else { 1.0 };
+        let lim = bound * slack + 1e-3;
+        for row in 0..cfg.num_rows() {
+            for col in 0..cfg.cols {
+                let mut lo = f32::INFINITY;
+                let mut hi = f32::NEG_INFINITY;
+                for core in cores {
+                    let (s, _, _, o, e) = core.debug_param(TABLE, RowId(row), col);
+                    let view = s + o + e;
+                    lo = lo.min(view);
+                    hi = hi.max(view);
+                }
+                if hi - lo > lim {
+                    self.violate(
+                        at,
+                        "divergence",
+                        format!(
+                            "row {row} col {col}: view spread {} > {lim} \
+                             (bound {bound}, u_obs {}, strong {strong})",
+                            hi - lo,
+                            self.u_obs
+                        ),
+                    );
+                    return;
+                }
+            }
+        }
+    }
+
+    /// After drain: the network is silent, so every replica must agree
+    /// exactly — with the servers, with each other, and with each
+    /// worker's private running sums. Exact `==` is sound because the
+    /// workload's deltas are dyadic.
+    pub fn check_quiescence(
+        &mut self,
+        at: u64,
+        cfg: &SimConfig,
+        desc: &TableDesc,
+        cores: &[ClientCore],
+        shards: &[ServerShard],
+        own_finals: &[(usize, u64, f32)],
+    ) {
+        let leftover: Vec<String> = self
+            .pending
+            .iter()
+            .filter(|(_, v)| v.abs() > 1e-9)
+            .map(|((p, r, c), v)| format!("proc {p} row {r} col {c}: {v}"))
+            .collect();
+        for l in leftover {
+            self.violate(at, "quiescence", format!("oracle ledger not drained: {l}"));
+        }
+        for (p, core) in cores.iter().enumerate() {
+            let (mass, batches) = core.debug_pending(TABLE);
+            if mass.abs() > 1e-9 || batches != 0 {
+                self.violate(
+                    at,
+                    "quiescence",
+                    format!("proc {p}: client pending mass {mass}, {batches} unacked batches"),
+                );
+            }
+        }
+        for row in 0..cfg.num_rows() {
+            let shard = desc.shard_of(RowId(row), cfg.shards);
+            let srow = shards[shard.0 as usize].row_snapshot(TABLE, RowId(row));
+            for col in 0..cfg.cols {
+                let sval = srow.as_ref().and_then(|d| d.get(col)).unwrap_or(0.0);
+                let mut first: Option<f32> = None;
+                for (p, core) in cores.iter().enumerate() {
+                    let (s, _, _, o, e) = core.debug_param(TABLE, RowId(row), col);
+                    if o != 0.0 || e != 0.0 {
+                        self.violate(
+                            at,
+                            "quiescence",
+                            format!("proc {p} row {row} col {col}: overlay {o} egress {e} at rest"),
+                        );
+                    }
+                    let view = s + o + e;
+                    match first {
+                        None => first = Some(view),
+                        Some(f) if view != f => self.violate(
+                            at,
+                            "quiescence",
+                            format!("row {row} col {col}: proc {p} sees {view}, proc 0 sees {f}"),
+                        ),
+                        _ => {}
+                    }
+                    if view != sval {
+                        self.violate(
+                            at,
+                            "quiescence",
+                            format!(
+                                "row {row} col {col}: proc {p} view {view} != server {sval} \
+                                 (shard {})",
+                                shard.0
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+        for &(proc, row, expected) in own_finals {
+            let (s, _, _, o, e) = cores[proc].debug_param(TABLE, RowId(row), col0());
+            let view = s + o + e;
+            if view != expected {
+                self.violate(
+                    at,
+                    "read-my-writes",
+                    format!("proc {proc} own row {row}: final {view} != written {expected}"),
+                );
+            }
+        }
+    }
+}
+
+/// Column the private-row ops use.
+fn col0() -> u32 {
+    0
+}
+
+/// The simulator entry points.
+pub struct Sim;
+
+impl Sim {
+    /// Run one configuration; fingerprint-only trace (fast path for
+    /// sweeps).
+    pub fn run(cfg: &SimConfig) -> SimReport {
+        Self::run_inner(cfg, false)
+    }
+
+    /// Run with full trace storage; the report carries a trace tail for
+    /// failure forensics.
+    pub fn run_traced(cfg: &SimConfig) -> SimReport {
+        Self::run_inner(cfg, true)
+    }
+
+    fn run_inner(cfg: &SimConfig, keep_trace: bool) -> SimReport {
+        assert!(cfg.procs >= 1 && cfg.threads_per_proc >= 1 && cfg.shards >= 1);
+        assert!(cfg.cols >= 2, "FIFO oracle needs ≥ 2 columns");
+        assert!(cfg.shared_rows >= 1);
+
+        let registry = Arc::new(TableRegistry::default());
+        registry
+            .insert(TableDesc {
+                id: TABLE,
+                num_rows: cfg.num_rows(),
+                row_width: cfg.cols,
+                row_kind: RowKind::Dense,
+                policy: cfg.policy,
+            })
+            .unwrap();
+        let desc = registry.get(TABLE).unwrap();
+
+        let net = Arc::new(SimNet::new(
+            cfg.seed ^ 0x9E37_79B9_7F4A_7C15,
+            cfg.faults,
+        ));
+        let transport: Arc<dyn Transport> = net.clone();
+        let sender = NetSender::from_transport(transport);
+
+        let sys = SystemConfig::builder()
+            .num_server_shards(cfg.shards)
+            .num_client_procs(cfg.procs)
+            .threads_per_proc(cfg.threads_per_proc)
+            .trace(false)
+            .build();
+
+        let mut shards: Vec<ServerShard> = (0..cfg.shards)
+            .map(|s| ServerShard::new(ShardId(s), cfg.procs, registry.clone(), sender.clone()))
+            .collect();
+        let cores: Vec<ClientCore> = (0..cfg.procs)
+            .map(|p| {
+                ClientCore::new(
+                    ProcId(p),
+                    sys.clone(),
+                    registry.clone(),
+                    sender.clone(),
+                    Arc::new(TraceRecorder::new(false)),
+                )
+            })
+            .collect();
+
+        let base_cost = cfg.op_cost_us.max(1);
+        let mut workers: Vec<SimWorker> = (0..cfg.num_workers())
+            .map(|widx| {
+                let mult = cfg
+                    .stragglers
+                    .iter()
+                    .find(|(w, _)| *w == widx)
+                    .map_or(1.0, |(_, m)| *m);
+                SimWorker {
+                    wid: WorkerId(widx),
+                    proc: (widx / cfg.threads_per_proc) as usize,
+                    // Fixed mixing off the master seed: worker streams are
+                    // decorrelated by the splitmix init inside Rng64.
+                    rng: Rng64::seed_from_u64(
+                        cfg.seed ^ (0x517c_c1b7_2722_0a95u64.wrapping_mul(widx as u64 + 1)),
+                    ),
+                    clock: 0,
+                    round: 0,
+                    op_in_round: 0,
+                    cur: None,
+                    fifo_stage: 0,
+                    retries_cur: 0,
+                    own_expected: 0.0,
+                    cost_us: ((base_cost as f64) * mult).max(1.0) as u64,
+                    done: false,
+                }
+            })
+            .collect();
+        for w in &workers {
+            cores[w.proc].register_worker(w.wid);
+        }
+
+        let mut trace = SimTrace::new(keep_trace);
+        let mut oracle = Oracle::new(cfg.policy);
+        let mut heap: BinaryHeap<Reverse<(u64, usize)>> = workers
+            .iter()
+            .enumerate()
+            .map(|(i, w)| Reverse((w.cost_us, i)))
+            .collect();
+
+        let mut now: u64 = 0;
+        let mut ops_completed: u64 = 0;
+        let mut retries_total: u64 = 0;
+        let mut steps: u64 = 0;
+
+        loop {
+            steps += 1;
+            if steps > STEP_BUDGET {
+                oracle.violate(now, "livelock", "global step budget exhausted".into());
+                break;
+            }
+            if oracle.violations.len() >= MAX_VIOLATIONS {
+                break;
+            }
+            let tm = net.next_arrival();
+            let tw = heap.peek().map(|&Reverse((t, _))| t);
+            let deliver = match (tm, tw) {
+                (None, None) => break,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                // Messages win ties: the delivery was scheduled first.
+                (Some(a), Some(b)) => a <= b,
+            };
+            if deliver {
+                let Some((at, msg)) = net.pop_next() else { continue };
+                now = at;
+                oracle.observe_delivery(at, &msg);
+                trace.push(format!(
+                    "{at} net {}->{} {}",
+                    msg.src,
+                    msg.dst,
+                    msg.payload.kind()
+                ));
+                match msg.dst {
+                    NodeId::Server(s) => {
+                        shards[s.0 as usize].handle(msg);
+                    }
+                    NodeId::Client(p) => {
+                        cores[p.0 as usize].handle_ingress(msg);
+                    }
+                    NodeId::Coordinator => {}
+                }
+            } else {
+                let Reverse((t, widx)) = heap.pop().unwrap();
+                now = now.max(t);
+                net.advance_to(t);
+                let w = &mut workers[widx];
+                if w.cur.is_none() {
+                    w.cur = w.plan_next(cfg);
+                    if w.cur.is_none() {
+                        w.done = true;
+                        continue;
+                    }
+                }
+                let complete = exec_op(cfg, &cores, w, &mut oracle, &mut trace, t);
+                if complete {
+                    ops_completed += 1;
+                    w.finish_op();
+                } else {
+                    w.retries_cur += 1;
+                    retries_total += 1;
+                    if w.retries_cur > RETRY_CAP {
+                        let detail = format!(
+                            "worker {} stuck on {:?} after {RETRY_CAP} retries",
+                            w.wid.0, w.cur
+                        );
+                        oracle.violate(t, "livelock", detail);
+                        w.done = true;
+                        continue;
+                    }
+                }
+                if !w.done {
+                    heap.push(Reverse((t + w.cost_us, widx)));
+                }
+            }
+        }
+
+        // Drain: flush leftovers (a livelock-killed worker may hold
+        // egress), then run the network dry.
+        for core in &cores {
+            let _ = core.flush_all_tables();
+        }
+        trace.push(format!("{now} drain"));
+        let mut drain_steps: u64 = 0;
+        while let Some((at, msg)) = net.pop_next() {
+            drain_steps += 1;
+            if drain_steps > STEP_BUDGET {
+                oracle.violate(at, "livelock", "drain did not quiesce".into());
+                break;
+            }
+            now = at;
+            oracle.observe_delivery(at, &msg);
+            trace.push(format!(
+                "{at} net {}->{} {}",
+                msg.src,
+                msg.dst,
+                msg.payload.kind()
+            ));
+            match msg.dst {
+                NodeId::Server(s) => {
+                    shards[s.0 as usize].handle(msg);
+                }
+                NodeId::Client(p) => {
+                    cores[p.0 as usize].handle_ingress(msg);
+                }
+                NodeId::Coordinator => {}
+            }
+        }
+
+        let own_finals: Vec<(usize, u64, f32)> = workers
+            .iter()
+            .map(|w| (w.proc, cfg.own_row(w.wid.0), w.own_expected))
+            .collect();
+        oracle.check_quiescence(now, cfg, &desc, &cores, &shards, &own_finals);
+
+        SimReport {
+            seed: cfg.seed,
+            policy: cfg.policy.name(),
+            trace_hash: trace.hash(),
+            trace_lines: trace.len(),
+            violations: oracle.violations.clone(),
+            violations_truncated: oracle.truncated,
+            net: net.stats(),
+            ops_completed,
+            retries: retries_total,
+            trace_tail: trace.tail(40),
+        }
+    }
+}
+
+/// Execute (or re-attempt) the worker's current op. Returns `true` when
+/// the op completed; `false` means a gate held it and it will be retried.
+fn exec_op(
+    cfg: &SimConfig,
+    cores: &[ClientCore],
+    w: &mut SimWorker,
+    oracle: &mut Oracle,
+    trace: &mut SimTrace,
+    at: u64,
+) -> bool {
+    let core = &cores[w.proc];
+    let proc = w.proc as u32;
+    let op = w.cur.expect("exec without a planned op");
+    match op {
+        Op::IncShared { row, col, delta } => {
+            if cfg.sabotage == Sabotage::WriteGate {
+                core.sabotage_inc(TABLE, RowId(row), col, delta).unwrap();
+                oracle.record_write(at, proc, row, col, delta);
+                trace.push(format!("{at} w{} sab_inc r{row}c{col} {delta:?}", w.wid.0));
+                return true;
+            }
+            if core.try_inc(TABLE, RowId(row), col, delta).unwrap() {
+                oracle.record_write(at, proc, row, col, delta);
+                trace.push(format!("{at} w{} inc r{row}c{col} {delta:?}", w.wid.0));
+                true
+            } else {
+                trace.push(format!("{at} w{} inc r{row}c{col} blocked", w.wid.0));
+                false
+            }
+        }
+        Op::GetShared { row, col } => {
+            let rc = if cfg.sabotage == Sabotage::ReadGate { 0 } else { w.clock };
+            match core.try_get(TABLE, RowId(row), col, rc).unwrap() {
+                Some(v) => {
+                    // Effective clock re-read in the same step: no
+                    // deliveries can interleave, so it is exactly what
+                    // the read observed.
+                    let (_, snap_c, floor, _, _) = core.debug_param(TABLE, RowId(row), col);
+                    oracle.check_staleness(at, w.wid, w.clock, row, snap_c.max(floor));
+                    trace.push(format!("{at} w{} get r{row}c{col} -> {v:?}", w.wid.0));
+                    true
+                }
+                None => {
+                    trace.push(format!("{at} w{} get r{row}c{col} blocked", w.wid.0));
+                    false
+                }
+            }
+        }
+        Op::IncOwn { delta } => {
+            let row = cfg.own_row(w.wid.0);
+            if core.try_inc(TABLE, RowId(row), col0(), delta).unwrap() {
+                w.own_expected += delta;
+                oracle.record_write(at, proc, row, col0(), delta);
+                trace.push(format!("{at} w{} inc_own {delta:?}", w.wid.0));
+                true
+            } else {
+                trace.push(format!("{at} w{} inc_own blocked", w.wid.0));
+                false
+            }
+        }
+        Op::GetOwn => {
+            let row = cfg.own_row(w.wid.0);
+            match core.try_get(TABLE, RowId(row), col0(), w.clock).unwrap() {
+                Some(v) => {
+                    if v != w.own_expected {
+                        oracle.violate(
+                            at,
+                            "read-my-writes",
+                            format!(
+                                "worker {} read own row {row}: {v} != written {}",
+                                w.wid.0, w.own_expected
+                            ),
+                        );
+                    }
+                    trace.push(format!("{at} w{} get_own -> {v:?}", w.wid.0));
+                    true
+                }
+                None => {
+                    trace.push(format!("{at} w{} get_own blocked", w.wid.0));
+                    false
+                }
+            }
+        }
+        Op::FifoWrite => {
+            let row = cfg.fifo_row();
+            if w.fifo_stage == 0 {
+                if !core.try_inc(TABLE, RowId(row), 0, 1.0).unwrap() {
+                    trace.push(format!("{at} w{} fifo_w0 blocked", w.wid.0));
+                    return false;
+                }
+                oracle.record_write(at, proc, row, 0, 1.0);
+                w.fifo_stage = 1;
+            }
+            if !core.try_inc(TABLE, RowId(row), 1, 1.0).unwrap() {
+                trace.push(format!("{at} w{} fifo_w1 blocked", w.wid.0));
+                return false;
+            }
+            oracle.record_write(at, proc, row, 1, 1.0);
+            trace.push(format!("{at} w{} fifo_w", w.wid.0));
+            true
+        }
+        Op::FifoRead => {
+            let row = cfg.fifo_row();
+            // Both columns in one step ⇒ one consistent view: nothing can
+            // be delivered between the two reads.
+            let Some(v0) = core.try_get(TABLE, RowId(row), 0, w.clock).unwrap() else {
+                trace.push(format!("{at} w{} fifo_r blocked", w.wid.0));
+                return false;
+            };
+            let Some(v1) = core.try_get(TABLE, RowId(row), 1, w.clock).unwrap() else {
+                trace.push(format!("{at} w{} fifo_r blocked", w.wid.0));
+                return false;
+            };
+            if v0 < v1 {
+                oracle.violate(
+                    at,
+                    "fifo",
+                    format!(
+                        "worker {} sees col1 sum {v1} ahead of col0 sum {v0}: some writer's \
+                         second write overtook its first",
+                        w.wid.0
+                    ),
+                );
+            }
+            trace.push(format!("{at} w{} fifo_r {v0:?}/{v1:?}", w.wid.0));
+            true
+        }
+        Op::Tick => {
+            let c = core.clock(w.wid).unwrap();
+            w.clock += 1;
+            if c != w.clock {
+                oracle.violate(
+                    at,
+                    "clock-skew",
+                    format!("worker {}: Clock() returned {c}, mirror {}", w.wid.0, w.clock),
+                );
+            }
+            oracle.check_divergence(at, cfg, cores);
+            trace.push(format!("{at} w{} clock {c}", w.wid.0));
+            true
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::FaultConfig;
+
+    fn policies() -> Vec<PolicyConfig> {
+        vec![
+            PolicyConfig::Bsp,
+            PolicyConfig::Ssp { staleness: 1 },
+            PolicyConfig::Cap { staleness: 1 },
+            PolicyConfig::Vap { v_thr: 2.0, strong: false },
+            PolicyConfig::Vap { v_thr: 2.0, strong: true },
+            PolicyConfig::Cvap { staleness: 2, v_thr: 2.0, strong: true },
+        ]
+    }
+
+    #[test]
+    fn same_seed_same_trace_every_policy() {
+        for pol in policies() {
+            let cfg = SimConfig::default().with_policy(pol).with_seed(7);
+            let a = Sim::run(&cfg);
+            let b = Sim::run(&cfg);
+            assert_eq!(a.trace_hash, b.trace_hash, "{}: trace diverged", a.policy);
+            assert_eq!(a.trace_lines, b.trace_lines, "{}: event count diverged", a.policy);
+            assert!(a.ok(), "{}", a.describe());
+        }
+    }
+
+    #[test]
+    fn different_seeds_different_traces() {
+        let a = Sim::run(&SimConfig::default().with_seed(1));
+        let b = Sim::run(&SimConfig::default().with_seed(2));
+        assert_ne!(a.trace_hash, b.trace_hash);
+    }
+
+    #[test]
+    fn chaos_runs_uphold_all_bounds() {
+        for pol in policies() {
+            for seed in [11, 12, 13] {
+                let r = Sim::run(&SimConfig::default().with_policy(pol).with_seed(seed));
+                assert!(r.ok(), "{}", r.describe());
+                assert!(r.ops_completed > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn straggler_run_is_clean() {
+        let mut cfg = SimConfig::default()
+            .with_policy(PolicyConfig::Ssp { staleness: 2 })
+            .with_seed(5);
+        cfg.stragglers = vec![(0, 8.0)];
+        let r = Sim::run(&cfg);
+        assert!(r.ok(), "{}", r.describe());
+    }
+
+    #[test]
+    fn sabotaged_read_gate_is_caught() {
+        // Bypassing the staleness gate (reads claim clock 0) under high
+        // latency must surface stale reads to the oracle.
+        let mut caught = false;
+        for seed in 1..=8u64 {
+            let mut cfg = SimConfig::default().with_policy(PolicyConfig::Bsp).with_seed(seed);
+            cfg.sabotage = Sabotage::ReadGate;
+            cfg.faults = FaultConfig { latency_us: 500, jitter_us: 200, ..FaultConfig::none() };
+            cfg.op_cost_us = 10;
+            let r = Sim::run(&cfg);
+            if r.violations.iter().any(|v| v.kind == "staleness") {
+                caught = true;
+                break;
+            }
+        }
+        assert!(caught, "read-gate sabotage never tripped the staleness oracle");
+    }
+
+    #[test]
+    fn sabotaged_write_gate_is_caught() {
+        let mut cfg = SimConfig::default()
+            .with_policy(PolicyConfig::Vap { v_thr: 1.0, strong: false })
+            .with_seed(3);
+        cfg.sabotage = Sabotage::WriteGate;
+        let r = Sim::run(&cfg);
+        assert!(
+            r.violations.iter().any(|v| v.kind == "value-bound"),
+            "write-gate sabotage never tripped the value oracle: {}",
+            r.describe()
+        );
+    }
+
+    #[test]
+    fn traced_run_carries_tail() {
+        let r = Sim::run_traced(&SimConfig::default().with_seed(9));
+        assert!(!r.trace_tail.is_empty());
+        assert!(r.ok(), "{}", r.describe());
+    }
+}

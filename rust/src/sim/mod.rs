@@ -1,0 +1,237 @@
+//! Deterministic simulation harness with fault injection.
+//!
+//! Drives the **real** client/server/consistency stack — [`crate::client::ClientCore`],
+//! [`crate::server::ServerShard`], the [`crate::consistency`] gates and the
+//! [`crate::clock`] vector clocks — through a simulated transport
+//! ([`net::SimNet`]) that implements the production [`crate::comm::Transport`]
+//! surface. No threads: one virtual-time event loop interleaves message
+//! deliveries and worker steps, so every run is a deterministic function of
+//! `(SimConfig, seed)`.
+//!
+//! ## Determinism contract
+//!
+//! * All randomness — fault injection, workloads, straggler jitter — flows
+//!   from a single [`crate::util::Rng64`] lineage seeded by `SimConfig::seed`
+//!   (the network and each worker get independent streams derived from it by
+//!   fixed mixing, never from wall-clock or iteration order).
+//! * Time is virtual (µs, `u64`). Events are ordered lexicographically by
+//!   `(time, sequence-number)`; a global monotone sequence number breaks
+//!   ties, and **message deliveries win ties against worker steps** so the
+//!   rule is total.
+//! * The stack itself emits messages purely as a function of its state:
+//!   every multi-recipient iteration in client/server code is sorted
+//!   (see the determinism notes in `client::core` and
+//!   `server::visibility`), and the simulated network preserves per-link
+//!   FIFO exactly like the production bus.
+//!
+//! Consequence: identical seed + config ⇒ **byte-identical event trace**
+//! (and therefore identical [`SimReport::trace_hash`]). The suite asserts
+//! this on every policy.
+//!
+//! ## Fault model
+//!
+//! [`FaultConfig`] injects, per message: base latency, uniform jitter,
+//! probabilistic extra retransmission delay (a "drop" whose retry is folded
+//! into one longer delay — the link stays exactly-once and FIFO, like TCP),
+//! and duplicate deliveries (filtered at the receiver edge by link sequence
+//! number, like TCP's). `SimConfig::stragglers` slows chosen workers by a
+//! multiplier. None of this may violate the paper's bounds — that is the
+//! point.
+//!
+//! ## Oracles
+//!
+//! [`harness::Oracle`] checks, on every run, from independent mirrors (it
+//! never trusts client-internal ledgers):
+//!
+//! * **staleness** — SSP/CAP/CVAP reads never observe a row older than
+//!   `c − s − 1` (computed with the oracle's own saturating arithmetic);
+//! * **value bound** — VAP/CVAP per-parameter pending mass never exceeds
+//!   `max(v_thr, u_obs)` past the write gate;
+//! * **read-my-writes** and per-worker **FIFO** for every policy;
+//! * **divergence** — replica views stay within
+//!   [`crate::consistency::ConsistencyModel::divergence_bound`];
+//! * **quiescence** — after drain: all replicas byte-equal to the servers
+//!   (exactly, not approximately: workloads use dyadic deltas so f32
+//!   sums are exact).
+//!
+//! ## Reproducing a failing seed
+//!
+//! A sweep failure report names the seed. To reproduce:
+//!
+//! ```no_run
+//! use bapps::sim::{Sim, SimConfig};
+//! let cfg = SimConfig::default().with_seed(0xBAD5EED);
+//! let report = Sim::run(&cfg);            // byte-identical every time
+//! eprintln!("{}", report.describe());     // violations + trace tail
+//! ```
+//!
+//! [`sweep::shrink`] then minimizes the schedule: it greedily disables
+//! fault classes and shrinks the workload while the failure persists,
+//! yielding the smallest configuration (and its trace) that still fails.
+
+pub mod harness;
+pub mod net;
+pub mod sweep;
+pub mod vtrace;
+
+pub use harness::{Oracle, Sim, SimReport, Violation};
+pub use net::{SimNet, SimNetStats};
+pub use sweep::{shrink, sweep, SweepOutcome};
+pub use vtrace::SimTrace;
+
+use crate::config::PolicyConfig;
+
+/// Per-message fault injection knobs. All delays in virtual µs.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultConfig {
+    /// Base one-way latency added to every message.
+    pub latency_us: u64,
+    /// Uniform extra jitter in `[0, jitter_us]` (reorders across links;
+    /// per-link FIFO is re-imposed after delay assignment).
+    pub jitter_us: u64,
+    /// Probability a message is "dropped" and must be retransmitted. The
+    /// retry is folded into one longer delay of `+retrans_us`, keeping the
+    /// link exactly-once.
+    pub drop_p: f64,
+    /// Extra delay a dropped message pays.
+    pub retrans_us: u64,
+    /// Probability a duplicate copy of a message is injected after it.
+    /// Duplicates carry the same link sequence number and are filtered at
+    /// the receiver edge — they stress the filter, not the stack.
+    pub dup_p: f64,
+    /// How long after the original the duplicate lands.
+    pub dup_extra_us: u64,
+}
+
+impl FaultConfig {
+    /// No faults: fixed small latency, nothing else.
+    pub fn none() -> Self {
+        FaultConfig {
+            latency_us: 5,
+            jitter_us: 0,
+            drop_p: 0.0,
+            retrans_us: 0,
+            dup_p: 0.0,
+            dup_extra_us: 0,
+        }
+    }
+
+    /// The default chaos mix used by the sweeps: latency comparable to the
+    /// op cost, jitter well above it (heavy cross-link reordering), 5%
+    /// drops with a long retransmit, 5% duplicates.
+    pub fn chaos() -> Self {
+        FaultConfig {
+            latency_us: 50,
+            jitter_us: 120,
+            drop_p: 0.05,
+            retrans_us: 300,
+            dup_p: 0.05,
+            dup_extra_us: 90,
+        }
+    }
+}
+
+/// Deliberately broken invariants for oracle self-tests: a harness whose
+/// oracles never fire proves nothing, so the suite runs sabotaged
+/// configurations and asserts they are caught.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sabotage {
+    /// Healthy run.
+    None,
+    /// Workers read with `reader_clock = 0`, so the client-side staleness
+    /// gate trivially passes while the oracle still judges reads against
+    /// the worker's true clock. Under latency this must trip the
+    /// staleness oracle.
+    ReadGate,
+    /// Writes go through [`crate::client::ClientCore::sabotage_inc`],
+    /// skipping the VAP write gate. Must trip the value-bound oracle.
+    WriteGate,
+}
+
+/// Full description of one simulated run. `Default` is the standard small
+/// topology (2 procs × 2 workers, 2 shards) under chaos faults.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Master seed; the only source of randomness.
+    pub seed: u64,
+    /// Consistency policy for the single simulated table.
+    pub policy: PolicyConfig,
+    /// Client processes.
+    pub procs: u32,
+    /// Worker threads per process.
+    pub threads_per_proc: u32,
+    /// Server shards.
+    pub shards: u32,
+    /// Shared rows workers contend on (plus 1 FIFO row and one private
+    /// row per worker, allocated after them).
+    pub shared_rows: u64,
+    /// Columns per row (≥ 2; the FIFO check uses columns 0 and 1).
+    pub cols: u32,
+    /// Clock periods each worker runs.
+    pub rounds: u32,
+    /// Random ops per worker between clocks.
+    pub ops_per_round: usize,
+    /// Virtual cost of one op (µs).
+    pub op_cost_us: u64,
+    /// `(worker index, slowdown multiplier)` stragglers.
+    pub stragglers: Vec<(u32, f64)>,
+    /// Network fault injection.
+    pub faults: FaultConfig,
+    /// Oracle self-test mode.
+    pub sabotage: Sabotage,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            seed: 1,
+            policy: PolicyConfig::Ssp { staleness: 1 },
+            procs: 2,
+            threads_per_proc: 2,
+            shards: 2,
+            shared_rows: 6,
+            cols: 3,
+            rounds: 8,
+            ops_per_round: 6,
+            op_cost_us: 20,
+            stragglers: Vec::new(),
+            faults: FaultConfig::chaos(),
+            sabotage: Sabotage::None,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Same run, different seed (the sweep/shrink workhorse).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Same run, different policy.
+    pub fn with_policy(mut self, policy: PolicyConfig) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Total worker count.
+    pub fn num_workers(&self) -> u32 {
+        self.procs * self.threads_per_proc
+    }
+
+    /// Row layout: shared rows first, then the FIFO row, then one private
+    /// row per worker.
+    pub fn fifo_row(&self) -> u64 {
+        self.shared_rows
+    }
+
+    /// The private read-my-writes row of `worker`.
+    pub fn own_row(&self, worker: u32) -> u64 {
+        self.shared_rows + 1 + worker as u64
+    }
+
+    /// Total rows in the simulated table.
+    pub fn num_rows(&self) -> u64 {
+        self.shared_rows + 1 + self.num_workers() as u64
+    }
+}

@@ -1,0 +1,165 @@
+//! Seed sweeps and failing-schedule shrinking.
+//!
+//! [`sweep`] runs one configuration across a seed range and collects every
+//! failing report. [`shrink`] takes a failing configuration and greedily
+//! simplifies it — disabling fault classes, dropping stragglers, shrinking
+//! the workload — keeping each simplification only if the failure
+//! persists, so the survivor is a minimal reproduction to debug against
+//! (determinism makes every re-run exact).
+
+use super::harness::{Sim, SimReport};
+use super::{FaultConfig, SimConfig};
+
+/// Result of a seed sweep.
+#[derive(Debug)]
+pub struct SweepOutcome {
+    /// Runs executed.
+    pub runs: u64,
+    /// `(seed, report)` for every failing run.
+    pub failures: Vec<(u64, SimReport)>,
+}
+
+impl SweepOutcome {
+    /// Did every run uphold every bound?
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    /// One line per failure (for assertion messages).
+    pub fn describe(&self) -> String {
+        if self.ok() {
+            return format!("{} runs, no violations", self.runs);
+        }
+        let mut s = format!("{} of {} runs failed:\n", self.failures.len(), self.runs);
+        for (seed, rep) in &self.failures {
+            s.push_str(&format!("--- seed {seed} ---\n{}", rep.describe()));
+        }
+        s
+    }
+}
+
+/// Run `base` across `seeds`, collecting failures.
+pub fn sweep(base: &SimConfig, seeds: std::ops::Range<u64>) -> SweepOutcome {
+    let mut runs = 0;
+    let mut failures = Vec::new();
+    for seed in seeds {
+        runs += 1;
+        let report = Sim::run(&base.clone().with_seed(seed));
+        if !report.ok() {
+            // Re-run with trace storage so the failure report carries a
+            // schedule tail (identical by determinism).
+            failures.push((seed, Sim::run_traced(&base.clone().with_seed(seed))));
+        }
+    }
+    SweepOutcome { runs, failures }
+}
+
+/// Candidate simplifications, most aggressive first. Each either disables
+/// a fault class, removes stragglers, or shrinks the workload.
+fn candidates(c: &SimConfig) -> Vec<SimConfig> {
+    let mut out = Vec::new();
+    if c.faults.dup_p > 0.0 {
+        let mut n = c.clone();
+        n.faults = FaultConfig { dup_p: 0.0, ..n.faults };
+        out.push(n);
+    }
+    if c.faults.drop_p > 0.0 {
+        let mut n = c.clone();
+        n.faults = FaultConfig { drop_p: 0.0, ..n.faults };
+        out.push(n);
+    }
+    if c.faults.jitter_us > 0 {
+        let mut n = c.clone();
+        n.faults = FaultConfig { jitter_us: 0, ..n.faults };
+        out.push(n);
+    }
+    if !c.stragglers.is_empty() {
+        let mut n = c.clone();
+        n.stragglers = Vec::new();
+        out.push(n);
+    }
+    if c.rounds > 1 {
+        let mut n = c.clone();
+        n.rounds /= 2;
+        out.push(n);
+    }
+    if c.ops_per_round > 1 {
+        let mut n = c.clone();
+        n.ops_per_round /= 2;
+        out.push(n);
+    }
+    if c.shared_rows > 1 {
+        let mut n = c.clone();
+        n.shared_rows /= 2;
+        out.push(n);
+    }
+    out
+}
+
+/// Greedily minimize a failing configuration. Returns the simplest
+/// configuration that still fails together with its (traced) report.
+/// `cfg` itself must fail; if it does not, it is returned unchanged with
+/// its clean report.
+pub fn shrink(cfg: &SimConfig) -> (SimConfig, SimReport) {
+    let mut cur = cfg.clone();
+    let mut rep = Sim::run_traced(&cur);
+    if rep.ok() {
+        return (cur, rep);
+    }
+    loop {
+        let mut progressed = false;
+        for cand in candidates(&cur) {
+            let r = Sim::run_traced(&cand);
+            if !r.ok() {
+                cur = cand;
+                rep = r;
+                progressed = true;
+                break;
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    (cur, rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PolicyConfig;
+    use crate::sim::Sabotage;
+
+    #[test]
+    fn sweep_collects_no_failures_on_clean_config() {
+        let out = sweep(&SimConfig::default(), 100..108);
+        assert!(out.ok(), "{}", out.describe());
+        assert_eq!(out.runs, 8);
+    }
+
+    #[test]
+    fn shrink_minimizes_a_sabotaged_failure() {
+        // The write-gate sabotage fails under any schedule, so the
+        // shrinker should strip every fault class and most of the
+        // workload while the failure persists.
+        let mut cfg = SimConfig::default()
+            .with_policy(PolicyConfig::Vap { v_thr: 1.0, strong: false })
+            .with_seed(4);
+        cfg.sabotage = Sabotage::WriteGate;
+        let (min_cfg, rep) = shrink(&cfg);
+        assert!(!rep.ok(), "shrunk config must still fail");
+        assert_eq!(min_cfg.faults.dup_p, 0.0, "duplicates eliminated");
+        assert_eq!(min_cfg.faults.drop_p, 0.0, "drops eliminated");
+        assert_eq!(min_cfg.faults.jitter_us, 0, "jitter eliminated");
+        assert!(min_cfg.rounds <= cfg.rounds / 2, "workload shrunk");
+        assert!(!rep.trace_tail.is_empty(), "shrunk report carries a trace tail");
+    }
+
+    #[test]
+    fn shrink_returns_clean_config_unchanged() {
+        let cfg = SimConfig::default().with_seed(21);
+        let (min_cfg, rep) = shrink(&cfg);
+        assert!(rep.ok());
+        assert_eq!(min_cfg.rounds, cfg.rounds);
+    }
+}

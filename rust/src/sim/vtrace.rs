@@ -1,0 +1,105 @@
+//! Virtual-time event trace with an incremental FNV-1a fingerprint.
+//!
+//! The harness appends one formatted line per event (delivery, op, clock
+//! tick, violation). The 64-bit hash is updated incrementally so the
+//! determinism check ("identical seed ⇒ byte-identical trace") is cheap
+//! even when line storage is disabled; the sweep runs with storage off and
+//! only failing seeds are re-run with storage on to print a tail.
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Append-only event log: always hashes and counts, optionally stores.
+pub struct SimTrace {
+    hash: u64,
+    lines: u64,
+    keep: bool,
+    entries: Vec<String>,
+}
+
+impl SimTrace {
+    /// `keep = true` stores every line (debugging / failure reports);
+    /// `false` only fingerprints.
+    pub fn new(keep: bool) -> Self {
+        SimTrace { hash: FNV_OFFSET, lines: 0, keep, entries: Vec::new() }
+    }
+
+    /// Append one event line (no trailing newline; one is hashed in).
+    pub fn push(&mut self, line: String) {
+        for b in line.as_bytes() {
+            self.hash ^= *b as u64;
+            self.hash = self.hash.wrapping_mul(FNV_PRIME);
+        }
+        self.hash ^= b'\n' as u64;
+        self.hash = self.hash.wrapping_mul(FNV_PRIME);
+        self.lines += 1;
+        if self.keep {
+            self.entries.push(line);
+        }
+    }
+
+    /// Fingerprint over all lines so far.
+    pub fn hash(&self) -> u64 {
+        self.hash
+    }
+
+    /// Number of lines appended.
+    pub fn len(&self) -> u64 {
+        self.lines
+    }
+
+    /// True if nothing was appended.
+    pub fn is_empty(&self) -> bool {
+        self.lines == 0
+    }
+
+    /// Last `n` stored lines (empty when storage is off).
+    pub fn tail(&self, n: usize) -> Vec<String> {
+        let start = self.entries.len().saturating_sub(n);
+        self.entries[start..].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_matches_reference_fnv() {
+        // FNV-1a of "a\n" computed by hand: offset ^ 'a' * p ^ '\n' * p.
+        let mut expect = FNV_OFFSET;
+        expect ^= b'a' as u64;
+        expect = expect.wrapping_mul(FNV_PRIME);
+        expect ^= b'\n' as u64;
+        expect = expect.wrapping_mul(FNV_PRIME);
+        let mut t = SimTrace::new(false);
+        t.push("a".to_string());
+        assert_eq!(t.hash(), expect);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn storage_toggle_does_not_change_hash() {
+        let mut a = SimTrace::new(false);
+        let mut b = SimTrace::new(true);
+        for s in ["x", "y", "zz"] {
+            a.push(s.to_string());
+            b.push(s.to_string());
+        }
+        assert_eq!(a.hash(), b.hash());
+        assert!(a.tail(10).is_empty());
+        assert_eq!(b.tail(2), vec!["y".to_string(), "zz".to_string()]);
+    }
+
+    #[test]
+    fn line_split_is_not_ambiguous() {
+        // "ab" + "c" must differ from "a" + "bc" (newline separator).
+        let mut a = SimTrace::new(false);
+        a.push("ab".into());
+        a.push("c".into());
+        let mut b = SimTrace::new(false);
+        b.push("a".into());
+        b.push("bc".into());
+        assert_ne!(a.hash(), b.hash());
+    }
+}

@@ -1,0 +1,129 @@
+//! Deterministic-simulation acceptance suite.
+//!
+//! Exercises the real client/server/consistency stack through the `sim`
+//! harness: a ≥1000-seed sweep across all six policies under chaos faults
+//! must uphold every bound; identical seeds must produce byte-identical
+//! traces; sabotaged gates must be caught; the shrinker must minimize a
+//! failing schedule.
+
+use bapps::config::PolicyConfig;
+use bapps::sim::{shrink, sweep, FaultConfig, Sabotage, Sim, SimConfig};
+
+fn policies() -> Vec<PolicyConfig> {
+    vec![
+        PolicyConfig::Bsp,
+        PolicyConfig::Ssp { staleness: 1 },
+        PolicyConfig::Cap { staleness: 1 },
+        PolicyConfig::Vap { v_thr: 2.0, strong: false },
+        PolicyConfig::Vap { v_thr: 2.0, strong: true },
+        PolicyConfig::Cvap { staleness: 2, v_thr: 2.0, strong: true },
+    ]
+}
+
+/// The headline acceptance sweep: 6 policies × 170 seeds = 1020 runs
+/// under the chaos fault mix (latency, jitter, drops-with-retry,
+/// duplicates), every run checked by every oracle.
+#[test]
+fn thousand_seed_chaos_sweep_upholds_all_bounds() {
+    for pol in policies() {
+        let base = SimConfig::default().with_policy(pol);
+        let out = sweep(&base, 1000..1170);
+        assert!(out.ok(), "policy {:?}:\n{}", pol, out.describe());
+        assert_eq!(out.runs, 170);
+    }
+}
+
+/// Identical seed + config ⇒ byte-identical event trace, for every
+/// policy, fault mix on.
+#[test]
+fn trace_identity_per_policy() {
+    for pol in policies() {
+        for seed in [42, 43] {
+            let cfg = SimConfig::default().with_policy(pol).with_seed(seed);
+            let a = Sim::run(&cfg);
+            let b = Sim::run(&cfg);
+            assert_eq!(
+                (a.trace_hash, a.trace_lines),
+                (b.trace_hash, b.trace_lines),
+                "{:?} seed {seed}: nondeterministic trace",
+                pol
+            );
+        }
+    }
+}
+
+/// Stragglers (one worker 8× slower, one 3×) stress the staleness gates
+/// without violating them.
+#[test]
+fn straggler_sweep_is_clean() {
+    for pol in policies() {
+        let mut base = SimConfig::default().with_policy(pol);
+        base.stragglers = vec![(0, 8.0), (3, 3.0)];
+        let out = sweep(&base, 300..316);
+        assert!(out.ok(), "policy {:?}:\n{}", pol, out.describe());
+    }
+}
+
+/// A deliberately broken read gate (reads claim clock 0) must be caught
+/// by the staleness oracle — the harness's own self-test, driven through
+/// the public API.
+#[test]
+fn broken_read_gate_is_caught() {
+    let mut caught = false;
+    for seed in 1..=8u64 {
+        let mut cfg = SimConfig::default().with_policy(PolicyConfig::Bsp).with_seed(seed);
+        cfg.sabotage = Sabotage::ReadGate;
+        cfg.faults = FaultConfig { latency_us: 500, jitter_us: 200, ..FaultConfig::none() };
+        cfg.op_cost_us = 10;
+        let r = Sim::run(&cfg);
+        if r.violations.iter().any(|v| v.kind == "staleness") {
+            caught = true;
+            break;
+        }
+    }
+    assert!(caught, "staleness oracle never fired on a sabotaged read gate");
+}
+
+/// A deliberately broken write gate must be caught by the value-bound
+/// oracle, and the shrinker must reduce the failure to a fault-free,
+/// small-workload reproduction.
+#[test]
+fn broken_write_gate_is_caught_and_shrunk() {
+    let mut cfg = SimConfig::default()
+        .with_policy(PolicyConfig::Vap { v_thr: 1.0, strong: false })
+        .with_seed(7);
+    cfg.sabotage = Sabotage::WriteGate;
+    let r = Sim::run(&cfg);
+    assert!(
+        r.violations.iter().any(|v| v.kind == "value-bound"),
+        "value oracle never fired: {}",
+        r.describe()
+    );
+
+    let (min_cfg, min_rep) = shrink(&cfg);
+    assert!(!min_rep.ok(), "shrunk reproduction must still fail");
+    assert_eq!(min_cfg.faults.dup_p, 0.0);
+    assert_eq!(min_cfg.faults.drop_p, 0.0);
+    assert_eq!(min_cfg.faults.jitter_us, 0);
+    assert!(min_cfg.rounds < cfg.rounds);
+    assert!(!min_rep.trace_tail.is_empty(), "minimal repro carries its schedule tail");
+}
+
+/// Fault bookkeeping sanity: the chaos mix actually injects what it
+/// claims (retransmissions and duplicates occur, duplicates are filtered,
+/// delivery is exactly-once).
+#[test]
+fn chaos_faults_actually_fire() {
+    let r = Sim::run(&SimConfig::default().with_seed(77));
+    assert!(r.ok(), "{}", r.describe());
+    assert!(r.net.delayed_retrans > 0, "no retransmissions at drop_p = 0.05");
+    assert!(r.net.duplicates_injected > 0, "no duplicates at dup_p = 0.05");
+    assert_eq!(
+        r.net.duplicates_injected, r.net.duplicates_filtered,
+        "every injected duplicate must be filtered at the receiver edge"
+    );
+    assert_eq!(
+        r.net.sent, r.net.delivered,
+        "exactly-once delivery: every sent message delivered exactly once"
+    );
+}
