@@ -3,11 +3,17 @@
 //! 1000+-seed sweep lives in `rust/tests/sim_faults.rs`). Pinned seeds
 //! keep failures quotable: re-running the printed seed reproduces the
 //! exact schedule.
+//!
+//! With `--crash`, runs the crash-recovery slice instead: 16 pinned
+//! seeds per policy with a mid-run shard crash (checkpoint + WAL
+//! respawn, heartbeat detection, client resync — the full suite lives
+//! in `rust/tests/sim_recovery.rs`).
 
 use bapps::config::PolicyConfig;
 use bapps::sim::{sweep, SimConfig};
 
 fn main() {
+    let crash = std::env::args().any(|a| a == "--crash");
     let policies = [
         PolicyConfig::Bsp,
         PolicyConfig::Ssp { staleness: 1 },
@@ -17,9 +23,18 @@ fn main() {
         PolicyConfig::Cvap { staleness: 2, v_thr: 2.0, strong: true },
     ];
     for pol in policies {
-        let out = sweep(&SimConfig::default().with_policy(pol), 9000..9064);
+        let (base, seeds) = if crash {
+            (SimConfig::default().with_policy(pol).with_crash(0, 2_500, 2_000), 9500..9516)
+        } else {
+            (SimConfig::default().with_policy(pol), 9000..9064)
+        };
+        let out = sweep(&base, seeds);
         assert!(out.ok(), "policy {:?}:\n{}", pol, out.describe());
         println!("{:?}: {} seeds clean", pol, out.runs);
     }
-    println!("sim smoke sweep: all policies clean");
+    if crash {
+        println!("sim crash-recovery sweep: all policies clean");
+    } else {
+        println!("sim smoke sweep: all policies clean");
+    }
 }

@@ -1,7 +1,7 @@
 //! The per-process client core: shared caches, ingress and flusher loops.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
 use std::time::{Duration, Instant};
 
@@ -50,6 +50,10 @@ pub struct ClientCore {
     pub staleness: Arc<StalenessHist>,
     /// Trace recorder (may be disabled).
     pub trace: Arc<TraceRecorder>,
+    /// Last `ShardRecovered` incarnation seen per shard; stamps the
+    /// process-level `ClockNotify` sends. (Batch stamping lives in each
+    /// `TableState`, under its lock — see the field comment there.)
+    shard_epochs: Vec<AtomicU32>,
     stop: AtomicBool,
 }
 
@@ -63,6 +67,7 @@ impl ClientCore {
         net: NetSender,
         trace: Arc<TraceRecorder>,
     ) -> Self {
+        let shard_epochs = (0..cfg.num_server_shards).map(|_| AtomicU32::new(0)).collect();
         ClientCore {
             proc,
             cfg,
@@ -73,6 +78,7 @@ impl ClientCore {
             metrics: Arc::new(WorkerMetrics::default()),
             staleness: Arc::new(StalenessHist::default()),
             trace,
+            shard_epochs,
             stop: AtomicBool::new(false),
         }
     }
@@ -333,10 +339,11 @@ impl ClientCore {
         };
         if let Some(m) = advanced {
             for s in 0..self.cfg.num_server_shards {
+                let epoch = self.shard_epochs[s as usize].load(Ordering::Relaxed);
                 let _ = self.net.send(Msg {
                     src: NodeId::Client(self.proc),
                     dst: NodeId::Server(ShardId(s)),
-                    payload: Payload::ClockNotify { proc: self.proc, clock: m },
+                    payload: Payload::ClockNotify { proc: self.proc, clock: m, epoch },
                 });
             }
         }
@@ -361,9 +368,12 @@ impl ClientCore {
         Ok(())
     }
 
-    /// Flush eager tables only (flusher thread body). Id order, for the
-    /// same determinism reason as [`ClientCore::flush_all_tables`].
-    fn flush_eager_tables(&self) {
+    /// Flush eager tables only (flusher thread body; also driven directly
+    /// by the deterministic simulator's virtual-time flusher ticks, so
+    /// the CAP/VAP eager path is exercised without wall-clock threads).
+    /// Id order, for the same determinism reason as
+    /// [`ClientCore::flush_all_tables`].
+    pub fn flush_eager_tables(&self) {
         let mut handles: Vec<(TableId, Arc<ClientTable>)> =
             self.tables.read().unwrap().iter().map(|(id, t)| (*id, t.clone())).collect();
         handles.sort_unstable_by_key(|(id, _)| id.0);
@@ -445,14 +455,25 @@ impl ClientCore {
             reason: BlockReason::Staleness,
         });
         let t0 = Instant::now();
+        // Re-issue the pull with exponential backoff: the in-flight
+        // request may have died with a crashed shard, and the reply is
+        // idempotent (stale installs are ignored), so retrying is safe.
+        let mut retry_after = Duration::from_millis(self.cfg.pull_retry_ms);
+        let mut next_retry = t0 + retry_after;
         loop {
             // Ensure a pull with sufficient freshness is in flight.
+            let retry = self.cfg.pull_retry_ms > 0 && Instant::now() >= next_retry;
             let needs_pull =
-                st.inflight_pulls.get(&row).map_or(true, |&needed| needed < required);
+                retry || st.inflight_pulls.get(&row).map_or(true, |&needed| needed < required);
             if needs_pull {
                 st.inflight_pulls.insert(row, required);
                 let shard = st.desc.shard_of(row, self.cfg.num_server_shards);
                 self.metrics.pulls.fetch_add(1, Ordering::Relaxed);
+                if retry {
+                    self.metrics.pull_retries.fetch_add(1, Ordering::Relaxed);
+                    retry_after = retry_after.saturating_mul(2);
+                }
+                next_retry = Instant::now() + retry_after;
                 let _ = self.net.send(Msg {
                     src: NodeId::Client(self.proc),
                     dst: NodeId::Server(shard),
@@ -576,20 +597,35 @@ impl ClientCore {
         match msg.payload {
             Payload::ServerPush(push) => {
                 if let Ok(t) = self.table(push.table) {
-                    {
+                    let fresh = {
                         let mut st = t.state.lock().unwrap();
-                        st.apply_server_push(self.proc, &push);
+                        // A recovered shard may resend a batch whose first
+                        // delivery survived the crash: apply exactly once.
+                        let fresh = match msg.src {
+                            NodeId::Server(s) => {
+                                st.note_applied(s, push.origin, push.batch_id)
+                            }
+                            _ => true,
+                        };
+                        if fresh {
+                            st.apply_server_push(self.proc, &push);
+                        }
+                        fresh
+                    };
+                    if fresh {
+                        self.trace.record(|| Event::Applied {
+                            at: Instant::now(),
+                            proc: self.proc,
+                            table: push.table,
+                            origin: push.origin,
+                            batch_id: push.batch_id,
+                            min_clock: push.min_clock,
+                        });
+                        t.cv.notify_all();
                     }
-                    self.trace.record(|| Event::Applied {
-                        at: Instant::now(),
-                        proc: self.proc,
-                        table: push.table,
-                        origin: push.origin,
-                        batch_id: push.batch_id,
-                        min_clock: push.min_clock,
-                    });
-                    t.cv.notify_all();
-                    // Ack so the shard can track global visibility.
+                    // Ack so the shard can track global visibility — even
+                    // for a duplicate: the lost message may have been the
+                    // ack itself, not the push.
                     if let NodeId::Server(_) = msg.src {
                         let _ = self.net.send(Msg {
                             src: NodeId::Client(self.proc),
@@ -655,14 +691,89 @@ impl ClientCore {
                     });
                 }
             }
+            Payload::ShardRecovered { shard, epoch } => self.on_shard_recovered(shard, epoch),
+            Payload::AckProbe { table, origin, batch_id } => {
+                // A recovered shard asks whether we saw this batch before
+                // the crash (our ack may have died with it). Re-ack iff
+                // applied; stay silent otherwise — the origin's
+                // retransmission will produce a fresh push/ack cycle.
+                if let (NodeId::Server(shard), Ok(t)) = (msg.src, self.table(table)) {
+                    let applied =
+                        t.state.lock().unwrap().already_applied(shard, origin, batch_id);
+                    if applied {
+                        let _ = self.net.send(Msg {
+                            src: NodeId::Client(self.proc),
+                            dst: msg.src,
+                            payload: Payload::PushAck { table, origin, batch_id, by: self.proc },
+                        });
+                    }
+                }
+            }
             Payload::Shutdown => return false,
             // Clients never receive these:
             Payload::PushUpdates(_)
             | Payload::PullRow { .. }
             | Payload::ClockNotify { .. }
-            | Payload::PushAck { .. } => {}
+            | Payload::PushAck { .. }
+            | Payload::Ping { .. }
+            | Payload::Pong { .. } => {}
         }
         true
+    }
+
+    /// React to a shard's recovery announcement: adopt the new epoch,
+    /// retransmit every sent-but-unechoed batch (the set the crash can
+    /// have lost), re-promise our progress, and re-issue pulls that may
+    /// have died with the old incarnation. Batches go out with their
+    /// *original* clocks, so the shard's staleness bookkeeping sees the
+    /// same history it would have without the crash; the server's
+    /// per-origin dedup absorbs any batch that actually survived.
+    fn on_shard_recovered(&self, shard: ShardId, epoch: u32) {
+        self.shard_epochs[shard.0 as usize].fetch_max(epoch, Ordering::Relaxed);
+        let mut handles: Vec<(TableId, Arc<ClientTable>)> =
+            self.tables.read().unwrap().iter().map(|(id, t)| (*id, t.clone())).collect();
+        handles.sort_unstable_by_key(|(id, _)| id.0);
+        let mut pulls: Vec<(TableId, RowId, Clock)> = Vec::new();
+        for (id, t) in &handles {
+            // Epoch bump + retransmit under one lock acquisition: a flush
+            // slipping between them would carry the new epoch with a
+            // higher batch id and orphan the retransmissions behind the
+            // server's per-origin watermark.
+            let mut st = t.state.lock().unwrap();
+            st.set_shard_epoch(shard, epoch);
+            for batch in st.retransmit_batches(shard, epoch) {
+                self.metrics.pushes_retransmitted.fetch_add(1, Ordering::Relaxed);
+                let _ = self.net.send(Msg {
+                    src: NodeId::Client(self.proc),
+                    dst: NodeId::Server(shard),
+                    payload: Payload::PushUpdates(batch),
+                });
+            }
+            for (row, needed) in st.pulls_on_shard(shard) {
+                pulls.push((*id, row, needed));
+            }
+        }
+        // The progress promise goes out *after* the retransmissions on
+        // this link, so "all updates stamped ≤ m precede it" still holds.
+        let m = self.min_clock();
+        let _ = self.net.send(Msg {
+            src: NodeId::Client(self.proc),
+            dst: NodeId::Server(shard),
+            payload: Payload::ClockNotify { proc: self.proc, clock: m, epoch },
+        });
+        for (table, row, needed_clock) in pulls {
+            self.metrics.pulls.fetch_add(1, Ordering::Relaxed);
+            let _ = self.net.send(Msg {
+                src: NodeId::Client(self.proc),
+                dst: NodeId::Server(shard),
+                payload: Payload::PullRow {
+                    table,
+                    row,
+                    needed_clock,
+                    worker: WorkerId(u32::MAX),
+                },
+            });
+        }
     }
 
     /// Flusher loop: periodically drain eager tables until stopped.

@@ -14,9 +14,14 @@ use crate::consistency::ConsistencyModel;
 use crate::table::{RowData, RowId, RowUpdate, TableDesc, TableStore};
 use crate::types::{Clock, ProcId, ShardId};
 
-/// A sent-but-not-yet-echoed batch kept for read-my-writes.
+/// A sent-but-not-yet-echoed batch kept for read-my-writes — and, since
+/// the crash-recovery work, for retransmission: the entry keeps the
+/// clock the batch was originally stamped with so a resend after a
+/// shard restart carries the *same* logical position (replay must not
+/// move updates forward in time, or the staleness bound would lie).
 struct OverlayEntry {
     batch_id: u64,
+    clock: Clock,
     updates: Vec<(RowId, RowUpdate)>,
 }
 
@@ -45,6 +50,20 @@ pub struct TableState {
     batch_mags: HashMap<u64, Vec<((RowId, u32), f32)>>,
     /// Outstanding pulls: row → highest requested freshness.
     pub inflight_pulls: HashMap<RowId, Clock>,
+    /// Highest server-push batch id applied per `(shard, origin)`. The
+    /// forwarded stream per link is FIFO and deduplicated server-side, so
+    /// a max suffices; it answers a recovered shard's `AckProbe` ("did
+    /// you see this batch?") and shields the overlay from duplicates.
+    applied_from: HashMap<(ShardId, ProcId), u64>,
+    /// This process (for rebuilding batches on retransmission).
+    origin: ProcId,
+    /// Last announced incarnation per shard; stamps outgoing batches.
+    /// Lives *here* (under the table lock) rather than on the core so
+    /// that a resync can atomically bump the epoch and retransmit the
+    /// overlay — a flush racing ahead with the new epoch would otherwise
+    /// advance the server's per-origin dedup watermark past the
+    /// retransmissions and orphan them.
+    shard_epochs: Vec<u32>,
     /// Batch assembly.
     batcher: Batcher,
     /// Largest delta magnitude this process wrote (diagnostics: paper's u).
@@ -71,6 +90,9 @@ impl TableState {
             pending_sum: HashMap::new(),
             batch_mags: HashMap::new(),
             inflight_pulls: HashMap::new(),
+            applied_from: HashMap::new(),
+            origin,
+            shard_epochs: vec![0; num_shards as usize],
             batcher: Batcher::new(origin, max_batch),
             u_local: 0.0,
             num_shards,
@@ -215,13 +237,15 @@ impl TableState {
         if updates.is_empty() {
             return Vec::new();
         }
-        let batches = self.batcher.make_batches(&self.desc, self.num_shards, updates, clock);
+        let mut batches = self.batcher.make_batches(&self.desc, self.num_shards, updates, clock);
         let track_mass = self.model.v_thr().is_some();
-        for (shard, b) in &batches {
-            self.overlay
-                .entry(*shard)
-                .or_default()
-                .push_back(OverlayEntry { batch_id: b.batch_id, updates: b.updates.clone() });
+        for (shard, b) in &mut batches {
+            b.epoch = self.shard_epochs[shard.0 as usize];
+            self.overlay.entry(*shard).or_default().push_back(OverlayEntry {
+                batch_id: b.batch_id,
+                clock: b.clock,
+                updates: b.updates.clone(),
+            });
             if track_mass {
                 let mut masses = Vec::new();
                 for (row, u) in &b.updates {
@@ -238,6 +262,74 @@ impl TableState {
     /// True when the egress queue holds unsent updates.
     pub fn has_unsent(&self) -> bool {
         !self.egress.is_empty()
+    }
+
+    /// Record that a server push from `shard` was applied. Returns
+    /// `false` (and records nothing) when the batch was already seen —
+    /// the caller must then skip [`TableState::apply_server_push`] but
+    /// should still re-ack, since the original ack may be what was lost.
+    pub fn note_applied(&mut self, shard: ShardId, origin: ProcId, batch_id: u64) -> bool {
+        match self.applied_from.get_mut(&(shard, origin)) {
+            Some(m) if batch_id <= *m => false,
+            Some(m) => {
+                *m = batch_id;
+                true
+            }
+            None => {
+                self.applied_from.insert((shard, origin), batch_id);
+                true
+            }
+        }
+    }
+
+    /// Has a server push `(origin, batch_id)` from `shard` been applied?
+    /// (The answer a recovered shard's `AckProbe` asks for.)
+    pub fn already_applied(&self, shard: ShardId, origin: ProcId, batch_id: u64) -> bool {
+        self.applied_from.get(&(shard, origin)).map_or(false, |&m| batch_id <= m)
+    }
+
+    /// Adopt a shard's announced incarnation: subsequent batches to it
+    /// carry `epoch`. Must be called (under the table lock) *before*
+    /// retransmitting the overlay — see the field comment.
+    pub fn set_shard_epoch(&mut self, shard: ShardId, epoch: u32) {
+        let e = &mut self.shard_epochs[shard.0 as usize];
+        if epoch > *e {
+            *e = epoch;
+        }
+    }
+
+    /// Rebuild the sent-but-unechoed batches for `shard`, in batch-id
+    /// order, stamped with the shard's **new** `epoch` but their
+    /// **original** clocks. Called on `ShardRecovered`: everything the
+    /// crashed shard may have lost is exactly this queue (echoed batches
+    /// were durably logged before the echo was sent).
+    pub fn retransmit_batches(&self, shard: ShardId, epoch: u32) -> Vec<PushBatch> {
+        self.overlay.get(&shard).map_or_else(Vec::new, |q| {
+            q.iter()
+                .map(|e| PushBatch {
+                    table: self.desc.id,
+                    origin: self.origin,
+                    batch_id: e.batch_id,
+                    updates: e.updates.clone(),
+                    clock: e.clock,
+                    epoch,
+                })
+                .collect()
+        })
+    }
+
+    /// Outstanding pulls whose row lives on `shard`, as
+    /// `(row, needed clock)` pairs sorted by row id (re-issued after the
+    /// shard recovers, since the original request may have died with it).
+    pub fn pulls_on_shard(&self, shard: ShardId) -> Vec<(RowId, Clock)> {
+        let mut v: Vec<(RowId, Clock)> = self
+            .inflight_pulls
+            .iter()
+            .filter(|(row, _)| self.desc.shard_of(**row, self.num_shards) == shard)
+            .map(|(row, c)| (*row, *c))
+            .collect();
+        v.sort_by_key(|(row, _)| row.0);
+        v
     }
 
     /// Apply a server push. For foreign batches: apply deltas to the
@@ -549,5 +641,66 @@ mod tests {
         st.apply_inc(RowId(0), 0, 100.0);
         assert_eq!(st.pending_mass(RowId(0), 0), 0.0);
         assert!(st.write_admissible(RowId(0), 0, f32::MAX));
+    }
+
+    #[test]
+    fn retransmit_rebuilds_unechoed_batches_with_original_clocks() {
+        let mut st = state(PolicyConfig::Cap { staleness: 1 });
+        st.apply_inc(RowId(3), 1, 2.0);
+        let sent = st.make_push_batches(usize::MAX, 4);
+        assert_eq!(sent.len(), 1);
+        let (shard, b) = &sent[0];
+        st.apply_inc(RowId(3), 1, 1.0);
+        st.make_push_batches(usize::MAX, 5);
+
+        // Both batches are unechoed: both come back, ids ordered, the
+        // original clocks preserved, the caller's (new) epoch stamped.
+        let re = st.retransmit_batches(*shard, 7);
+        assert_eq!(re.len(), 2);
+        assert_eq!((re[0].batch_id, re[0].clock, re[0].epoch), (b.batch_id, 4, 7));
+        assert_eq!(re[1].clock, 5);
+        assert_eq!(re[0].origin, ProcId(0));
+
+        // Echo the first: it leaves the retransmission set.
+        let e = echo(&st, b, 0);
+        st.apply_server_push(ProcId(0), &e);
+        assert_eq!(st.retransmit_batches(*shard, 7).len(), 1);
+    }
+
+    #[test]
+    fn note_applied_dedups_and_answers_probes() {
+        let mut st = state(PolicyConfig::Cap { staleness: 1 });
+        let (s, o) = (ShardId(1), ProcId(3));
+        assert!(!st.already_applied(s, o, 0));
+        assert!(st.note_applied(s, o, 0));
+        assert!(!st.note_applied(s, o, 0), "duplicate rejected");
+        assert!(st.note_applied(s, o, 1));
+        assert!(st.already_applied(s, o, 0));
+        assert!(st.already_applied(s, o, 1));
+        assert!(!st.already_applied(s, o, 2));
+        // other links are independent
+        assert!(!st.already_applied(ShardId(0), o, 0));
+        assert!(!st.already_applied(s, ProcId(2), 0));
+    }
+
+    #[test]
+    fn pulls_on_shard_filters_and_sorts() {
+        let mut st = state(PolicyConfig::Ssp { staleness: 0 });
+        // With 2 shards, row parity decides ownership in either routing —
+        // derive shards from the descriptor rather than assuming.
+        let rows = [RowId(0), RowId(1), RowId(2), RowId(3)];
+        for (i, r) in rows.iter().enumerate() {
+            st.inflight_pulls.insert(*r, i as Clock);
+        }
+        for shard in [ShardId(0), ShardId(1)] {
+            let got = st.pulls_on_shard(shard);
+            let want: Vec<(RowId, Clock)> = rows
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| st.desc.shard_of(**r, 2) == shard)
+                .map(|(i, r)| (*r, i as Clock))
+                .collect();
+            assert_eq!(got, want);
+        }
     }
 }

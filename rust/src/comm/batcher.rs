@@ -67,6 +67,9 @@ impl Batcher {
                     batch_id: self.next_batch_id,
                     updates: chunk.to_vec(),
                     clock,
+                    // Stamped with the sender's believed shard epoch at send
+                    // time (the batcher doesn't track incarnations).
+                    epoch: 0,
                 };
                 self.next_batch_id += 1;
                 out.push((shard, batch));

@@ -286,6 +286,45 @@ impl Network {
     /// Register a node; returns its mailbox endpoint. Panics if the node is
     /// already registered (topology bug).
     pub fn register(&self, node: NodeId) -> Endpoint {
+        self.registrar().register(node)
+    }
+
+    /// Remove a node's mailbox (dropping it closes the endpoint).
+    pub fn deregister(&self, node: NodeId) {
+        self.registrar().deregister(node)
+    }
+
+    /// A cloneable sender handle.
+    pub fn sender(&self) -> NetSender {
+        NetSender::from_transport(Arc::new(BusTransport { shared: self.shared.clone() }))
+    }
+
+    /// A cloneable registration handle (endpoint churn from other
+    /// threads — see [`Registrar`]).
+    pub fn registrar(&self) -> Registrar {
+        Registrar { shared: self.shared.clone() }
+    }
+
+    /// Network metrics (messages/bytes by kind).
+    pub fn metrics(&self) -> Arc<NetMetrics> {
+        self.shared.metrics.clone()
+    }
+}
+
+/// Cloneable registration handle: lets a supervisor thread (the
+/// coordinator's failure monitor) swap a node's mailbox — deregister the
+/// dead shard, register its replacement — without owning the [`Network`].
+/// Sends to a deregistered node fail fast with `Error::Disconnected`;
+/// they never block.
+#[derive(Clone)]
+pub struct Registrar {
+    shared: Arc<Shared>,
+}
+
+impl Registrar {
+    /// Register a node; returns its mailbox endpoint. Panics if the node
+    /// is already registered (deregister the old mailbox first).
+    pub fn register(&self, node: NodeId) -> Endpoint {
         let (tx, rx) = channel();
         let mut boxes = self.shared.mailboxes.lock().unwrap();
         let prev = boxes.insert(node, tx);
@@ -298,14 +337,9 @@ impl Network {
         self.shared.mailboxes.lock().unwrap().remove(&node);
     }
 
-    /// A cloneable sender handle.
+    /// A sender handle over the same fabric.
     pub fn sender(&self) -> NetSender {
         NetSender::from_transport(Arc::new(BusTransport { shared: self.shared.clone() }))
-    }
-
-    /// Network metrics (messages/bytes by kind).
-    pub fn metrics(&self) -> Arc<NetMetrics> {
-        self.shared.metrics.clone()
     }
 }
 
@@ -487,6 +521,69 @@ mod tests {
         }
         let dt = t0.elapsed();
         assert!(dt >= Duration::from_millis(150), "bandwidth not enforced: {dt:?}");
+    }
+
+    #[test]
+    fn deregistered_node_send_fails_fast() {
+        let net = Network::new(NetConfig::default());
+        let a = NodeId::Client(ProcId(0));
+        let b = NodeId::Server(ShardId(0));
+        let _epb = net.register(b);
+        let _epa = net.register(a);
+        let tx = net.sender();
+        tx.send(msg(a, b, 0)).unwrap();
+        net.deregister(b);
+        // An error, immediately — never a hang on a dead destination.
+        assert!(matches!(tx.send(msg(a, b, 1)), Err(Error::Disconnected(_))));
+    }
+
+    #[test]
+    fn reregistering_a_node_swaps_its_mailbox() {
+        let net = Network::new(NetConfig::default());
+        let a = NodeId::Client(ProcId(0));
+        let b = NodeId::Server(ShardId(0));
+        let _epa = net.register(a);
+        let ep_old = net.register(b);
+        let tx = net.sender();
+        tx.send(msg(a, b, 7)).unwrap();
+        // Respawn: deregister the dead incarnation, register a fresh one.
+        net.deregister(b);
+        let ep_new = net.register(b);
+        tx.send(msg(a, b, 8)).unwrap();
+        // Old mailbox kept the pre-churn message; the new one only sees
+        // post-churn traffic.
+        match ep_old.try_recv().expect("old mailbox retains its message").payload {
+            Payload::MinClock { clock, .. } => assert_eq!(clock, 7),
+            _ => panic!("wrong payload"),
+        }
+        match ep_new.try_recv().expect("new mailbox receives").payload {
+            Payload::MinClock { clock, .. } => assert_eq!(clock, 8),
+            _ => panic!("wrong payload"),
+        }
+        assert!(ep_new.try_recv().is_none());
+    }
+
+    #[test]
+    fn registrar_churns_endpoints_from_a_clone() {
+        let net = Network::new(NetConfig::default());
+        let a = NodeId::Client(ProcId(0));
+        let b = NodeId::Server(ShardId(0));
+        let _epa = net.register(a);
+        let _epb = net.register(b);
+        let reg = net.registrar();
+        let tx = reg.sender();
+        let done = std::thread::spawn(move || {
+            reg.deregister(b);
+            let ep = reg.register(b);
+            (reg, ep)
+        })
+        .join()
+        .unwrap();
+        tx.send(msg(a, b, 3)).unwrap();
+        match done.1.try_recv().expect("respawned mailbox receives").payload {
+            Payload::MinClock { clock, .. } => assert_eq!(clock, 3),
+            _ => panic!("wrong payload"),
+        }
     }
 
     #[test]

@@ -23,6 +23,6 @@ pub mod msg;
 pub mod priority;
 
 pub use batcher::Batcher;
-pub use bus::{Endpoint, NetSender, Network, Transport};
+pub use bus::{Endpoint, NetSender, Network, Registrar, Transport};
 pub use msg::{Msg, Payload, PushBatch, ServerPushBatch};
 pub use priority::UpdateQueue;

@@ -33,6 +33,12 @@ pub struct PushBatch {
     /// Clock timestamp of the newest update in the batch (updates generated
     /// in `(c-1, c]` are stamped `c`, paper §2.1).
     pub clock: Clock,
+    /// Incarnation epoch of the destination shard as believed by the sender.
+    /// A recovered shard bumps its epoch and fences off batches stamped with
+    /// an older one: they were sent before the sender resynced, and accepting
+    /// them could break per-origin FIFO (a fresh batch overtaking a pending
+    /// retransmission of an older one).
+    pub epoch: u32,
 }
 
 impl PushBatch {
@@ -98,11 +104,18 @@ pub enum Payload {
         worker: WorkerId,
     },
     /// Client → every server shard: this process's min thread clock moved.
+    /// A notification is a *promise*: no future update from `proc` will be
+    /// stamped ≤ `clock`. Like pushes it is epoch-fenced — a notification
+    /// sent before the process resynced with a recovered shard must not be
+    /// honoured, because retransmissions of older-stamped updates may still
+    /// be outstanding.
     ClockNotify {
         /// Reporting process.
         proc: ProcId,
         /// New min clock over the process's worker threads.
         clock: Clock,
+        /// Destination-shard incarnation epoch as believed by the sender.
+        epoch: u32,
     },
     /// Server → caching client: forwarded foreign updates (Server Push).
     ServerPush(ServerPushBatch),
@@ -135,6 +148,42 @@ pub enum Payload {
         /// New min process clock on that shard.
         clock: Clock,
     },
+    /// Coordinator → shard: liveness probe. A shard that misses enough
+    /// probe deadlines is declared dead and respawned from its persisted
+    /// state (checkpoint + WAL replay).
+    Ping {
+        /// Probe sequence number, echoed in the [`Payload::Pong`].
+        seq: u64,
+    },
+    /// Shard → coordinator: liveness probe reply.
+    Pong {
+        /// Replying shard.
+        shard: ShardId,
+        /// Echo of the probe's sequence number.
+        seq: u64,
+    },
+    /// Recovered shard → client: re-solicit a possibly-lost
+    /// [`Payload::PushAck`]. The client re-acks iff it already applied the
+    /// batch; the server's ack tracking is set-based, so a duplicate re-ack
+    /// is harmless.
+    AckProbe {
+        /// Table concerned.
+        table: TableId,
+        /// Origin process of the batch awaiting acks.
+        origin: ProcId,
+        /// The batch id awaiting acks.
+        batch_id: u64,
+    },
+    /// Recovered shard → all clients: the shard is back at a new incarnation
+    /// epoch. Clients resync: retransmit unechoed batches for this shard (in
+    /// batch-id order, original clocks, new epoch), then re-promise their
+    /// clock, then re-issue in-flight pulls.
+    ShardRecovered {
+        /// The recovered shard.
+        shard: ShardId,
+        /// Its new incarnation epoch.
+        epoch: u32,
+    },
     /// Orderly shutdown of the receiving event loop.
     Shutdown,
 }
@@ -152,6 +201,10 @@ impl Payload {
             | Payload::PushAck { .. }
             | Payload::VisibilityAck { .. }
             | Payload::MinClock { .. }
+            | Payload::Ping { .. }
+            | Payload::Pong { .. }
+            | Payload::AckProbe { .. }
+            | Payload::ShardRecovered { .. }
             | Payload::Shutdown => 16,
         }
     }
@@ -167,6 +220,10 @@ impl Payload {
             Payload::PushAck { .. } => "push_ack",
             Payload::VisibilityAck { .. } => "vis_ack",
             Payload::MinClock { .. } => "min_clock",
+            Payload::Ping { .. } => "ping",
+            Payload::Pong { .. } => "pong",
+            Payload::AckProbe { .. } => "ack_probe",
+            Payload::ShardRecovered { .. } => "recovered",
             Payload::Shutdown => "shutdown",
         }
     }
@@ -195,6 +252,7 @@ mod tests {
             batch_id: 0,
             updates: vec![(RowId(0), RowUpdate::single(0, 1.0))],
             clock: 0,
+            epoch: 0,
         };
         let big = PushBatch {
             updates: (0..100).map(|i| (RowId(i), RowUpdate::Dense(vec![1.0; 64]))).collect(),
@@ -209,8 +267,12 @@ mod tests {
         let kinds = [
             Payload::Shutdown.kind(),
             Payload::MinClock { shard: ShardId(0), clock: 1 }.kind(),
-            Payload::ClockNotify { proc: ProcId(0), clock: 1 }.kind(),
+            Payload::ClockNotify { proc: ProcId(0), clock: 1, epoch: 0 }.kind(),
             Payload::VisibilityAck { table: TableId(0), batch_id: 1 }.kind(),
+            Payload::Ping { seq: 0 }.kind(),
+            Payload::Pong { shard: ShardId(0), seq: 0 }.kind(),
+            Payload::AckProbe { table: TableId(0), origin: ProcId(0), batch_id: 1 }.kind(),
+            Payload::ShardRecovered { shard: ShardId(0), epoch: 1 }.kind(),
         ];
         let set: std::collections::HashSet<_> = kinds.iter().collect();
         assert_eq!(set.len(), kinds.len());

@@ -215,6 +215,20 @@ pub struct SystemConfig {
     pub max_batch_updates: usize,
     /// Deadline for blocking waits (ms); exceeded ⇒ `Error::WaitTimeout`.
     pub wait_timeout_ms: u64,
+    /// Blocked readers re-issue their `PullRow` after this long without a
+    /// usable reply (doubling each retry). Covers requests that died with
+    /// a crashed shard; the pull is idempotent so spurious retries are
+    /// harmless. 0 disables retries.
+    pub pull_retry_ms: u64,
+    /// Coordinator → shard heartbeat period (µs). 0 disables the failure
+    /// detector (the default: single-machine tests don't need it).
+    pub heartbeat_interval_us: u64,
+    /// A shard silent for this long (µs) is declared dead and respawned
+    /// from its checkpoint + WAL. Must exceed the heartbeat interval.
+    pub heartbeat_deadline_us: u64,
+    /// Shards checkpoint after this many WAL records (bounds replay
+    /// time). 0 = never checkpoint (WAL-only recovery).
+    pub checkpoint_every: u64,
     /// Directory holding AOT artifacts (`*.hlo.txt`).
     pub artifacts_dir: PathBuf,
     /// Enable the event-trace recorder (costly; used by tests/Fig-1 bench).
@@ -244,7 +258,9 @@ impl SystemConfig {
     /// Load from a `key = value` file (one pair per line; `#` comments).
     /// Recognized keys: `shards`, `procs`, `threads`, `latency_us`,
     /// `bandwidth_bps`, `jitter_us`, `flush_interval_us`,
-    /// `max_batch_updates`, `wait_timeout_ms`, `artifacts_dir`, `trace`,
+    /// `max_batch_updates`, `wait_timeout_ms`, `pull_retry_ms`,
+    /// `heartbeat_interval_us`, `heartbeat_deadline_us`,
+    /// `checkpoint_every`, `artifacts_dir`, `trace`,
     /// `magnitude_priority`, `straggler_workers` (comma list),
     /// `straggler_slowdown`.
     pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
@@ -300,6 +316,18 @@ impl SystemConfig {
         if let Some(v) = parse_u64(&kv, "wait_timeout_ms")? {
             b = b.wait_timeout_ms(v);
         }
+        if let Some(v) = parse_u64(&kv, "pull_retry_ms")? {
+            b = b.pull_retry_ms(v);
+        }
+        if let Some(v) = parse_u64(&kv, "heartbeat_interval_us")? {
+            b = b.heartbeat_interval_us(v);
+        }
+        if let Some(v) = parse_u64(&kv, "heartbeat_deadline_us")? {
+            b = b.heartbeat_deadline_us(v);
+        }
+        if let Some(v) = parse_u64(&kv, "checkpoint_every")? {
+            b = b.checkpoint_every(v);
+        }
         if let Some(v) = kv.get("artifacts_dir") {
             b = b.artifacts_dir(v.clone());
         }
@@ -338,6 +366,13 @@ impl SystemConfig {
         if self.stragglers.slowdown < 0.0 {
             return Err(Error::Config("straggler slowdown must be ≥ 0".into()));
         }
+        if self.heartbeat_interval_us > 0
+            && self.heartbeat_deadline_us <= self.heartbeat_interval_us
+        {
+            return Err(Error::Config(
+                "heartbeat_deadline_us must exceed heartbeat_interval_us".into(),
+            ));
+        }
         Ok(())
     }
 }
@@ -360,6 +395,10 @@ impl Default for SystemConfigBuilder {
                 flush_interval_us: 100,
                 max_batch_updates: 4096,
                 wait_timeout_ms: 30_000,
+                pull_retry_ms: 250,
+                heartbeat_interval_us: 0,
+                heartbeat_deadline_us: 200_000,
+                checkpoint_every: 64,
                 artifacts_dir: PathBuf::from("artifacts"),
                 trace: false,
                 magnitude_priority: true,
@@ -407,6 +446,26 @@ impl SystemConfigBuilder {
     /// Set the blocking-wait deadline (ms).
     pub fn wait_timeout_ms(mut self, ms: u64) -> Self {
         self.cfg.wait_timeout_ms = ms;
+        self
+    }
+    /// Set the blocked-reader pull-retry base interval (ms; 0 = off).
+    pub fn pull_retry_ms(mut self, ms: u64) -> Self {
+        self.cfg.pull_retry_ms = ms;
+        self
+    }
+    /// Enable the shard failure detector: heartbeat period (µs; 0 = off).
+    pub fn heartbeat_interval_us(mut self, us: u64) -> Self {
+        self.cfg.heartbeat_interval_us = us;
+        self
+    }
+    /// Set the missed-heartbeat window after which a shard is respawned.
+    pub fn heartbeat_deadline_us(mut self, us: u64) -> Self {
+        self.cfg.heartbeat_deadline_us = us;
+        self
+    }
+    /// Set the shard checkpoint cadence in WAL records (0 = never).
+    pub fn checkpoint_every(mut self, n: u64) -> Self {
+        self.cfg.checkpoint_every = n;
         self
     }
     /// Set the artifacts directory.

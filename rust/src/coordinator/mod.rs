@@ -8,16 +8,18 @@
 //! ingress thread, a flusher thread and `threads_per_proc` application
 //! worker threads driven by [`PsSystem::run_workers`].
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::client::{ClientCore, WorkerCtx};
 use crate::comm::msg::{Msg, Payload};
-use crate::comm::Network;
+use crate::comm::{Endpoint, Network, Registrar};
 use crate::config::SystemConfig;
 use crate::error::{Error, Result};
 use crate::metrics::NetMetrics;
-use crate::server::{ServerShard, TableRegistry};
+use crate::server::{MemPersistence, PersistHandle, ServerShard, ShardOptions, TableRegistry};
 use crate::table::TableDesc;
 use crate::trace::TraceRecorder;
 use crate::types::{NodeId, ProcId, ShardId, WorkerId};
@@ -37,6 +39,11 @@ pub struct PsSystem {
     network: Network,
     server_threads: Vec<JoinHandle<()>>,
     io_threads: Vec<JoinHandle<()>>,
+    /// Failure monitor thread (heartbeats + shard respawn); returns the
+    /// join handles of every shard it respawned. `None` when
+    /// `heartbeat_interval_us == 0`.
+    monitor: Option<JoinHandle<Vec<JoinHandle<()>>>>,
+    monitor_stop: Arc<AtomicBool>,
 }
 
 impl PsSystem {
@@ -58,14 +65,23 @@ impl PsSystem {
             client_eps.push(network.register(NodeId::Client(ProcId(p))));
         }
 
+        // One durable persistence handle per shard, held by the failure
+        // monitor across shard deaths: a respawn recovers from exactly
+        // what its predecessor logged (checkpoint + WAL).
+        let persists: Vec<PersistHandle> = (0..cfg.num_server_shards)
+            .map(|_| Arc::new(MemPersistence::new()) as PersistHandle)
+            .collect();
         let mut server_threads = Vec::new();
         for (s, ep) in shard_eps.into_iter().enumerate() {
-            let shard = ServerShard::with_trace(
+            let mut opts = ShardOptions::new(persists[s].clone());
+            opts.checkpoint_every = cfg.checkpoint_every;
+            let shard = ServerShard::with_options(
                 ShardId(s as u32),
                 cfg.num_client_procs,
                 registry.clone(),
                 network.sender(),
                 trace.clone(),
+                opts,
             );
             server_threads.push(
                 std::thread::Builder::new()
@@ -102,7 +118,41 @@ impl PsSystem {
             cores.push(core);
         }
 
-        Ok(PsSystem { cfg, registry, cores, trace, network, server_threads, io_threads })
+        // Failure monitor: heartbeats + respawn-from-durable-state. Off
+        // by default (`heartbeat_interval_us == 0`).
+        let monitor_stop = Arc::new(AtomicBool::new(false));
+        let monitor = if cfg.heartbeat_interval_us > 0 {
+            let coord_ep = network.register(NodeId::Coordinator);
+            let m_cfg = cfg.clone();
+            let m_registry = registry.clone();
+            let m_trace = trace.clone();
+            let m_registrar = network.registrar();
+            let m_stop = monitor_stop.clone();
+            Some(
+                std::thread::Builder::new()
+                    .name("monitor".into())
+                    .spawn(move || {
+                        monitor_loop(
+                            m_cfg, m_registry, m_trace, m_registrar, persists, coord_ep, m_stop,
+                        )
+                    })
+                    .map_err(Error::Io)?,
+            )
+        } else {
+            None
+        };
+
+        Ok(PsSystem {
+            cfg,
+            registry,
+            cores,
+            trace,
+            network,
+            server_threads,
+            io_threads,
+            monitor,
+            monitor_stop,
+        })
     }
 
     /// System configuration.
@@ -209,36 +259,152 @@ impl PsSystem {
             .join("\n")
     }
 
-    /// Orderly shutdown: stop flushers (with a final drain), stop ingress
-    /// and shard loops, join all threads.
+    /// Orderly shutdown: stop the failure monitor, stop flushers (with a
+    /// final drain), stop ingress and shard loops, join all threads.
+    ///
+    /// Nothing is swallowed: a Shutdown notification that cannot be
+    /// delivered (endpoint already gone — e.g. a shard that died and was
+    /// never respawned) and any panicked thread are reported by name; the
+    /// first failure becomes the returned error after every thread has
+    /// still been joined.
     pub fn shutdown(mut self) -> Result<()> {
+        let mut first_err: Option<Error> = None;
+        // Monitor first, so it cannot respawn a shard we are stopping.
+        self.monitor_stop.store(true, Ordering::Relaxed);
+        let mut respawned = Vec::new();
+        if let Some(m) = self.monitor.take() {
+            match m.join() {
+                Ok(handles) => respawned = handles,
+                Err(_) => {
+                    first_err.get_or_insert(Error::Other("monitor thread panicked".into()));
+                }
+            }
+        }
         for core in &self.cores {
             core.stop();
         }
         let sender = self.network.sender();
         // Flushers exit on the stop flag; ingress/shards on Shutdown.
         for p in 0..self.cfg.num_client_procs {
-            let _ = sender.send(Msg {
+            if let Err(e) = sender.send(Msg {
                 src: NodeId::Coordinator,
                 dst: NodeId::Client(ProcId(p)),
                 payload: Payload::Shutdown,
-            });
+            }) {
+                first_err.get_or_insert_with(|| Error::Other(format!("notify client {p}: {e}")));
+            }
         }
         for s in 0..self.cfg.num_server_shards {
-            let _ = sender.send(Msg {
+            if let Err(e) = sender.send(Msg {
                 src: NodeId::Coordinator,
                 dst: NodeId::Server(ShardId(s)),
                 payload: Payload::Shutdown,
-            });
+            }) {
+                first_err.get_or_insert_with(|| Error::Other(format!("notify shard {s}: {e}")));
+            }
         }
+        let mut join_named = |j: JoinHandle<()>, what: &str| {
+            let name = j.thread().name().unwrap_or("<unnamed>").to_string();
+            if j.join().is_err() {
+                first_err.get_or_insert(Error::Other(format!("{what} thread '{name}' panicked")));
+            }
+        };
         for j in self.io_threads.drain(..) {
-            j.join().map_err(|_| Error::Other("io thread panicked".into()))?;
+            join_named(j, "io");
         }
         for j in self.server_threads.drain(..) {
-            j.join().map_err(|_| Error::Other("server thread panicked".into()))?;
+            join_named(j, "server");
         }
-        Ok(())
+        for j in respawned {
+            join_named(j, "respawned server");
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
+}
+
+/// The coordinator's failure monitor loop: ping every shard on a fixed
+/// cadence, declare one dead after `heartbeat_deadline_us` of silence,
+/// swap its mailbox and respawn it from its durable checkpoint + WAL. The
+/// recovered shard announces itself to every client, which triggers the
+/// client resync protocol (epoch bump, overlay retransmission, pull
+/// re-issue) — see DESIGN.md §Recovery.
+///
+/// Returns the join handles of every respawned shard thread so
+/// [`PsSystem::shutdown`] can reap them.
+fn monitor_loop(
+    cfg: SystemConfig,
+    registry: Arc<TableRegistry>,
+    trace: Arc<TraceRecorder>,
+    registrar: Registrar,
+    persists: Vec<PersistHandle>,
+    ep: Endpoint,
+    stop: Arc<AtomicBool>,
+) -> Vec<JoinHandle<()>> {
+    let sender = registrar.sender();
+    let interval = Duration::from_micros(cfg.heartbeat_interval_us);
+    let deadline = Duration::from_micros(cfg.heartbeat_deadline_us);
+    let mut last_pong: Vec<Instant> =
+        (0..cfg.num_server_shards).map(|_| Instant::now()).collect();
+    let mut respawned: Vec<JoinHandle<()>> = Vec::new();
+    let mut seq: u64 = 0;
+    while !stop.load(Ordering::Relaxed) {
+        seq += 1;
+        for s in 0..cfg.num_server_shards {
+            // A send failure here is itself a death signal, but the pong
+            // deadline is the single arbiter — keep the loop simple.
+            let _ = sender.send(Msg {
+                src: NodeId::Coordinator,
+                dst: NodeId::Server(ShardId(s)),
+                payload: Payload::Ping { seq },
+            });
+        }
+        std::thread::sleep(interval);
+        while let Some(msg) = ep.try_recv() {
+            if let Payload::Pong { shard, .. } = msg.payload {
+                if let Some(t) = last_pong.get_mut(shard.0 as usize) {
+                    *t = Instant::now();
+                }
+            }
+        }
+        for s in 0..cfg.num_server_shards {
+            if last_pong[s as usize].elapsed() <= deadline {
+                continue;
+            }
+            // Dead: swap the mailbox, recover from durable state, respawn.
+            let node = NodeId::Server(ShardId(s));
+            registrar.deregister(node);
+            let shard_ep = registrar.register(node);
+            let mut opts = ShardOptions::new(persists[s as usize].clone());
+            opts.checkpoint_every = cfg.checkpoint_every;
+            match ServerShard::recover(
+                ShardId(s),
+                cfg.num_client_procs,
+                registry.clone(),
+                registrar.sender(),
+                trace.clone(),
+                opts,
+            ) {
+                Ok(shard) => {
+                    let spawn = std::thread::Builder::new()
+                        .name(format!("shard{s}-r"))
+                        .spawn(move || shard.run(shard_ep));
+                    if let Ok(h) = spawn {
+                        respawned.push(h);
+                    }
+                    last_pong[s as usize] = Instant::now();
+                }
+                Err(_) => {
+                    // Recovery failed: leave the shard down; the next tick
+                    // retries with the same durable state.
+                    registrar.deregister(node);
+                }
+            }
+        }
+    }
+    respawned
 }
 
 #[cfg(test)]
@@ -314,6 +480,92 @@ mod tests {
             })
             .unwrap_err();
         assert!(matches!(err, Error::WorkerPanic(_)), "{err}");
+        sys.shutdown().unwrap();
+    }
+
+    #[test]
+    fn pull_from_a_dead_shard_times_out_instead_of_hanging() {
+        // No failure monitor: the dead shard stays dead, and a read that
+        // needs it must surface WaitTimeout instead of hanging forever.
+        let cfg = SystemConfig::builder()
+            .num_server_shards(2)
+            .num_client_procs(1)
+            .threads_per_proc(1)
+            .flush_interval_us(50)
+            .wait_timeout_ms(300)
+            .build();
+        let sys = PsSystem::launch(cfg).unwrap();
+        let desc = table(PolicyConfig::Bsp);
+        let victim = desc.shard_of(RowId(0), 2);
+        sys.create_table(desc).unwrap();
+        sys.network
+            .sender()
+            .send(Msg {
+                src: NodeId::Coordinator,
+                dst: NodeId::Server(victim),
+                payload: Payload::Shutdown,
+            })
+            .unwrap();
+        let results = sys
+            .run_workers(|ctx| {
+                ctx.clock().unwrap();
+                let t = ctx.table(TableId(0));
+                t.get(RowId(0), 0)
+            })
+            .unwrap();
+        for r in results {
+            let err = r.expect_err("read served by a dead shard must time out");
+            assert!(matches!(err, Error::WaitTimeout { .. }), "{err}");
+        }
+        sys.shutdown().unwrap();
+    }
+
+    #[test]
+    fn monitor_respawns_a_dead_shard_and_the_system_converges() {
+        let cfg = SystemConfig::builder()
+            .num_server_shards(2)
+            .num_client_procs(2)
+            .threads_per_proc(1)
+            .flush_interval_us(50)
+            .wait_timeout_ms(20_000)
+            .heartbeat_interval_us(5_000)
+            .heartbeat_deadline_us(100_000)
+            .checkpoint_every(4)
+            .build();
+        let sys = PsSystem::launch(cfg).unwrap();
+        let desc = table(PolicyConfig::Bsp);
+        let victim = desc.shard_of(RowId(0), 2);
+        sys.create_table(desc).unwrap();
+        sys.run_workers(|ctx| {
+            let t = ctx.table(TableId(0));
+            t.inc(RowId(0), 0, 1.0).unwrap();
+            ctx.clock().unwrap();
+        })
+        .unwrap();
+        // Kill the shard owning row 0. The monitor must notice the missed
+        // heartbeats, respawn it from checkpoint + WAL, and the clients
+        // must resync (retransmit unacked batches, re-issue pulls) so the
+        // second phase converges on all four increments.
+        sys.network
+            .sender()
+            .send(Msg {
+                src: NodeId::Coordinator,
+                dst: NodeId::Server(victim),
+                payload: Payload::Shutdown,
+            })
+            .unwrap();
+        let vals = sys
+            .run_workers(|ctx| {
+                let t = ctx.table(TableId(0));
+                t.inc(RowId(0), 0, 1.0).unwrap();
+                ctx.clock().unwrap();
+                ctx.clock().unwrap();
+                t.get(RowId(0), 0).unwrap()
+            })
+            .unwrap();
+        for v in vals {
+            assert_eq!(v, 4.0, "all four increments must survive the crash");
+        }
         sys.shutdown().unwrap();
     }
 

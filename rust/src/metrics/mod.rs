@@ -78,6 +78,10 @@ pub struct WorkerMetrics {
     pub write_block_ns: AtomicU64,
     /// Cache misses that triggered a network pull.
     pub pulls: AtomicU64,
+    /// Pulls re-issued by the blocked-reader retry/backoff path.
+    pub pull_retries: AtomicU64,
+    /// Overlay batches resent after a shard recovery announcement.
+    pub pushes_retransmitted: AtomicU64,
 }
 
 impl WorkerMetrics {
@@ -96,11 +100,13 @@ impl WorkerMetrics {
     /// Compact single-line render for logs.
     pub fn summary(&self) -> String {
         format!(
-            "gets={} incs={} clocks={} pulls={} read_blocks={} ({:.1} ms) write_blocks={} ({:.1} ms)",
+            "gets={} incs={} clocks={} pulls={} (retries {}, resent {}) read_blocks={} ({:.1} ms) write_blocks={} ({:.1} ms)",
             self.gets.load(Ordering::Relaxed),
             self.incs.load(Ordering::Relaxed),
             self.clocks.load(Ordering::Relaxed),
             self.pulls.load(Ordering::Relaxed),
+            self.pull_retries.load(Ordering::Relaxed),
+            self.pushes_retransmitted.load(Ordering::Relaxed),
             self.read_blocks.load(Ordering::Relaxed),
             self.read_block_ns.load(Ordering::Relaxed) as f64 / 1e6,
             self.write_blocks.load(Ordering::Relaxed),

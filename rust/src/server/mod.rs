@@ -20,8 +20,13 @@
 //! which makes every per-table mutation trivially atomic — the same
 //! design as Petuum PS's server threads.
 
+mod persist;
 mod shard;
 mod visibility;
 
-pub use shard::{ServerShard, TableRegistry};
-pub use visibility::VisibilityTracker;
+pub use persist::{
+    FilePersistence, MemPersistence, PersistHandle, Persistence, RowImage, ShardCheckpoint,
+    TableImage, WalRecord,
+};
+pub use shard::{ServerShard, ShardOptions, TableRegistry, DEFAULT_CHECKPOINT_EVERY};
+pub use visibility::{VisibilityImage, VisibilityTracker};

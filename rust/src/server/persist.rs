@@ -1,0 +1,840 @@
+//! Durable shard state: checkpoint + write-ahead log.
+//!
+//! A shard's recovery contract is *bound-preserving replay*: after a crash,
+//! the shard must come back with exactly the state it had after the last
+//! message it fully handled, because the consistency gates (SSP clock bound,
+//! VAP value bound) are proofs about that state. The shard therefore logs
+//! every handled mutation — applied pushes, received acks, accepted clock
+//! notifications — to a WAL, and periodically folds the WAL into a full
+//! checkpoint (rows of both stores, per-origin applied frontier, the
+//! complete visibility tracker, the process vector clock). Recovery installs
+//! the checkpoint and replays the WAL suffix through the *same* handlers
+//! with sends suppressed, which reproduces the pre-crash state without
+//! re-emitting traffic.
+//!
+//! Replay is idempotent on purpose: a checkpoint written just before a
+//! crash may still be followed by WAL records it already covers (the WAL is
+//! truncated *after* the checkpoint rename). Re-applying them is harmless —
+//! pushes are deduplicated by the per-origin applied frontier, acks are
+//! set-based, clock notifications are monotone.
+//!
+//! Two implementations: [`MemPersistence`] (an `Arc`-shared in-memory store
+//! that survives the death of the shard *object*, used by the deterministic
+//! simulator) and [`FilePersistence`] (a directory of three files, used by
+//! the production path). The file codec is hand-rolled little-endian — the
+//! crate builds offline with zero dependencies.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use crate::comm::msg::PushBatch;
+use crate::error::{Error, Result};
+use crate::table::{RowData, RowId, RowUpdate, TableId, TableStore};
+use crate::types::{Clock, ProcId};
+
+use super::visibility::VisibilityImage;
+
+/// One durable log record: a mutation the shard fully handled.
+#[derive(Debug, Clone)]
+pub enum WalRecord {
+    /// An applied client push (post epoch-fence, post dedup).
+    Push(PushBatch),
+    /// One process's ack of a forwarded batch.
+    Ack {
+        /// Table concerned.
+        table: TableId,
+        /// Origin process of the acked batch.
+        origin: ProcId,
+        /// The acked batch id.
+        batch_id: u64,
+        /// The acking process.
+        by: ProcId,
+    },
+    /// An accepted client clock notification.
+    Clock {
+        /// Reporting process.
+        proc: ProcId,
+        /// New min thread clock of that process.
+        clock: Clock,
+    },
+}
+
+/// Materialized rows of one store, `(row, value, row clock)`, sorted by row
+/// id for deterministic encoding.
+pub type RowImage = Vec<(RowId, RowData, Clock)>;
+
+/// Checkpoint of one table's state on one shard.
+#[derive(Debug, Clone)]
+pub struct TableImage {
+    /// The table.
+    pub id: TableId,
+    /// Authoritative partition rows.
+    pub store: RowImage,
+    /// Forwarded-prefix replica rows.
+    pub fwd: RowImage,
+    /// Highest applied batch id per origin, sorted by origin.
+    pub applied_upto: Vec<(ProcId, u64)>,
+    /// Full visibility-tracker state (ack sets, in-flight mass, held
+    /// batches).
+    pub vis: VisibilityImage,
+}
+
+/// Full checkpoint of a shard: everything recovery needs besides the WAL
+/// suffix.
+#[derive(Debug, Clone)]
+pub struct ShardCheckpoint {
+    /// Per-process clocks of the shard's vector clock, sorted by process.
+    pub vclock: Vec<(ProcId, Clock)>,
+    /// Highest min-clock frontier broadcast before the checkpoint.
+    pub last_broadcast: Clock,
+    /// Per-table images, sorted by table id.
+    pub tables: Vec<TableImage>,
+}
+
+/// Durable storage for one shard's recovery state.
+///
+/// All methods take `&self`: implementations are internally synchronized so
+/// a single handle can be shared between the shard and its supervisor.
+pub trait Persistence: Send + Sync {
+    /// Append one handled-mutation record to the WAL.
+    fn append(&self, rec: &WalRecord) -> Result<()>;
+    /// Replace the checkpoint and truncate the WAL.
+    fn checkpoint(&self, cp: &ShardCheckpoint) -> Result<()>;
+    /// Load `(checkpoint, wal suffix)`. A `None` checkpoint with an empty
+    /// WAL is a fresh shard.
+    fn load(&self) -> Result<(Option<ShardCheckpoint>, Vec<WalRecord>)>;
+    /// Current incarnation epoch.
+    fn epoch(&self) -> Result<u32>;
+    /// Durably bump the incarnation epoch; returns the new value.
+    fn bump_epoch(&self) -> Result<u32>;
+}
+
+/// Shared handle to a shard's persistence backend.
+pub type PersistHandle = Arc<dyn Persistence>;
+
+// ---------------------------------------------------------------------------
+// In-memory implementation (simulator).
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct MemInner {
+    cp: Option<ShardCheckpoint>,
+    wal: Vec<WalRecord>,
+    epoch: u32,
+}
+
+/// In-memory persistence: the handle (shared via `Arc`) survives the death
+/// of the shard object, which is exactly the crash model of the
+/// deterministic simulator — the process lives, the shard's state dies.
+#[derive(Default)]
+pub struct MemPersistence {
+    inner: Mutex<MemInner>,
+}
+
+impl MemPersistence {
+    /// Fresh empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of WAL records since the last checkpoint (tests).
+    pub fn wal_len(&self) -> usize {
+        self.inner.lock().unwrap().wal.len()
+    }
+}
+
+impl Persistence for MemPersistence {
+    fn append(&self, rec: &WalRecord) -> Result<()> {
+        self.inner.lock().unwrap().wal.push(rec.clone());
+        Ok(())
+    }
+
+    fn checkpoint(&self, cp: &ShardCheckpoint) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        g.cp = Some(cp.clone());
+        g.wal.clear();
+        Ok(())
+    }
+
+    fn load(&self) -> Result<(Option<ShardCheckpoint>, Vec<WalRecord>)> {
+        let g = self.inner.lock().unwrap();
+        Ok((g.cp.clone(), g.wal.clone()))
+    }
+
+    fn epoch(&self) -> Result<u32> {
+        Ok(self.inner.lock().unwrap().epoch)
+    }
+
+    fn bump_epoch(&self) -> Result<u32> {
+        let mut g = self.inner.lock().unwrap();
+        g.epoch += 1;
+        Ok(g.epoch)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Binary codec (little-endian, hand-rolled).
+// ---------------------------------------------------------------------------
+
+fn corrupt(what: &str) -> Error {
+    Error::Other(format!("corrupt persistence data: {what}"))
+}
+
+fn put_u8(b: &mut Vec<u8>, v: u8) {
+    b.push(v);
+}
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f32(b: &mut Vec<u8>, v: f32) {
+    put_u32(b, v.to_bits());
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).ok_or_else(|| corrupt("length overflow"))?;
+        if end > self.buf.len() {
+            return Err(corrupt("unexpected end of buffer"));
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+}
+
+fn put_row_data(b: &mut Vec<u8>, d: &RowData) {
+    match d {
+        RowData::Dense(v) => {
+            put_u8(b, 0);
+            put_u32(b, v.len() as u32);
+            for x in v {
+                put_f32(b, *x);
+            }
+        }
+        RowData::Sparse(m) => {
+            put_u8(b, 1);
+            put_u32(b, m.len() as u32);
+            for (c, x) in m {
+                put_u32(b, *c);
+                put_f32(b, *x);
+            }
+        }
+    }
+}
+
+fn get_row_data(r: &mut Reader) -> Result<RowData> {
+    match r.u8()? {
+        0 => {
+            let n = r.u32()? as usize;
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(r.f32()?);
+            }
+            Ok(RowData::Dense(v))
+        }
+        1 => {
+            let n = r.u32()? as usize;
+            let mut m = std::collections::BTreeMap::new();
+            for _ in 0..n {
+                let c = r.u32()?;
+                m.insert(c, r.f32()?);
+            }
+            Ok(RowData::Sparse(m))
+        }
+        _ => Err(corrupt("row-data tag")),
+    }
+}
+
+fn put_row_update(b: &mut Vec<u8>, u: &RowUpdate) {
+    match u {
+        RowUpdate::Dense(v) => {
+            put_u8(b, 0);
+            put_u32(b, v.len() as u32);
+            for x in v {
+                put_f32(b, *x);
+            }
+        }
+        RowUpdate::Sparse(pairs) => {
+            put_u8(b, 1);
+            put_u32(b, pairs.len() as u32);
+            for (c, x) in pairs {
+                put_u32(b, *c);
+                put_f32(b, *x);
+            }
+        }
+    }
+}
+
+fn get_row_update(r: &mut Reader) -> Result<RowUpdate> {
+    match r.u8()? {
+        0 => {
+            let n = r.u32()? as usize;
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(r.f32()?);
+            }
+            Ok(RowUpdate::Dense(v))
+        }
+        1 => {
+            let n = r.u32()? as usize;
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                let c = r.u32()?;
+                v.push((c, r.f32()?));
+            }
+            Ok(RowUpdate::Sparse(v))
+        }
+        _ => Err(corrupt("row-update tag")),
+    }
+}
+
+fn put_push_batch(b: &mut Vec<u8>, p: &PushBatch) {
+    put_u32(b, p.table.0);
+    put_u32(b, p.origin.0);
+    put_u64(b, p.batch_id);
+    put_u32(b, p.clock);
+    put_u32(b, p.epoch);
+    put_u32(b, p.updates.len() as u32);
+    for (row, u) in &p.updates {
+        put_u64(b, row.0);
+        put_row_update(b, u);
+    }
+}
+
+fn get_push_batch(r: &mut Reader) -> Result<PushBatch> {
+    let table = TableId(r.u32()?);
+    let origin = ProcId(r.u32()?);
+    let batch_id = r.u64()?;
+    let clock = r.u32()?;
+    let epoch = r.u32()?;
+    let n = r.u32()? as usize;
+    let mut updates = Vec::with_capacity(n);
+    for _ in 0..n {
+        let row = RowId(r.u64()?);
+        updates.push((row, get_row_update(r)?));
+    }
+    Ok(PushBatch { table, origin, batch_id, updates, clock, epoch })
+}
+
+/// Encode one WAL record (without framing).
+fn put_wal_record(b: &mut Vec<u8>, rec: &WalRecord) {
+    match rec {
+        WalRecord::Push(p) => {
+            put_u8(b, 0);
+            put_push_batch(b, p);
+        }
+        WalRecord::Ack { table, origin, batch_id, by } => {
+            put_u8(b, 1);
+            put_u32(b, table.0);
+            put_u32(b, origin.0);
+            put_u64(b, *batch_id);
+            put_u32(b, by.0);
+        }
+        WalRecord::Clock { proc, clock } => {
+            put_u8(b, 2);
+            put_u32(b, proc.0);
+            put_u32(b, *clock);
+        }
+    }
+}
+
+fn get_wal_record(r: &mut Reader) -> Result<WalRecord> {
+    match r.u8()? {
+        0 => Ok(WalRecord::Push(get_push_batch(r)?)),
+        1 => {
+            let table = TableId(r.u32()?);
+            let origin = ProcId(r.u32()?);
+            let batch_id = r.u64()?;
+            let by = ProcId(r.u32()?);
+            Ok(WalRecord::Ack { table, origin, batch_id, by })
+        }
+        2 => {
+            let proc = ProcId(r.u32()?);
+            let clock = r.u32()?;
+            Ok(WalRecord::Clock { proc, clock })
+        }
+        _ => Err(corrupt("wal-record tag")),
+    }
+}
+
+fn put_row_image(b: &mut Vec<u8>, rows: &RowImage) {
+    put_u32(b, rows.len() as u32);
+    for (row, data, clock) in rows {
+        put_u64(b, row.0);
+        put_row_data(b, data);
+        put_u32(b, *clock);
+    }
+}
+
+fn get_row_image(r: &mut Reader) -> Result<RowImage> {
+    let n = r.u32()? as usize;
+    let mut rows = Vec::with_capacity(n);
+    for _ in 0..n {
+        let row = RowId(r.u64()?);
+        let data = get_row_data(r)?;
+        rows.push((row, data, r.u32()?));
+    }
+    Ok(rows)
+}
+
+fn put_vis(b: &mut Vec<u8>, v: &VisibilityImage) {
+    put_u32(b, v.num_procs);
+    put_u32(b, v.pending.len() as u32);
+    for (o, id, acked) in &v.pending {
+        put_u32(b, o.0);
+        put_u64(b, *id);
+        put_u32(b, acked.len() as u32);
+        for p in acked {
+            put_u32(b, p.0);
+        }
+    }
+    put_u32(b, v.inflight.len() as u32);
+    for ((row, col), m) in &v.inflight {
+        put_u64(b, row.0);
+        put_u32(b, *col);
+        put_f32(b, *m);
+    }
+    put_u32(b, v.batch_mass.len() as u32);
+    for (o, id, masses) in &v.batch_mass {
+        put_u32(b, o.0);
+        put_u64(b, *id);
+        put_u32(b, masses.len() as u32);
+        for ((row, col), m) in masses {
+            put_u64(b, row.0);
+            put_u32(b, *col);
+            put_f32(b, *m);
+        }
+    }
+    put_u32(b, v.held.len() as u32);
+    for (o, q) in &v.held {
+        put_u32(b, o.0);
+        put_u32(b, q.len() as u32);
+        for p in q {
+            put_push_batch(b, p);
+        }
+    }
+    put_f32(b, v.u_obs);
+}
+
+fn get_vis(r: &mut Reader) -> Result<VisibilityImage> {
+    let num_procs = r.u32()?;
+    let n = r.u32()? as usize;
+    let mut pending = Vec::with_capacity(n);
+    for _ in 0..n {
+        let o = ProcId(r.u32()?);
+        let id = r.u64()?;
+        let k = r.u32()? as usize;
+        let mut acked = Vec::with_capacity(k);
+        for _ in 0..k {
+            acked.push(ProcId(r.u32()?));
+        }
+        pending.push((o, id, acked));
+    }
+    let n = r.u32()? as usize;
+    let mut inflight = Vec::with_capacity(n);
+    for _ in 0..n {
+        let row = RowId(r.u64()?);
+        let col = r.u32()?;
+        inflight.push(((row, col), r.f32()?));
+    }
+    let n = r.u32()? as usize;
+    let mut batch_mass = Vec::with_capacity(n);
+    for _ in 0..n {
+        let o = ProcId(r.u32()?);
+        let id = r.u64()?;
+        let k = r.u32()? as usize;
+        let mut masses = Vec::with_capacity(k);
+        for _ in 0..k {
+            let row = RowId(r.u64()?);
+            let col = r.u32()?;
+            masses.push(((row, col), r.f32()?));
+        }
+        batch_mass.push((o, id, masses));
+    }
+    let n = r.u32()? as usize;
+    let mut held = Vec::with_capacity(n);
+    for _ in 0..n {
+        let o = ProcId(r.u32()?);
+        let k = r.u32()? as usize;
+        let mut q = Vec::with_capacity(k);
+        for _ in 0..k {
+            q.push(get_push_batch(r)?);
+        }
+        held.push((o, q));
+    }
+    let u_obs = r.f32()?;
+    Ok(VisibilityImage { num_procs, pending, inflight, batch_mass, held, u_obs })
+}
+
+/// File magic guarding the checkpoint codec version.
+const CP_MAGIC: &[u8; 8] = b"BAPPSCP1";
+
+fn encode_checkpoint(cp: &ShardCheckpoint) -> Vec<u8> {
+    let mut b = Vec::new();
+    b.extend_from_slice(CP_MAGIC);
+    put_u32(&mut b, cp.vclock.len() as u32);
+    for (p, c) in &cp.vclock {
+        put_u32(&mut b, p.0);
+        put_u32(&mut b, *c);
+    }
+    put_u32(&mut b, cp.last_broadcast);
+    put_u32(&mut b, cp.tables.len() as u32);
+    for t in &cp.tables {
+        put_u32(&mut b, t.id.0);
+        put_row_image(&mut b, &t.store);
+        put_row_image(&mut b, &t.fwd);
+        put_u32(&mut b, t.applied_upto.len() as u32);
+        for (p, id) in &t.applied_upto {
+            put_u32(&mut b, p.0);
+            put_u64(&mut b, *id);
+        }
+        put_vis(&mut b, &t.vis);
+    }
+    b
+}
+
+fn decode_checkpoint(buf: &[u8]) -> Result<ShardCheckpoint> {
+    let mut r = Reader::new(buf);
+    if r.take(8)? != CP_MAGIC {
+        return Err(corrupt("checkpoint magic"));
+    }
+    let n = r.u32()? as usize;
+    let mut vclock = Vec::with_capacity(n);
+    for _ in 0..n {
+        let p = ProcId(r.u32()?);
+        vclock.push((p, r.u32()?));
+    }
+    let last_broadcast = r.u32()?;
+    let n = r.u32()? as usize;
+    let mut tables = Vec::with_capacity(n);
+    for _ in 0..n {
+        let id = TableId(r.u32()?);
+        let store = get_row_image(&mut r)?;
+        let fwd = get_row_image(&mut r)?;
+        let k = r.u32()? as usize;
+        let mut applied_upto = Vec::with_capacity(k);
+        for _ in 0..k {
+            let p = ProcId(r.u32()?);
+            applied_upto.push((p, r.u64()?));
+        }
+        let vis = get_vis(&mut r)?;
+        tables.push(TableImage { id, store, fwd, applied_upto, vis });
+    }
+    Ok(ShardCheckpoint { vclock, last_broadcast, tables })
+}
+
+// ---------------------------------------------------------------------------
+// File-backed implementation (production).
+// ---------------------------------------------------------------------------
+
+/// Directory-backed persistence: `checkpoint.bin` (replaced atomically via
+/// tmp + rename), `wal.bin` (framed appends; a torn trailing frame from a
+/// mid-write crash is detected and dropped at load), `epoch.bin`.
+///
+/// Appends go through the OS page cache without `fsync` — the crash model
+/// reproduced here is process death, not host death.
+pub struct FilePersistence {
+    dir: PathBuf,
+    wal: Mutex<std::fs::File>,
+}
+
+impl FilePersistence {
+    /// Open (creating the directory and files as needed).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        let wal = std::fs::OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(dir.join("wal.bin"))?;
+        Ok(FilePersistence { dir, wal: Mutex::new(wal) })
+    }
+
+    fn write_atomic(&self, name: &str, bytes: &[u8]) -> Result<()> {
+        let tmp = self.dir.join(format!("{name}.tmp"));
+        let dst = self.dir.join(name);
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(bytes)?;
+        }
+        std::fs::rename(&tmp, &dst)?;
+        Ok(())
+    }
+}
+
+impl Persistence for FilePersistence {
+    fn append(&self, rec: &WalRecord) -> Result<()> {
+        let mut body = Vec::new();
+        put_wal_record(&mut body, rec);
+        let mut frame = Vec::with_capacity(4 + body.len());
+        put_u32(&mut frame, body.len() as u32);
+        frame.extend_from_slice(&body);
+        let mut f = self.wal.lock().unwrap();
+        f.write_all(&frame)?;
+        Ok(())
+    }
+
+    fn checkpoint(&self, cp: &ShardCheckpoint) -> Result<()> {
+        // Order matters: the checkpoint lands atomically first, then the WAL
+        // is truncated. A crash in between leaves WAL records the checkpoint
+        // already covers — replay is idempotent (see module docs).
+        self.write_atomic("checkpoint.bin", &encode_checkpoint(cp))?;
+        let mut f = self.wal.lock().unwrap();
+        *f = std::fs::File::create(self.dir.join("wal.bin"))?;
+        Ok(())
+    }
+
+    fn load(&self) -> Result<(Option<ShardCheckpoint>, Vec<WalRecord>)> {
+        let cp = match std::fs::read(self.dir.join("checkpoint.bin")) {
+            Ok(bytes) => Some(decode_checkpoint(&bytes)?),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
+            Err(e) => return Err(e.into()),
+        };
+        let wal_bytes = match std::fs::read(self.dir.join("wal.bin")) {
+            Ok(bytes) => bytes,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e.into()),
+        };
+        let mut wal = Vec::new();
+        let mut pos = 0usize;
+        while wal_bytes.len() - pos >= 4 {
+            let len = u32::from_le_bytes(wal_bytes[pos..pos + 4].try_into().unwrap()) as usize;
+            if wal_bytes.len() - pos - 4 < len {
+                break; // torn trailing frame: the append died mid-write
+            }
+            let mut r = Reader::new(&wal_bytes[pos + 4..pos + 4 + len]);
+            wal.push(get_wal_record(&mut r)?);
+            pos += 4 + len;
+        }
+        Ok((cp, wal))
+    }
+
+    fn epoch(&self) -> Result<u32> {
+        match std::fs::read(self.dir.join("epoch.bin")) {
+            Ok(bytes) if bytes.len() == 4 => {
+                Ok(u32::from_le_bytes(bytes.as_slice().try_into().unwrap()))
+            }
+            Ok(_) => Err(corrupt("epoch file")),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(0),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    fn bump_epoch(&self) -> Result<u32> {
+        let next = self.epoch()? + 1;
+        self.write_atomic("epoch.bin", &next.to_le_bytes())?;
+        Ok(next)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint assembly helpers (shard ⇄ image).
+// ---------------------------------------------------------------------------
+
+/// Deterministically image a `TableStore` (rows sorted by id).
+pub fn image_store(store: &TableStore) -> RowImage {
+    let mut rows: RowImage =
+        store.iter().map(|(id, sr)| (id, sr.data.clone(), sr.clock)).collect();
+    rows.sort_unstable_by_key(|(id, _, _)| id.0);
+    rows
+}
+
+/// Deterministically image an applied-frontier map (sorted by origin).
+pub fn image_applied(applied: &HashMap<ProcId, u64>) -> Vec<(ProcId, u64)> {
+    let mut v: Vec<(ProcId, u64)> = applied.iter().map(|(p, id)| (*p, *id)).collect();
+    v.sort_unstable_by_key(|(p, _)| p.0);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::RowKind;
+
+    fn sample_batch(id: u64) -> PushBatch {
+        PushBatch {
+            table: TableId(0),
+            origin: ProcId(1),
+            batch_id: id,
+            updates: vec![
+                (RowId(3), RowUpdate::Dense(vec![1.0, -2.5])),
+                (RowId(9), RowUpdate::Sparse(vec![(0, 0.5), (7, -0.25)])),
+            ],
+            clock: 4,
+            epoch: 2,
+        }
+    }
+
+    fn sample_checkpoint() -> ShardCheckpoint {
+        let mut sparse = std::collections::BTreeMap::new();
+        sparse.insert(2u32, 1.5f32);
+        ShardCheckpoint {
+            vclock: vec![(ProcId(0), 3), (ProcId(1), 5)],
+            last_broadcast: 3,
+            tables: vec![TableImage {
+                id: TableId(0),
+                store: vec![
+                    (RowId(1), RowData::Dense(vec![1.0, 2.0]), 3),
+                    (RowId(4), RowData::Sparse(sparse.clone()), 2),
+                ],
+                fwd: vec![(RowId(1), RowData::Dense(vec![1.0, 0.0]), 3)],
+                applied_upto: vec![(ProcId(0), 7), (ProcId(1), 2)],
+                vis: VisibilityImage {
+                    num_procs: 2,
+                    pending: vec![(ProcId(1), 2, vec![ProcId(0)])],
+                    inflight: vec![((RowId(1), 0), 1.5)],
+                    batch_mass: vec![(ProcId(1), 2, vec![((RowId(1), 0), 1.5)])],
+                    held: vec![(ProcId(0), vec![sample_batch(8)])],
+                    u_obs: 2.5,
+                },
+            }],
+        }
+    }
+
+    fn wal_records() -> Vec<WalRecord> {
+        vec![
+            WalRecord::Push(sample_batch(0)),
+            WalRecord::Ack { table: TableId(0), origin: ProcId(1), batch_id: 0, by: ProcId(0) },
+            WalRecord::Clock { proc: ProcId(0), clock: 9 },
+        ]
+    }
+
+    fn assert_same_checkpoint(a: &ShardCheckpoint, b: &ShardCheckpoint) {
+        assert_eq!(encode_checkpoint(a), encode_checkpoint(b));
+    }
+
+    #[test]
+    fn mem_persistence_roundtrip_and_truncation() {
+        let p = MemPersistence::new();
+        for rec in wal_records() {
+            p.append(&rec).unwrap();
+        }
+        assert_eq!(p.wal_len(), 3);
+        let (cp, wal) = p.load().unwrap();
+        assert!(cp.is_none());
+        assert_eq!(wal.len(), 3);
+        p.checkpoint(&sample_checkpoint()).unwrap();
+        assert_eq!(p.wal_len(), 0, "checkpoint truncates the WAL");
+        p.append(&WalRecord::Clock { proc: ProcId(1), clock: 1 }).unwrap();
+        let (cp, wal) = p.load().unwrap();
+        assert_same_checkpoint(&cp.unwrap(), &sample_checkpoint());
+        assert_eq!(wal.len(), 1);
+        assert_eq!(p.epoch().unwrap(), 0);
+        assert_eq!(p.bump_epoch().unwrap(), 1);
+        assert_eq!(p.epoch().unwrap(), 1);
+    }
+
+    fn tempdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("bapps-persist-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn file_persistence_roundtrip_across_reopen() {
+        let dir = tempdir("roundtrip");
+        {
+            let p = FilePersistence::open(&dir).unwrap();
+            p.checkpoint(&sample_checkpoint()).unwrap();
+            for rec in wal_records() {
+                p.append(&rec).unwrap();
+            }
+            assert_eq!(p.bump_epoch().unwrap(), 1);
+            assert_eq!(p.bump_epoch().unwrap(), 2);
+        }
+        // Reopen: everything must still be there (epoch is durable too).
+        let p = FilePersistence::open(&dir).unwrap();
+        let (cp, wal) = p.load().unwrap();
+        assert_same_checkpoint(&cp.unwrap(), &sample_checkpoint());
+        assert_eq!(wal.len(), 3);
+        match &wal[0] {
+            WalRecord::Push(b) => {
+                assert_eq!(b.batch_id, 0);
+                assert_eq!(b.updates.len(), 2);
+                assert_eq!(b.updates[1].1, RowUpdate::Sparse(vec![(0, 0.5), (7, -0.25)]));
+            }
+            other => panic!("expected Push, got {other:?}"),
+        }
+        match &wal[1] {
+            WalRecord::Ack { by, .. } => assert_eq!(*by, ProcId(0)),
+            other => panic!("expected Ack, got {other:?}"),
+        }
+        assert_eq!(p.epoch().unwrap(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn file_persistence_drops_torn_wal_tail() {
+        let dir = tempdir("torn");
+        {
+            let p = FilePersistence::open(&dir).unwrap();
+            for rec in wal_records() {
+                p.append(&rec).unwrap();
+            }
+        }
+        // Simulate a crash mid-append: a frame header promising more bytes
+        // than were written.
+        {
+            let mut f = std::fs::OpenOptions::new()
+                .append(true)
+                .open(dir.join("wal.bin"))
+                .unwrap();
+            f.write_all(&[200, 0, 0, 0, 1, 2, 3]).unwrap();
+        }
+        let p = FilePersistence::open(&dir).unwrap();
+        let (_, wal) = p.load().unwrap();
+        assert_eq!(wal.len(), 3, "torn tail ignored, intact prefix kept");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoint_truncates_wal_file() {
+        let dir = tempdir("truncate");
+        let p = FilePersistence::open(&dir).unwrap();
+        for rec in wal_records() {
+            p.append(&rec).unwrap();
+        }
+        p.checkpoint(&sample_checkpoint()).unwrap();
+        p.append(&WalRecord::Clock { proc: ProcId(0), clock: 2 }).unwrap();
+        let (cp, wal) = p.load().unwrap();
+        assert!(cp.is_some());
+        assert_eq!(wal.len(), 1, "only post-checkpoint records remain");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_checkpoint_is_an_error_not_a_panic() {
+        let dir = tempdir("corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("checkpoint.bin"), b"not a checkpoint").unwrap();
+        let p = FilePersistence::open(&dir).unwrap();
+        assert!(p.load().is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -14,7 +14,7 @@
 //! visibility per worker is preserved (releasing origin B's batch while
 //! origin A's waits is allowed — FIFO is per sender).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeSet, HashMap, VecDeque};
 
 use crate::comm::msg::PushBatch;
 use crate::consistency::ConsistencyModel;
@@ -24,13 +24,15 @@ use crate::types::ProcId;
 /// Per-parameter key used for in-flight mass accounting.
 pub type ParamKey = (RowId, u32);
 
-/// Tracks ack counts, in-flight mass and held batches for one table on one
+/// Tracks ack sets, in-flight mass and held batches for one table on one
 /// shard.
 pub struct VisibilityTracker {
     /// Expected acks per batch = number of client processes.
     num_procs: u32,
-    /// `(origin, batch_id) → acks still missing`.
-    pending: HashMap<(ProcId, u64), u32>,
+    /// `(origin, batch_id) → processes that have acked`. Set-based rather
+    /// than a countdown so that a duplicate ack — normal after a recovered
+    /// shard re-solicits acks with `AckProbe` — cannot double-count.
+    pending: HashMap<(ProcId, u64), BTreeSet<ProcId>>,
     /// Strong-VAP: in-flight L1 mass per parameter.
     inflight: HashMap<ParamKey, f32>,
     /// Strong-VAP: the per-parameter masses each in-flight batch carries
@@ -84,13 +86,17 @@ impl VisibilityTracker {
         Some(batch)
     }
 
-    /// Record one process's ack of `(origin, batch_id)`. Returns `true`
-    /// when that was the final ack (batch now globally visible).
-    pub fn ack(&mut self, origin: ProcId, batch_id: u64) -> bool {
+    /// Record `by`'s ack of `(origin, batch_id)`. Returns `true` when that
+    /// completed the ack set (batch now globally visible). Duplicate acks
+    /// from the same process and acks for unknown (already-visible) batches
+    /// are ignored.
+    pub fn ack(&mut self, origin: ProcId, batch_id: u64, by: ProcId) -> bool {
         match self.pending.get_mut(&(origin, batch_id)) {
-            Some(n) => {
-                *n -= 1;
-                if *n == 0 {
+            Some(acked) => {
+                if !acked.insert(by) {
+                    return false; // duplicate ack (e.g. re-ack after AckProbe)
+                }
+                if acked.len() as u32 == self.num_procs {
                     self.pending.remove(&(origin, batch_id));
                     if let Some(masses) = self.batch_mass.remove(&(origin, batch_id)) {
                         for (param, m) in masses {
@@ -107,8 +113,26 @@ impl VisibilityTracker {
                     false
                 }
             }
-            None => false, // duplicate/unknown ack: ignore
+            None => false, // unknown/already-visible batch: ignore
         }
+    }
+
+    /// In-flight batches with the processes that have **not** acked yet —
+    /// the targets of a recovered shard's `AckProbe`s (the original acks may
+    /// have been lost in the crash window). Sorted `(origin, batch_id)` so
+    /// probe emission order is deterministic.
+    pub fn missing_acks(&self) -> Vec<(ProcId, u64, Vec<ProcId>)> {
+        let mut out: Vec<(ProcId, u64, Vec<ProcId>)> = self
+            .pending
+            .iter()
+            .map(|((o, b), acked)| {
+                let missing: Vec<ProcId> =
+                    (0..self.num_procs).map(ProcId).filter(|p| !acked.contains(p)).collect();
+                (*o, *b, missing)
+            })
+            .collect();
+        out.sort_unstable_by_key(|(o, b, _)| (o.0, *b));
+        out
     }
 
     /// After a release of in-flight mass, pop every held batch that now
@@ -184,7 +208,7 @@ impl VisibilityTracker {
     }
 
     fn start_flight(&mut self, batch: &PushBatch) {
-        self.pending.insert((batch.origin, batch.batch_id), self.num_procs);
+        self.pending.insert((batch.origin, batch.batch_id), BTreeSet::new());
         let mut masses = Vec::new();
         for (row, u) in &batch.updates {
             for (col, v) in u.iter_nonzero() {
@@ -195,6 +219,72 @@ impl VisibilityTracker {
         }
         self.batch_mass.insert((batch.origin, batch.batch_id), masses);
     }
+
+    /// Plain-data image of the tracker (sorted, deterministic) for shard
+    /// checkpointing.
+    pub fn export(&self) -> VisibilityImage {
+        let mut pending: Vec<(ProcId, u64, Vec<ProcId>)> = self
+            .pending
+            .iter()
+            .map(|((o, b), acked)| (*o, *b, acked.iter().copied().collect()))
+            .collect();
+        pending.sort_unstable_by_key(|(o, b, _)| (o.0, *b));
+        let mut inflight: Vec<(ParamKey, f32)> =
+            self.inflight.iter().map(|(k, v)| (*k, *v)).collect();
+        inflight.sort_unstable_by_key(|((r, c), _)| (r.0, *c));
+        let mut batch_mass: Vec<(ProcId, u64, Vec<(ParamKey, f32)>)> =
+            self.batch_mass.iter().map(|((o, b), m)| (*o, *b, m.clone())).collect();
+        batch_mass.sort_unstable_by_key(|(o, b, _)| (o.0, *b));
+        let mut held: Vec<(ProcId, Vec<PushBatch>)> = self
+            .held
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .map(|(o, q)| (*o, q.iter().cloned().collect()))
+            .collect();
+        held.sort_unstable_by_key(|(o, _)| o.0);
+        VisibilityImage {
+            num_procs: self.num_procs,
+            pending,
+            inflight,
+            batch_mass,
+            held,
+            u_obs: self.u_obs,
+        }
+    }
+
+    /// Rebuild a tracker from a checkpoint image.
+    pub fn from_image(img: VisibilityImage) -> Self {
+        VisibilityTracker {
+            num_procs: img.num_procs,
+            pending: img
+                .pending
+                .into_iter()
+                .map(|(o, b, acked)| ((o, b), acked.into_iter().collect()))
+                .collect(),
+            inflight: img.inflight.into_iter().collect(),
+            batch_mass: img.batch_mass.into_iter().map(|(o, b, m)| ((o, b), m)).collect(),
+            held: img.held.into_iter().map(|(o, q)| (o, q.into_iter().collect())).collect(),
+            u_obs: img.u_obs,
+        }
+    }
+}
+
+/// Plain-data, deterministically ordered snapshot of a
+/// [`VisibilityTracker`], serialisable by the persistence layer.
+#[derive(Debug, Clone)]
+pub struct VisibilityImage {
+    /// Expected acks per batch.
+    pub num_procs: u32,
+    /// In-flight batches and the processes that have acked each.
+    pub pending: Vec<(ProcId, u64, Vec<ProcId>)>,
+    /// Strong-VAP per-parameter in-flight mass.
+    pub inflight: Vec<(ParamKey, f32)>,
+    /// Per-batch masses (released on final ack).
+    pub batch_mass: Vec<(ProcId, u64, Vec<(ParamKey, f32)>)>,
+    /// Gate-held batches, FIFO per origin.
+    pub held: Vec<(ProcId, Vec<PushBatch>)>,
+    /// Observed per-update magnitude bound `u`.
+    pub u_obs: f32,
 }
 
 #[cfg(test)]
@@ -210,6 +300,7 @@ mod tests {
             batch_id: id,
             updates: vec![(RowId(row), RowUpdate::single(0, delta))],
             clock: 0,
+            epoch: 0,
         }
     }
 
@@ -240,11 +331,68 @@ mod tests {
         let b = batch(1, 7, 0, 1.0);
         t.observe(&b);
         t.admit(&m, b).unwrap();
-        assert!(!t.ack(ProcId(1), 7));
-        assert!(!t.ack(ProcId(1), 7));
-        assert!(t.ack(ProcId(1), 7), "third ack is final");
-        assert!(!t.ack(ProcId(1), 7), "duplicate ack ignored");
+        assert!(!t.ack(ProcId(1), 7, ProcId(0)));
+        assert!(!t.ack(ProcId(1), 7, ProcId(1)));
+        assert!(t.ack(ProcId(1), 7, ProcId(2)), "third distinct ack is final");
+        assert!(!t.ack(ProcId(1), 7, ProcId(2)), "ack after visibility ignored");
         assert_eq!(t.in_flight_count(), 0);
+    }
+
+    #[test]
+    fn duplicate_acks_from_same_proc_do_not_count() {
+        let mut t = VisibilityTracker::new(3);
+        let m = weak();
+        let b = batch(0, 0, 0, 1.0);
+        t.observe(&b);
+        t.admit(&m, b).unwrap();
+        // The same process re-acking (as after an AckProbe) must not bring
+        // the batch closer to visibility.
+        assert!(!t.ack(ProcId(0), 0, ProcId(2)));
+        assert!(!t.ack(ProcId(0), 0, ProcId(2)));
+        assert!(!t.ack(ProcId(0), 0, ProcId(2)));
+        assert_eq!(t.in_flight_count(), 1);
+        assert!(!t.ack(ProcId(0), 0, ProcId(0)));
+        assert!(t.ack(ProcId(0), 0, ProcId(1)));
+    }
+
+    #[test]
+    fn missing_acks_lists_unacked_procs_in_order() {
+        let mut t = VisibilityTracker::new(3);
+        let m = weak();
+        for id in 0..2u64 {
+            let b = batch(1, id, 0, 1.0);
+            t.observe(&b);
+            t.admit(&m, b).unwrap();
+        }
+        t.ack(ProcId(1), 1, ProcId(2));
+        let missing = t.missing_acks();
+        assert_eq!(missing.len(), 2);
+        assert_eq!(missing[0], (ProcId(1), 0, vec![ProcId(0), ProcId(1), ProcId(2)]));
+        assert_eq!(missing[1], (ProcId(1), 1, vec![ProcId(0), ProcId(1)]));
+    }
+
+    #[test]
+    fn export_import_roundtrip_preserves_tracker_state() {
+        let mut t = VisibilityTracker::new(2);
+        let m = strong();
+        for id in 0..3u64 {
+            let b = batch(0, id, 5, 3.0);
+            t.observe(&b);
+            t.admit(&m, b); // id 0 admitted; 1, 2 held by the gate
+        }
+        t.ack(ProcId(0), 0, ProcId(1));
+        let mut r = VisibilityTracker::from_image(t.export());
+        assert_eq!(r.u_obs(), t.u_obs());
+        assert_eq!(r.held_count(), t.held_count());
+        assert_eq!(r.in_flight_count(), t.in_flight_count());
+        assert_eq!(r.inflight_mass((RowId(5), 0)), t.inflight_mass((RowId(5), 0)));
+        assert_eq!(r.missing_acks(), t.missing_acks());
+        // The restored tracker continues exactly where the original was:
+        // the second (final) ack for batch 0 releases batch 1 from the gate.
+        assert!(r.ack(ProcId(0), 0, ProcId(0)));
+        let rel = r.release_ready(&m);
+        assert_eq!(rel.len(), 1);
+        assert_eq!(rel[0].batch_id, 1);
     }
 
     #[test]
@@ -263,8 +411,8 @@ mod tests {
         assert_eq!(t.inflight_mass((RowId(5), 0)), 3.0);
 
         // Acks for b1 release mass; b2 becomes forwardable.
-        t.ack(ProcId(0), 0);
-        assert!(t.ack(ProcId(0), 0));
+        t.ack(ProcId(0), 0, ProcId(0));
+        assert!(t.ack(ProcId(0), 0, ProcId(1)));
         let released = t.release_ready(&m);
         assert_eq!(released.len(), 1);
         assert_eq!(released[0].batch_id, 1);
@@ -291,7 +439,7 @@ mod tests {
         t.observe(&b4);
         assert!(t.admit(&m, b4).is_some());
 
-        t.ack(ProcId(0), 0);
+        t.ack(ProcId(0), 0, ProcId(0));
         let rel = t.release_ready(&m);
         let ids: Vec<u64> = rel.iter().map(|b| b.batch_id).collect();
         assert_eq!(ids, vec![1, 2], "held batches release in origin order");

@@ -18,7 +18,7 @@ use crate::comm::bus::Transport;
 use crate::comm::{Msg, NetSender, Payload};
 use crate::config::{PolicyConfig, SystemConfig};
 use crate::consistency::vap;
-use crate::server::{ServerShard, TableRegistry};
+use crate::server::{MemPersistence, ServerShard, ShardOptions, TableRegistry};
 use crate::table::{RowId, RowKind, TableDesc, TableId};
 use crate::trace::TraceRecorder;
 use crate::types::{Clock, NodeId, ProcId, ShardId, WorkerId};
@@ -86,6 +86,11 @@ pub struct SimReport {
     pub ops_completed: u64,
     /// Op attempts that came back gated (retried later).
     pub retries: u64,
+    /// Shard crashes injected (0 or 1).
+    pub crashes: u64,
+    /// Deliveries destroyed because the destination shard was down (on
+    /// top of [`SimNetStats::purged`] at the crash instant itself).
+    pub dropped_to_dead: u64,
     /// Last trace lines (only populated by [`Sim::run_traced`]).
     pub trace_tail: Vec<String>,
 }
@@ -100,7 +105,8 @@ impl SimReport {
     pub fn describe(&self) -> String {
         let mut s = format!(
             "seed={} policy={} events={} hash={:016x} ops={} retries={} \
-             sent={} delivered={} retrans={} dup_inj={} dup_filt={}\n",
+             sent={} delivered={} retrans={} dup_inj={} dup_filt={} \
+             crashes={} purged={} dropped_dead={}\n",
             self.seed,
             self.policy,
             self.trace_lines,
@@ -112,6 +118,9 @@ impl SimReport {
             self.net.delayed_retrans,
             self.net.duplicates_injected,
             self.net.duplicates_filtered,
+            self.crashes,
+            self.net.purged,
+            self.dropped_to_dead,
         );
         if self.ok() {
             s.push_str("no violations\n");
@@ -223,8 +232,17 @@ pub struct Oracle {
     /// Per-param signed masses of each pushed batch, keyed
     /// `(origin, batch_id)`, recorded when the push crosses the wire.
     batch_mass: HashMap<(u32, u64), Vec<((u64, u32), f64)>>,
-    /// Last batch id seen per `(origin, shard)` (strict monotonicity).
-    last_batch: HashMap<(u32, u32), u64>,
+    /// Mirror of each shard's per-origin dedup watermark: highest batch
+    /// id *applied* per `(origin, shard)`. Survives crashes exactly like
+    /// the server's own (the server rebuilds it from the WAL, which holds
+    /// precisely the applied prefix). Doubles as the strict batch-order
+    /// check on crash-free runs.
+    applied_upto: HashMap<(u32, u32), u64>,
+    /// Mirror of each shard's fencing epoch (bumped on every restart).
+    shard_epoch: HashMap<u32, u32>,
+    /// A crash is configured: duplicate or fenced push arrivals are
+    /// legitimate replay traffic, not ordering bugs.
+    crash_expected: bool,
     /// Largest |delta| any worker wrote (the paper's `u`).
     u_obs: f32,
     violations: Vec<Violation>,
@@ -238,7 +256,9 @@ impl Oracle {
             policy,
             pending: HashMap::new(),
             batch_mass: HashMap::new(),
-            last_batch: HashMap::new(),
+            applied_upto: HashMap::new(),
+            shard_epoch: HashMap::new(),
+            crash_expected: false,
             u_obs: 0.0,
             violations: Vec::new(),
             truncated: 0,
@@ -262,20 +282,31 @@ impl Oracle {
     pub fn observe_delivery(&mut self, at: u64, msg: &Msg) {
         match (&msg.payload, msg.dst) {
             (Payload::PushUpdates(b), NodeId::Server(s)) => {
+                if b.epoch < self.shard_epoch.get(&s.0).copied().unwrap_or(0) {
+                    // Pre-crash flush landing after the respawn: the
+                    // server's epoch fence drops it, and the origin will
+                    // re-send it under the new epoch.
+                    return;
+                }
                 let key = (b.origin.0, s.0);
-                if let Some(&prev) = self.last_batch.get(&key) {
+                if let Some(&prev) = self.applied_upto.get(&key) {
                     if b.batch_id <= prev {
-                        self.violate(
-                            at,
-                            "batch-order",
-                            format!(
-                                "origin {} batch {} after {} at shard {}",
-                                b.origin.0, b.batch_id, prev, s.0
-                            ),
-                        );
+                        if !self.crash_expected {
+                            self.violate(
+                                at,
+                                "batch-order",
+                                format!(
+                                    "origin {} batch {} after {} at shard {}",
+                                    b.origin.0, b.batch_id, prev, s.0
+                                ),
+                            );
+                        }
+                        // Retransmission of an already-applied batch: the
+                        // server's per-origin dedup drops it silently.
+                        return;
                     }
                 }
-                self.last_batch.insert(key, b.batch_id);
+                self.applied_upto.insert(key, b.batch_id);
                 if self.policy.v_thr().is_some() {
                     let mut masses: Vec<((u64, u32), f64)> = Vec::new();
                     for (row, u) in &b.updates {
@@ -299,6 +330,12 @@ impl Oracle {
             }
             _ => {}
         }
+    }
+
+    /// A shard respawned: mirror its durable epoch bump so the fence
+    /// check above matches the server's.
+    fn on_shard_restart(&mut self, shard: u32) {
+        *self.shard_epoch.entry(shard).or_insert(0) += 1;
     }
 
     /// Record an admitted write and check the VAP value bound: past the
@@ -399,7 +436,7 @@ impl Oracle {
         cfg: &SimConfig,
         desc: &TableDesc,
         cores: &[ClientCore],
-        shards: &[ServerShard],
+        shards: &[Option<ServerShard>],
         own_finals: &[(usize, u64, f32)],
     ) {
         let leftover: Vec<String> = self
@@ -423,7 +460,10 @@ impl Oracle {
         }
         for row in 0..cfg.num_rows() {
             let shard = desc.shard_of(RowId(row), cfg.shards);
-            let srow = shards[shard.0 as usize].row_snapshot(TABLE, RowId(row));
+            let srow = shards[shard.0 as usize]
+                .as_ref()
+                .expect("shard still down at quiescence")
+                .row_snapshot(TABLE, RowId(row));
             for col in 0..cfg.cols {
                 let sval = srow.as_ref().and_then(|d| d.get(col)).unwrap_or(0.0);
                 let mut first: Option<f32> = None;
@@ -526,8 +566,28 @@ impl Sim {
             .trace(false)
             .build();
 
-        let mut shards: Vec<ServerShard> = (0..cfg.shards)
-            .map(|s| ServerShard::new(ShardId(s), cfg.procs, registry.clone(), sender.clone()))
+        // Each shard owns a persistence handle that survives its crash:
+        // the respawn recovers from exactly what its predecessor logged
+        // (checkpoint + WAL), never from live memory.
+        let persists: Vec<Arc<MemPersistence>> =
+            (0..cfg.shards).map(|_| Arc::new(MemPersistence::new())).collect();
+        let shard_opts = |s: usize| {
+            let mut o = ShardOptions::new(persists[s].clone());
+            o.checkpoint_every = cfg.checkpoint_every;
+            o.skip_wal_replay = cfg.sabotage == Sabotage::SkipWalReplay;
+            o
+        };
+        let mut shards: Vec<Option<ServerShard>> = (0..cfg.shards)
+            .map(|s| {
+                Some(ServerShard::with_options(
+                    ShardId(s),
+                    cfg.procs,
+                    registry.clone(),
+                    sender.clone(),
+                    Arc::new(TraceRecorder::new(false)),
+                    shard_opts(s as usize),
+                ))
+            })
             .collect();
         let cores: Vec<ClientCore> = (0..cfg.procs)
             .map(|p| {
@@ -575,6 +635,7 @@ impl Sim {
 
         let mut trace = SimTrace::new(keep_trace);
         let mut oracle = Oracle::new(cfg.policy);
+        oracle.crash_expected = cfg.faults.crash.is_some();
         let mut heap: BinaryHeap<Reverse<(u64, usize)>> = workers
             .iter()
             .enumerate()
@@ -585,6 +646,23 @@ impl Sim {
         let mut ops_completed: u64 = 0;
         let mut retries_total: u64 = 0;
         let mut steps: u64 = 0;
+
+        // Crash/recovery machinery. All of it is inert — no events, no
+        // trace lines — unless a crash is configured, so clean runs keep
+        // their historical traces byte-identical.
+        if let Some(c) = cfg.faults.crash {
+            assert!(c.shard < cfg.shards, "crash.shard out of range");
+        }
+        let mut crash_pending = cfg.faults.crash;
+        let mut down_shard: Option<usize> = None;
+        let mut restart_at: Option<u64> = None;
+        let mut next_hb = cfg.faults.crash.map(|_| cfg.heartbeat_every_us.max(1));
+        let mut next_flush =
+            if cfg.flusher_every_us > 0 { Some(cfg.flusher_every_us) } else { None };
+        let mut last_pong: Vec<u64> = vec![0; cfg.shards as usize];
+        let mut ping_seq: u64 = 0;
+        let mut crashes: u64 = 0;
+        let mut dropped_to_dead: u64 = 0;
 
         loop {
             steps += 1;
@@ -597,16 +675,129 @@ impl Sim {
             }
             let tm = net.next_arrival();
             let tw = heap.peek().map(|&Reverse((t, _))| t);
-            let deliver = match (tm, tw) {
-                (None, None) => break,
-                (Some(_), None) => true,
-                (None, Some(_)) => false,
-                // Messages win ties: the delivery was scheduled first.
-                (Some(a), Some(b)) => a <= b,
-            };
-            if deliver {
+            // Next system event: crash, scheduled restart, heartbeat tick,
+            // flusher tick. The flusher idles once every worker script is
+            // exhausted — its timer would otherwise keep the loop alive
+            // forever. Lower `which` wins a same-time tie.
+            let mut ts: Option<(u64, u8)> = None;
+            let sys = [
+                (crash_pending.map(|c| c.at_us), 0u8),
+                (restart_at, 1),
+                (next_hb, 2),
+                (if tw.is_some() { next_flush } else { None }, 3),
+            ];
+            for (t, which) in sys {
+                if let Some(t) = t {
+                    if ts.map_or(true, |b| (t, which) < b) {
+                        ts = Some((t, which));
+                    }
+                }
+            }
+            // Pick the next event class. Ties: system timers fire before
+            // traffic stamped the same instant, and messages still win
+            // against worker steps (the historical rule).
+            let mut best: Option<(u64, u8)> = ts.map(|(t, _)| (t, 0u8));
+            for (t, class) in [(tm, 1u8), (tw, 2u8)] {
+                if let Some(t) = t {
+                    if best.map_or(true, |b| (t, class) < b) {
+                        best = Some((t, class));
+                    }
+                }
+            }
+            let Some((_, class)) = best else { break };
+            if class == 0 {
+                let (t, which) = ts.unwrap();
+                now = now.max(t);
+                net.advance_to(t);
+                match which {
+                    0 => {
+                        // The shard process dies: all in-memory state and
+                        // every in-flight message addressed to it are gone.
+                        let c = crash_pending.take().unwrap();
+                        let idx = c.shard as usize;
+                        shards[idx] = None;
+                        down_shard = Some(idx);
+                        crashes += 1;
+                        let purged = net.purge_to(NodeId::Server(ShardId(c.shard)));
+                        trace.push(format!("{t} crash shard{} purged={purged}", c.shard));
+                    }
+                    1 => {
+                        // Respawn from checkpoint + WAL. `recover` bumps
+                        // the durable epoch and announces itself to every
+                        // client, which triggers their resync protocol.
+                        restart_at = None;
+                        let idx = down_shard.take().expect("restart without a dead shard");
+                        let sh = ServerShard::recover(
+                            ShardId(idx as u32),
+                            cfg.procs,
+                            registry.clone(),
+                            sender.clone(),
+                            Arc::new(TraceRecorder::new(false)),
+                            shard_opts(idx),
+                        )
+                        .expect("recovery from in-memory persistence");
+                        shards[idx] = Some(sh);
+                        oracle.on_shard_restart(idx as u32);
+                        next_hb = None;
+                        trace.push(format!("{t} restart shard{idx}"));
+                    }
+                    2 => {
+                        // Failure detector: declare a shard dead after
+                        // `heartbeat_deadline_us` of silence, then ping
+                        // everyone again. Pings to the dead shard are
+                        // dropped at delivery, like a failed connect.
+                        for s in 0..cfg.shards as usize {
+                            let silent = t.saturating_sub(last_pong[s]);
+                            if silent > cfg.heartbeat_deadline_us && restart_at.is_none() {
+                                if down_shard == Some(s) {
+                                    let c = cfg.faults.crash.unwrap();
+                                    restart_at = Some(t.max(c.at_us + c.restart_after_us));
+                                    trace.push(format!("{t} detect shard{s} dead"));
+                                } else if shards[s].is_some() {
+                                    oracle.violate(
+                                        t,
+                                        "failure-detector",
+                                        format!("live shard {s} declared dead after {silent}µs"),
+                                    );
+                                }
+                            }
+                        }
+                        ping_seq += 1;
+                        for s in 0..cfg.shards {
+                            let _ = sender.send(Msg {
+                                src: NodeId::Coordinator,
+                                dst: NodeId::Server(ShardId(s)),
+                                payload: Payload::Ping { seq: ping_seq },
+                            });
+                        }
+                        next_hb = Some(t + cfg.heartbeat_every_us.max(1));
+                    }
+                    _ => {
+                        // Virtual-time eager flusher — the sim analogue of
+                        // the production flusher threads, in proc order.
+                        for core in &cores {
+                            core.flush_eager_tables();
+                        }
+                        next_flush = Some(t + cfg.flusher_every_us);
+                    }
+                }
+            } else if class == 1 {
                 let Some((at, msg)) = net.pop_next() else { continue };
                 now = at;
+                if let NodeId::Server(s) = msg.dst {
+                    if down_shard == Some(s.0 as usize) {
+                        // Dead destination: the message is destroyed before
+                        // the oracle sees it — it never happened.
+                        dropped_to_dead += 1;
+                        trace.push(format!(
+                            "{at} drop {}->{} {} (shard down)",
+                            msg.src,
+                            msg.dst,
+                            msg.payload.kind()
+                        ));
+                        continue;
+                    }
+                }
                 oracle.observe_delivery(at, &msg);
                 trace.push(format!(
                     "{at} net {}->{} {}",
@@ -616,12 +807,16 @@ impl Sim {
                 ));
                 match msg.dst {
                     NodeId::Server(s) => {
-                        shards[s.0 as usize].handle(msg);
+                        shards[s.0 as usize].as_mut().expect("delivery to dead shard").handle(msg);
                     }
                     NodeId::Client(p) => {
                         cores[p.0 as usize].handle_ingress(msg);
                     }
-                    NodeId::Coordinator => {}
+                    NodeId::Coordinator => {
+                        if let Payload::Pong { shard, .. } = msg.payload {
+                            last_pong[shard.0 as usize] = at;
+                        }
+                    }
                 }
             } else {
                 let Reverse((t, widx)) = heap.pop().unwrap();
@@ -658,6 +853,24 @@ impl Sim {
             }
         }
 
+        // If the run bailed out early (violation cap, step budget) while
+        // the shard was still down, respawn it now: the drain needs a
+        // full cluster to converge against.
+        if let Some(idx) = down_shard {
+            let sh = ServerShard::recover(
+                ShardId(idx as u32),
+                cfg.procs,
+                registry.clone(),
+                sender.clone(),
+                Arc::new(TraceRecorder::new(false)),
+                shard_opts(idx),
+            )
+            .expect("recovery from in-memory persistence");
+            shards[idx] = Some(sh);
+            oracle.on_shard_restart(idx as u32);
+            trace.push(format!("{now} restart shard{idx} (forced at drain)"));
+        }
+
         // Drain: flush leftovers (a livelock-killed worker may hold
         // egress), then run the network dry.
         for core in &cores {
@@ -681,7 +894,7 @@ impl Sim {
             ));
             match msg.dst {
                 NodeId::Server(s) => {
-                    shards[s.0 as usize].handle(msg);
+                    shards[s.0 as usize].as_mut().expect("delivery to dead shard").handle(msg);
                 }
                 NodeId::Client(p) => {
                     cores[p.0 as usize].handle_ingress(msg);
@@ -706,6 +919,8 @@ impl Sim {
             net: net.stats(),
             ops_completed,
             retries: retries_total,
+            crashes,
+            dropped_to_dead,
             trace_tail: trace.tail(40),
         }
     }
@@ -942,6 +1157,23 @@ mod tests {
             "write-gate sabotage never tripped the value oracle: {}",
             r.describe()
         );
+    }
+
+    #[test]
+    fn crash_recovery_run_upholds_all_bounds() {
+        for pol in [
+            PolicyConfig::Ssp { staleness: 1 },
+            PolicyConfig::Vap { v_thr: 2.0, strong: false },
+        ] {
+            let cfg =
+                SimConfig::default().with_policy(pol).with_seed(21).with_crash(0, 2_000, 3_000);
+            let a = Sim::run(&cfg);
+            let b = Sim::run(&cfg);
+            assert_eq!(a.trace_hash, b.trace_hash, "{}: crash trace diverged", a.policy);
+            assert_eq!(a.crashes, 1, "{}", a.describe());
+            assert!(a.net.purged > 0 || a.dropped_to_dead > 0, "{}", a.describe());
+            assert!(a.ok(), "{}", a.describe());
+        }
     }
 
     #[test]

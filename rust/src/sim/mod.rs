@@ -81,6 +81,22 @@ pub use vtrace::SimTrace;
 
 use crate::config::PolicyConfig;
 
+/// One injected shard crash. The shard process dies at `at_us`: its
+/// entire in-memory state is discarded and every in-flight message
+/// addressed to it is destroyed. The coordinator's failure detector
+/// notices the silence (missed heartbeats) and respawns the shard from
+/// its checkpoint + WAL once it has been down at least
+/// `restart_after_us`.
+#[derive(Debug, Clone, Copy)]
+pub struct CrashFault {
+    /// Which shard dies.
+    pub shard: u32,
+    /// Virtual time of death (µs).
+    pub at_us: u64,
+    /// Minimum downtime before the respawn can succeed (µs).
+    pub restart_after_us: u64,
+}
+
 /// Per-message fault injection knobs. All delays in virtual µs.
 #[derive(Debug, Clone, Copy)]
 pub struct FaultConfig {
@@ -101,6 +117,8 @@ pub struct FaultConfig {
     pub dup_p: f64,
     /// How long after the original the duplicate lands.
     pub dup_extra_us: u64,
+    /// Optional shard crash + recovery.
+    pub crash: Option<CrashFault>,
 }
 
 impl FaultConfig {
@@ -113,6 +131,7 @@ impl FaultConfig {
             retrans_us: 0,
             dup_p: 0.0,
             dup_extra_us: 0,
+            crash: None,
         }
     }
 
@@ -127,6 +146,7 @@ impl FaultConfig {
             retrans_us: 300,
             dup_p: 0.05,
             dup_extra_us: 90,
+            crash: None,
         }
     }
 }
@@ -146,6 +166,10 @@ pub enum Sabotage {
     /// Writes go through [`crate::client::ClientCore::sabotage_inc`],
     /// skipping the VAP write gate. Must trip the value-bound oracle.
     WriteGate,
+    /// The recovered shard skips WAL replay (checkpoint only): every push
+    /// applied since the last checkpoint is silently lost server-side.
+    /// Must trip the quiescence oracle on a run with a crash.
+    SkipWalReplay,
 }
 
 /// Full description of one simulated run. `Default` is the standard small
@@ -179,6 +203,22 @@ pub struct SimConfig {
     pub faults: FaultConfig,
     /// Oracle self-test mode.
     pub sabotage: Sabotage,
+    /// Virtual-time eager-flusher period (µs; 0 = off). When set, every
+    /// client core's [`crate::client::ClientCore::flush_eager_tables`]
+    /// runs on this cadence — the simulation analogue of the production
+    /// flusher thread, so CAP/VAP eager propagation is exercised between
+    /// clock boundaries.
+    pub flusher_every_us: u64,
+    /// Coordinator → shard heartbeat period (µs). Only consulted when a
+    /// crash is configured.
+    pub heartbeat_every_us: u64,
+    /// Silence window after which the coordinator declares a shard dead.
+    /// Must exceed the worst-case chaos round trip or a live shard gets
+    /// falsely declared.
+    pub heartbeat_deadline_us: u64,
+    /// Shard checkpoint cadence in WAL records (0 = never; recovery then
+    /// replays the full WAL).
+    pub checkpoint_every: u64,
 }
 
 impl Default for SimConfig {
@@ -197,6 +237,10 @@ impl Default for SimConfig {
             stragglers: Vec::new(),
             faults: FaultConfig::chaos(),
             sabotage: Sabotage::None,
+            flusher_every_us: 0,
+            heartbeat_every_us: 400,
+            heartbeat_deadline_us: 2_500,
+            checkpoint_every: 16,
         }
     }
 }
@@ -211,6 +255,13 @@ impl SimConfig {
     /// Same run, different policy.
     pub fn with_policy(mut self, policy: PolicyConfig) -> Self {
         self.policy = policy;
+        self
+    }
+
+    /// Same run, plus one shard crash at `at_us` with a minimum downtime
+    /// of `restart_after_us`.
+    pub fn with_crash(mut self, shard: u32, at_us: u64, restart_after_us: u64) -> Self {
+        self.faults.crash = Some(CrashFault { shard, at_us, restart_after_us });
         self
     }
 

@@ -38,6 +38,8 @@ pub struct SimNetStats {
     pub duplicates_injected: u64,
     /// Duplicate copies filtered at the receiver edge.
     pub duplicates_filtered: u64,
+    /// In-flight messages destroyed by a crash ([`SimNet::purge_to`]).
+    pub purged: u64,
 }
 
 /// One scheduled delivery. Ordered by `(at, seq)`; `seq` is globally
@@ -147,7 +149,9 @@ impl SimNet {
         let Reverse(f) = g.heap.pop()?;
         let link = (f.msg.src, f.msg.dst);
         let l = g.links.get_mut(&link).expect("delivery on unknown link");
-        debug_assert_eq!(f.link_seq, l.deliver_seq, "per-link FIFO broken in SimNet");
+        // `>=`, not `==`: a crash purge may have destroyed intermediate
+        // link sequence numbers; order must still be monotone.
+        debug_assert!(f.link_seq >= l.deliver_seq, "per-link FIFO broken in SimNet");
         l.deliver_seq = f.link_seq + 1;
         g.now = g.now.max(f.at);
         g.stats.delivered += 1;
@@ -177,6 +181,26 @@ impl SimNet {
     /// Counter snapshot.
     pub fn stats(&self) -> SimNetStats {
         self.inner.lock().unwrap().stats
+    }
+
+    /// Crash semantics: destroy every in-flight message addressed to
+    /// `node` (a dead process receives nothing, and nothing it would have
+    /// received survives its restart). Messages *from* the node that are
+    /// already on the wire still arrive — they left before the crash.
+    /// Returns how many messages were destroyed.
+    pub fn purge_to(&self, node: NodeId) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        let drained: Vec<Reverse<InFlight>> = std::mem::take(&mut g.heap).into_vec();
+        let mut purged = 0;
+        for e in drained {
+            if e.0.msg.dst == node {
+                purged += 1;
+            } else {
+                g.heap.push(e);
+            }
+        }
+        g.stats.purged += purged;
+        purged
     }
 }
 
@@ -237,7 +261,7 @@ mod tests {
         Msg {
             src: NodeId::Client(ProcId(src)),
             dst: NodeId::Server(ShardId(dst)),
-            payload: Payload::ClockNotify { proc: ProcId(src), clock },
+            payload: Payload::ClockNotify { proc: ProcId(src), clock, epoch: 0 },
         }
     }
 
@@ -321,6 +345,38 @@ mod tests {
                 .collect::<Vec<_>>()
         };
         assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn purge_destroys_only_traffic_to_the_node() {
+        let net = SimNet::new(5, FaultConfig::none());
+        for i in 0..10 {
+            net.send(msg(0, 0, i)).unwrap(); // to shard 0 (will crash)
+            net.send(msg(0, 1, i)).unwrap(); // to shard 1 (survives)
+        }
+        let purged = net.purge_to(NodeId::Server(ShardId(0)));
+        assert_eq!(purged, 10);
+        assert_eq!(net.stats().purged, 10);
+        let got = drain(&net);
+        assert_eq!(got.len(), 10);
+        for (_, m) in &got {
+            assert_eq!(m.dst, NodeId::Server(ShardId(1)));
+        }
+        // Post-restart traffic on the purged link flows despite the gap
+        // in link sequence numbers.
+        for i in 0..5 {
+            net.send(msg(0, 0, 100 + i)).unwrap();
+        }
+        let after = drain(&net);
+        assert_eq!(after.len(), 5);
+        let clocks: Vec<u32> = after
+            .iter()
+            .map(|(_, m)| match m.payload {
+                Payload::ClockNotify { clock, .. } => clock,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(clocks, vec![100, 101, 102, 103, 104], "FIFO resumes after the gap");
     }
 
     #[test]

@@ -58,6 +58,11 @@ pub fn sweep(base: &SimConfig, seeds: std::ops::Range<u64>) -> SweepOutcome {
 /// a fault class, removes stragglers, or shrinks the workload.
 fn candidates(c: &SimConfig) -> Vec<SimConfig> {
     let mut out = Vec::new();
+    if c.faults.crash.is_some() {
+        let mut n = c.clone();
+        n.faults = FaultConfig { crash: None, ..n.faults };
+        out.push(n);
+    }
     if c.faults.dup_p > 0.0 {
         let mut n = c.clone();
         n.faults = FaultConfig { dup_p: 0.0, ..n.faults };

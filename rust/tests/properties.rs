@@ -221,6 +221,7 @@ fn prop_visibility_tracker_acks() {
                         RowUpdate::single(0, (rng.f32() * 2.0 - 1.0) * 2.0),
                     )],
                     clock: 1,
+                    epoch: 0,
                 };
                 next_id[origin as usize] += 1;
                 vt.observe(&b);
@@ -234,7 +235,7 @@ fn prop_visibility_tracker_acks() {
                 let e = acks_given.entry((origin.0, id)).or_insert(0);
                 if *e < procs {
                     *e += 1;
-                    if vt.ack(origin, id) {
+                    if vt.ack(origin, id, ProcId(*e - 1)) {
                         visible += 1;
                         in_flight.remove(i);
                         admitted += {
@@ -255,7 +256,7 @@ fn prop_visibility_tracker_acks() {
             let e = acks_given.entry((origin.0, id)).or_insert(0);
             while *e < procs {
                 *e += 1;
-                if vt.ack(origin, id) {
+                if vt.ack(origin, id, ProcId(*e - 1)) {
                     visible += 1;
                     for b in vt.release_ready(&model) {
                         in_flight.push((b.origin, b.batch_id));

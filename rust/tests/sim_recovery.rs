@@ -1,0 +1,144 @@
+//! Crash-recovery acceptance suite.
+//!
+//! Exercises the shard crash → heartbeat detection → checkpoint + WAL
+//! respawn → client resync path through the deterministic sim harness: a
+//! ≥200-run seeded sweep across all six policies with a mid-run shard
+//! crash must uphold every bound; crash runs must stay byte-identical
+//! per seed; a recovery that skips WAL replay must be caught by the
+//! oracles; and the shrinker must keep the crash exactly when the
+//! failure needs it.
+
+use bapps::config::PolicyConfig;
+use bapps::sim::{shrink, sweep, Sabotage, Sim, SimConfig};
+
+fn policies() -> Vec<PolicyConfig> {
+    vec![
+        PolicyConfig::Bsp,
+        PolicyConfig::Ssp { staleness: 1 },
+        PolicyConfig::Cap { staleness: 1 },
+        PolicyConfig::Vap { v_thr: 2.0, strong: false },
+        PolicyConfig::Vap { v_thr: 2.0, strong: true },
+        PolicyConfig::Cvap { staleness: 2, v_thr: 2.0, strong: true },
+    ]
+}
+
+/// The headline acceptance sweep: 6 policies × 3 crash schedules × 12
+/// seeds = 216 runs, each killing a shard mid-run (in-memory state and
+/// in-flight messages destroyed) and recovering it from checkpoint +
+/// WAL, every run checked by every oracle.
+#[test]
+fn crash_recovery_sweep_upholds_all_bounds() {
+    let mut runs = 0;
+    for pol in policies() {
+        for (shard, at_us) in [(0u32, 1_500u64), (1, 4_000), (0, 8_000)] {
+            let base = SimConfig::default().with_policy(pol).with_crash(shard, at_us, 2_000);
+            let out = sweep(&base, 500..512);
+            assert!(out.ok(), "policy {:?} crash@{at_us}:\n{}", pol, out.describe());
+            runs += out.runs;
+        }
+    }
+    assert!(runs >= 200, "crash sweep too small: {runs} runs");
+}
+
+/// Identical seed + config ⇒ byte-identical trace, crash included (the
+/// crash, detection, restart and resync are all virtual-time events).
+#[test]
+fn crash_trace_identity() {
+    for pol in policies() {
+        let cfg = SimConfig::default().with_policy(pol).with_seed(9).with_crash(1, 2_000, 2_500);
+        let a = Sim::run(&cfg);
+        let b = Sim::run(&cfg);
+        assert_eq!(a.crashes, 1, "{:?}: crash never fired", pol);
+        assert_eq!(
+            (a.trace_hash, a.trace_lines),
+            (b.trace_hash, b.trace_lines),
+            "{:?}: nondeterministic crash trace",
+            pol
+        );
+        assert!(a.ok(), "policy {:?}:\n{}", pol, a.describe());
+    }
+}
+
+/// A recovery that restores the checkpoint but skips WAL replay silently
+/// loses every push applied since the last checkpoint — the oracles
+/// (quiescence / read-my-writes) must catch it. This is the harness's
+/// proof that the crash sweep actually depends on replay being correct.
+#[test]
+fn skipped_wal_replay_is_caught() {
+    let mut caught = false;
+    for seed in 1..=10u64 {
+        let mut cfg = SimConfig::default()
+            .with_policy(PolicyConfig::Ssp { staleness: 1 })
+            .with_seed(seed)
+            .with_crash(0, 1_000, 1_500);
+        cfg.sabotage = Sabotage::SkipWalReplay;
+        let r = Sim::run(&cfg);
+        if !r.ok() {
+            caught = true;
+            break;
+        }
+    }
+    assert!(caught, "no oracle fired on a recovery that skipped WAL replay");
+}
+
+/// The virtual-time flusher hook (sim analogue of the production flusher
+/// threads) drives CAP/VAP eager propagation between clock boundaries —
+/// with and without a crash — without violating any bound, and stays
+/// deterministic.
+#[test]
+fn virtual_flusher_exercises_eager_propagation() {
+    let pols = [
+        PolicyConfig::Cap { staleness: 1 },
+        PolicyConfig::Vap { v_thr: 2.0, strong: false },
+        PolicyConfig::Vap { v_thr: 2.0, strong: true },
+    ];
+    for pol in pols {
+        let mut cfg = SimConfig::default().with_policy(pol).with_seed(33);
+        cfg.flusher_every_us = 150;
+        let a = Sim::run(&cfg);
+        assert!(a.ok(), "policy {:?} (flusher on):\n{}", pol, a.describe());
+        let b = Sim::run(&cfg);
+        assert_eq!(a.trace_hash, b.trace_hash, "{:?}: nondeterministic flusher", pol);
+
+        let crashed = Sim::run(&cfg.clone().with_crash(0, 2_000, 2_000));
+        assert!(crashed.ok(), "policy {:?} (flusher + crash):\n{}", pol, crashed.describe());
+    }
+}
+
+/// Shrinking a failure that does not need the crash must drop it first:
+/// the sabotaged write gate fails under any schedule, so the minimal
+/// reproduction is crash-free.
+#[test]
+fn shrink_removes_crash_when_not_load_bearing() {
+    let mut cfg = SimConfig::default()
+        .with_policy(PolicyConfig::Vap { v_thr: 1.0, strong: false })
+        .with_seed(4)
+        .with_crash(0, 2_000, 2_000);
+    cfg.sabotage = Sabotage::WriteGate;
+    let (min_cfg, rep) = shrink(&cfg);
+    assert!(!rep.ok(), "shrunk config must still fail");
+    assert!(min_cfg.faults.crash.is_none(), "crash should be shrunk away");
+}
+
+/// Shrinking a failure that exists only because of the crash (lost WAL
+/// tail) must keep the crash: removing it makes the run pass, so the
+/// shrinker rejects that candidate.
+#[test]
+fn shrink_keeps_crash_when_it_is_load_bearing() {
+    let mut failing = None;
+    for seed in 1..=10u64 {
+        let mut cfg = SimConfig::default()
+            .with_policy(PolicyConfig::Ssp { staleness: 1 })
+            .with_seed(seed)
+            .with_crash(0, 1_000, 1_500);
+        cfg.sabotage = Sabotage::SkipWalReplay;
+        if !Sim::run(&cfg).ok() {
+            failing = Some(cfg);
+            break;
+        }
+    }
+    let cfg = failing.expect("no failing seed for the WAL-replay sabotage");
+    let (min_cfg, rep) = shrink(&cfg);
+    assert!(!rep.ok(), "shrunk config must still fail");
+    assert!(min_cfg.faults.crash.is_some(), "the crash is load-bearing and must survive shrinking");
+}
