@@ -8,21 +8,47 @@
 //! seeds per policy with a mid-run shard crash (checkpoint + WAL
 //! respawn, heartbeat detection, client resync — the full suite lives
 //! in `rust/tests/sim_recovery.rs`).
+//!
+//! With `--metrics`, runs the observability slice: every sim run's
+//! metric snapshot is cross-checked against the oracle's independent
+//! wire-fed mirrors, the magnitude-priority ablation is reported, a
+//! small production cluster is launched with a live scrape endpoint
+//! (blocking-gate choreography touches the wall-clock-only counters),
+//! the dead-metric lint asserts that every registered metric name was
+//! touched by at least one run, and the per-run snapshots are written
+//! to `BENCH_sim.json`.
 
-use bapps::config::PolicyConfig;
-use bapps::sim::{sweep, SimConfig};
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
-fn main() {
-    let crash = std::env::args().any(|a| a == "--crash");
-    let policies = [
+use bapps::config::{NetConfig, PolicyConfig, SystemConfig};
+use bapps::coordinator::PsSystem;
+use bapps::metrics::{spawn_reporter, untouched_names_across, Snapshot};
+use bapps::sim::{ablate, sweep, Sim, SimConfig, SimReport};
+use bapps::table::{RowId, RowKind, TableDesc, TableId};
+
+fn policies() -> [PolicyConfig; 6] {
+    [
         PolicyConfig::Bsp,
         PolicyConfig::Ssp { staleness: 1 },
         PolicyConfig::Cap { staleness: 1 },
         PolicyConfig::Vap { v_thr: 2.0, strong: false },
         PolicyConfig::Vap { v_thr: 2.0, strong: true },
         PolicyConfig::Cvap { staleness: 2, v_thr: 2.0, strong: true },
-    ];
-    for pol in policies {
+    ]
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    if args.iter().any(|a| a == "--metrics") {
+        run_metrics_slice();
+        return;
+    }
+    let crash = args.iter().any(|a| a == "--crash");
+    for pol in policies() {
         let (base, seeds) = if crash {
             (SimConfig::default().with_policy(pol).with_crash(0, 2_500, 2_000), 9500..9516)
         } else {
@@ -37,4 +63,254 @@ fn main() {
     } else {
         println!("sim smoke sweep: all policies clean");
     }
+}
+
+/// Registry numbers must agree exactly with the oracle's independent
+/// mirrors — the same invariants `rust/tests/metrics_oracle.rs` asserts,
+/// enforced here on every run of the slice.
+fn cross_check(r: &SimReport) {
+    assert!(r.ok(), "{}", r.describe());
+    assert_eq!(
+        r.snapshot.hist_max("client_read_staleness_clocks"),
+        r.oracle_max_staleness as u64,
+        "{} seed {}: staleness histogram max != oracle mirror",
+        r.policy,
+        r.seed
+    );
+    assert_eq!(
+        r.snapshot.gauge_max("client_update_magnitude_max"),
+        r.oracle_u_obs as f64,
+        "{} seed {}: magnitude gauge != oracle u_obs",
+        r.policy,
+        r.seed
+    );
+    assert_eq!(
+        r.snapshot.counter_sum("shard_pushes_applied_total"),
+        r.oracle_applied_batches,
+        "{} seed {}: shard apply count != oracle batch mirror",
+        r.policy,
+        r.seed
+    );
+    if r.crashes == 0 {
+        assert_eq!(
+            r.snapshot.counter_sum("client_pushes_retransmitted_total"),
+            0,
+            "{} seed {}: retransmissions on a crash-free run",
+            r.policy,
+            r.seed
+        );
+    }
+}
+
+/// One serialized run for `BENCH_sim.json`.
+struct BenchRun {
+    policy: String,
+    seed: u64,
+    crash: bool,
+    snapshot: Snapshot,
+}
+
+fn run_metrics_slice() {
+    let mut runs: Vec<BenchRun> = Vec::new();
+
+    // 1. Clean chaos slice, every policy: cross-check each run.
+    for pol in policies() {
+        for seed in 9000..9008u64 {
+            let r = Sim::run(&SimConfig::default().with_policy(pol).with_seed(seed));
+            cross_check(&r);
+            runs.push(BenchRun { policy: r.policy, seed, crash: false, snapshot: r.snapshot });
+        }
+    }
+    println!("metrics slice: {} clean runs cross-checked", runs.len());
+
+    // 2. Crash slice: scan seeds until every recovery-path metric has
+    //    fired at least once (retransmission, pull re-issue, WAL replay,
+    //    epoch fence, dedup, heartbeat miss, respawn), with a hard cap.
+    //    Deterministic runs make the scan itself reproducible.
+    let crash_policies =
+        [PolicyConfig::Ssp { staleness: 1 }, PolicyConfig::Vap { v_thr: 2.0, strong: false }];
+    let recovery_names = [
+        "client_pushes_retransmitted_total",
+        "client_pull_retries_total",
+        "shard_wal_replayed_total",
+        "shard_epoch_bumps_total",
+        "shard_pushes_deduped_total",
+        "shard_pushes_fenced_total",
+        "coord_heartbeat_rtt_us",
+        "coord_heartbeat_misses_total",
+        "coord_shard_respawns_total",
+    ];
+    let mut crash_runs = 0u64;
+    for seed in 9500..9620u64 {
+        let pol = crash_policies[(seed % 2) as usize];
+        let cfg =
+            SimConfig::default().with_policy(pol).with_seed(seed).with_crash(0, 2_000, 1_000);
+        let r = Sim::run(&cfg);
+        cross_check(&r);
+        crash_runs += 1;
+        runs.push(BenchRun { policy: r.policy, seed, crash: true, snapshot: r.snapshot });
+        let dead = untouched_names_across(runs.iter().map(|b| &b.snapshot));
+        if recovery_names.iter().all(|n| !dead.iter().any(|d| d.as_str() == *n)) {
+            break;
+        }
+    }
+    let dead = untouched_names_across(runs.iter().map(|b| &b.snapshot));
+    let missed: Vec<&str> = recovery_names
+        .iter()
+        .copied()
+        .filter(|n| dead.iter().any(|d| d.as_str() == *n))
+        .collect();
+    assert!(missed.is_empty(), "crash scan exhausted without touching: {missed:?}");
+    println!("crash slice: {crash_runs} runs, all recovery counters exercised");
+
+    // 3. Magnitude-priority ablation (E6): same seeds, drain order
+    //    flipped, partial drains so the order is observable. Deltas are
+    //    reported, not asserted — correctness must hold either way.
+    let ab_base = SimConfig::default().with_policy(PolicyConfig::Vap { v_thr: 1.0, strong: false });
+    let ablation = ablate(&ab_base, 9000..9006);
+    assert!(ablation.ok(), "ablation arm violated a bound:\n{}", ablation.describe());
+    println!("ablation (priority on vs off):\n{}", ablation.describe());
+
+    // 4. Production mini-run: real threads, real wall clock, live scrape
+    //    endpoint. The choreography forces a BSP read block (a fast
+    //    worker reads ahead of a sleeping sibling) and VAP write blocks
+    //    (pending mass crosses v_thr), touching the blocking-path
+    //    counters the virtual-time sim can never reach.
+    let prod_snapshot = run_production_slice();
+
+    // 5. Dead-metric lint: every registered metric name must have been
+    //    touched by at least one run in this process.
+    let mut all: Vec<&Snapshot> = runs.iter().map(|b| &b.snapshot).collect();
+    all.push(&prod_snapshot);
+    let dead = untouched_names_across(all);
+    assert!(dead.is_empty(), "dead metrics — registered but never touched by any slice: {dead:?}");
+    println!("dead-metric lint: every registered metric name was touched");
+
+    // 6. Emit BENCH_sim.json (sim snapshots are deterministic; the
+    //    production snapshot is wall-clocked and therefore omitted).
+    let mut out = String::from("{\n  \"bench\": \"sim_metrics_smoke\",\n");
+    out.push_str(&format!("  \"runs\": {},\n  \"crash_runs\": {crash_runs},\n", runs.len()));
+    out.push_str(&format!(
+        "  \"ablation\": {{\"on\": {}, \"off\": {}}},\n",
+        ablation_arm_json(&ablation.on),
+        ablation_arm_json(&ablation.off)
+    ));
+    out.push_str("  \"snapshots\": [\n");
+    for (i, b) in runs.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(&format!(
+            "    {{\"policy\": \"{}\", \"seed\": {}, \"crash\": {}, \"metrics\": {}}}",
+            b.policy,
+            b.seed,
+            b.crash,
+            b.snapshot.render_json().replace('\n', "")
+        ));
+    }
+    out.push_str("\n  ]\n}\n");
+    std::fs::write("BENCH_sim.json", &out).expect("write BENCH_sim.json");
+    println!("wrote BENCH_sim.json ({} bytes, {} snapshots)", out.len(), runs.len());
+}
+
+fn ablation_arm_json(a: &bapps::sim::AblationArm) -> String {
+    format!(
+        "{{\"priority\": {}, \"runs\": {}, \"write_blocks\": {}, \"write_blocked_us\": {}, \
+         \"egress_reorders\": {}}}",
+        a.priority, a.runs, a.write_blocks, a.write_blocked_us, a.egress_reorders
+    )
+}
+
+fn http_get(addr: SocketAddr, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect scrape endpoint");
+    s.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes()).unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+fn run_production_slice() -> Snapshot {
+    let cfg = SystemConfig::builder()
+        .num_server_shards(2)
+        .num_client_procs(2)
+        .threads_per_proc(1)
+        .net(NetConfig { latency_us: 50, bandwidth_bps: 0, jitter_us: 0, seed: 0x5EED })
+        .flush_interval_us(100)
+        .wait_timeout_ms(20_000)
+        .heartbeat_interval_us(5_000)
+        .heartbeat_deadline_us(1_000_000)
+        .metrics_listen("127.0.0.1:0")
+        .build();
+    let sys = PsSystem::launch(cfg).expect("launch");
+    let hub = sys.metrics_registry();
+    let reports = Arc::new(AtomicU64::new(0));
+    let r_reports = reports.clone();
+    let reporter = spawn_reporter(hub.clone(), Duration::from_millis(10), move |_| {
+        r_reports.fetch_add(1, Ordering::Relaxed);
+    });
+
+    let bsp = TableDesc {
+        id: TableId(0),
+        num_rows: 8,
+        row_width: 2,
+        row_kind: RowKind::Dense,
+        policy: PolicyConfig::Bsp,
+    };
+    let vap = TableDesc {
+        id: TableId(1),
+        num_rows: 8,
+        row_width: 2,
+        row_kind: RowKind::Dense,
+        policy: PolicyConfig::Vap { v_thr: 1.0, strong: false },
+    };
+    sys.create_table(bsp).unwrap();
+    sys.create_table(vap).unwrap();
+
+    sys.run_workers(|ctx| {
+        let slow = ctx.worker_id().0 == 1;
+        let b = ctx.table(TableId(0));
+        let v = ctx.table(TableId(1));
+        for _ in 0..3 {
+            if slow {
+                // The sibling worker reaches its BSP read first and must
+                // block on this worker's missing clock tick.
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            b.inc(RowId(0), 0, 1.0).unwrap();
+            ctx.clock().unwrap();
+            b.get(RowId(0), 0).unwrap();
+            // Pending mass 0.9 → 1.8 crosses max(v_thr, u) = 1.0: the
+            // write gate blocks until visibility acks drain it.
+            for _ in 0..6 {
+                v.inc(RowId(1), 0, 0.9).unwrap();
+            }
+        }
+    })
+    .expect("production choreography");
+
+    let addr = sys.metrics_addr().expect("metrics endpoint requested at launch");
+    let text = http_get(addr, "/metrics");
+    assert!(text.starts_with("HTTP/1.1 200 OK"), "scrape failed: {text}");
+    assert!(text.contains("# TYPE client_read_blocks_total counter"), "missing type line");
+    assert!(text.contains("net_sends_total"), "missing net counters");
+    let json = http_get(addr, "/metrics.json");
+    assert!(json.contains("\"client_gets_total\""), "JSON scrape missing counters: {json}");
+
+    reporter.shutdown();
+    let snap = hub.snapshot();
+    sys.shutdown().expect("shutdown");
+    assert!(reports.load(Ordering::Relaxed) >= 1, "reporter never fired");
+    assert!(
+        snap.counter_sum("client_read_blocks_total") > 0,
+        "choreography never blocked a BSP read"
+    );
+    assert!(
+        snap.counter_sum("client_write_blocks_total") > 0,
+        "choreography never blocked a VAP write"
+    );
+    println!(
+        "production slice: scraped /metrics and /metrics.json at {addr}, {} reporter ticks",
+        reports.load(Ordering::Relaxed)
+    );
+    snap
 }

@@ -10,7 +10,7 @@ use crate::comm::msg::{Msg, Payload};
 use crate::comm::{Endpoint, NetSender};
 use crate::config::SystemConfig;
 use crate::error::{Error, Result};
-use crate::metrics::{StalenessHist, WorkerMetrics};
+use crate::metrics::{GateMetrics, Registry, StalenessHist, WorkerMetrics};
 use crate::server::TableRegistry;
 use crate::table::{RowId, TableId};
 use crate::trace::{BlockReason, Event, TraceRecorder};
@@ -31,6 +31,8 @@ pub(crate) struct ClientTable {
     /// Workers blocked on the clock gate (reads) or value gate (writes)
     /// wait here; the ingress thread notifies after every relevant apply.
     pub cv: Condvar,
+    /// Gate denial/blocked-duration metrics for this table's policy.
+    pub gate: GateMetrics,
 }
 
 /// Shared, per-process client core. Worker threads drive it through
@@ -50,6 +52,9 @@ pub struct ClientCore {
     pub staleness: Arc<StalenessHist>,
     /// Trace recorder (may be disabled).
     pub trace: Arc<TraceRecorder>,
+    /// The process's metric registry (shared with the bus, shards and
+    /// coordinator when launched through [`crate::coordinator::PsSystem`]).
+    hub: Arc<Registry>,
     /// Last `ShardRecovered` incarnation seen per shard; stamps the
     /// process-level `ClockNotify` sends. (Batch stamping lives in each
     /// `TableState`, under its lock — see the field comment there.)
@@ -66,6 +71,7 @@ impl ClientCore {
         registry: Arc<TableRegistry>,
         net: NetSender,
         trace: Arc<TraceRecorder>,
+        hub: Arc<Registry>,
     ) -> Self {
         let shard_epochs = (0..cfg.num_server_shards).map(|_| AtomicU32::new(0)).collect();
         ClientCore {
@@ -75,9 +81,10 @@ impl ClientCore {
             net,
             tables: RwLock::new(HashMap::new()),
             vclock: Mutex::new(VectorClock::empty()),
-            metrics: Arc::new(WorkerMetrics::default()),
-            staleness: Arc::new(StalenessHist::default()),
+            metrics: Arc::new(WorkerMetrics::new(&hub, proc.0)),
+            staleness: Arc::new(StalenessHist::new(&hub, proc.0)),
             trace,
+            hub,
             shard_epochs,
             stop: AtomicBool::new(false),
         }
@@ -86,6 +93,11 @@ impl ClientCore {
     /// System config.
     pub fn config(&self) -> &SystemConfig {
         &self.cfg
+    }
+
+    /// The metric registry this core reports into.
+    pub fn metrics_registry(&self) -> &Arc<Registry> {
+        &self.hub
     }
 
     /// Register a worker thread in the process vector clock.
@@ -108,6 +120,7 @@ impl ClientCore {
         if let Some(t) = w.get(&id) {
             return Ok(t.clone());
         }
+        let gate = GateMetrics::new(self.hub.clone(), &desc.policy);
         let st = TableState::new(
             desc,
             self.proc,
@@ -115,7 +128,7 @@ impl ClientCore {
             self.cfg.max_batch_updates,
             self.cfg.magnitude_priority,
         );
-        let t = Arc::new(ClientTable { state: Mutex::new(st), cv: Condvar::new() });
+        let t = Arc::new(ClientTable { state: Mutex::new(st), cv: Condvar::new(), gate });
         w.insert(id, t.clone());
         Ok(t)
     }
@@ -128,7 +141,7 @@ impl ClientCore {
         let st = t.state.lock().unwrap();
         Self::check_bounds(&st, row, Some(col))?;
         let st = self.wait_read_admissible(&t, st, row, reader_clock)?;
-        self.metrics.gets.fetch_add(1, Ordering::Relaxed);
+        self.metrics.gets.inc();
         let eff = st.effective_clock(row);
         self.staleness.record(reader_clock.saturating_sub(eff));
         Ok(st.read(row, col))
@@ -140,7 +153,7 @@ impl ClientCore {
         let st = t.state.lock().unwrap();
         Self::check_bounds(&st, row, None)?;
         let st = self.wait_read_admissible(&t, st, row, reader_clock)?;
-        self.metrics.gets.fetch_add(1, Ordering::Relaxed);
+        self.metrics.gets.inc();
         let eff = st.effective_clock(row);
         self.staleness.record(reader_clock.saturating_sub(eff));
         Ok(st.read_row(row))
@@ -159,7 +172,7 @@ impl ClientCore {
         let st = t.state.lock().unwrap();
         Self::check_bounds(&st, row, None)?;
         let st = self.wait_read_admissible(&t, st, row, reader_clock)?;
-        self.metrics.gets.fetch_add(1, Ordering::Relaxed);
+        self.metrics.gets.inc();
         st.read_row_into(row, out);
         Ok(())
     }
@@ -181,7 +194,8 @@ impl ClientCore {
         if balance_checks() {
             st.assert_balance("inc");
         }
-        self.metrics.incs.fetch_add(1, Ordering::Relaxed);
+        self.metrics.update_magnitude_max.set_max(delta.abs() as f64);
+        self.metrics.incs.inc();
         Ok(())
     }
 
@@ -208,7 +222,10 @@ impl ClientCore {
         if balance_checks() {
             st.assert_balance("inc_row");
         }
-        self.metrics.incs.fetch_add(1, Ordering::Relaxed);
+        for d in deltas {
+            self.metrics.update_magnitude_max.set_max(d.abs() as f64);
+        }
+        self.metrics.incs.inc();
         Ok(())
     }
 
@@ -234,8 +251,9 @@ impl ClientCore {
                 st = self.wait_write_admissible(&t, st, row, col, delta, worker)?;
             }
             st.apply_inc(row, col, delta);
+            self.metrics.update_magnitude_max.set_max(delta.abs() as f64);
         }
-        self.metrics.incs.fetch_add(updates.len() as u64, Ordering::Relaxed);
+        self.metrics.incs.add(updates.len() as u64);
         Ok(())
     }
 
@@ -262,13 +280,14 @@ impl ClientCore {
         let mut st = t.state.lock().unwrap();
         Self::check_bounds(&st, row, Some(col))?;
         if !st.read_admissible(row, reader_clock) {
+            t.gate.note_read_denied();
             let required = st.model.required_read_clock(reader_clock);
             let needs_pull =
                 st.inflight_pulls.get(&row).map_or(true, |&needed| needed < required);
             if needs_pull {
                 st.inflight_pulls.insert(row, required);
                 let shard = st.desc.shard_of(row, self.cfg.num_server_shards);
-                self.metrics.pulls.fetch_add(1, Ordering::Relaxed);
+                self.metrics.pulls.inc();
                 let _ = self.net.send(Msg {
                     src: NodeId::Client(self.proc),
                     dst: NodeId::Server(shard),
@@ -282,7 +301,7 @@ impl ClientCore {
             }
             return Ok(None);
         }
-        self.metrics.gets.fetch_add(1, Ordering::Relaxed);
+        self.metrics.gets.inc();
         let eff = st.effective_clock(row);
         self.staleness.record(reader_clock.saturating_sub(eff));
         Ok(Some(st.read(row, col)))
@@ -296,6 +315,7 @@ impl ClientCore {
         let mut st = t.state.lock().unwrap();
         Self::check_bounds(&st, row, Some(col))?;
         if !st.write_admissible(row, col, delta) {
+            t.gate.note_write_denied();
             // Same rationale as the blocking path: blocked mass can only
             // drain once it is on the wire.
             self.flush_locked(&mut st, usize::MAX);
@@ -305,7 +325,8 @@ impl ClientCore {
         if balance_checks() {
             st.assert_balance("try_inc");
         }
-        self.metrics.incs.fetch_add(1, Ordering::Relaxed);
+        self.metrics.update_magnitude_max.set_max(delta.abs() as f64);
+        self.metrics.incs.inc();
         Ok(true)
     }
 
@@ -321,7 +342,8 @@ impl ClientCore {
         let mut st = t.state.lock().unwrap();
         Self::check_bounds(&st, row, Some(col))?;
         st.apply_inc(row, col, delta);
-        self.metrics.incs.fetch_add(1, Ordering::Relaxed);
+        self.metrics.update_magnitude_max.set_max(delta.abs() as f64);
+        self.metrics.incs.inc();
         Ok(())
     }
 
@@ -347,7 +369,7 @@ impl ClientCore {
                 });
             }
         }
-        self.metrics.clocks.fetch_add(1, Ordering::Relaxed);
+        self.metrics.clocks.inc();
         let c = self.vclock.lock().unwrap().get(worker).unwrap_or(0);
         self.trace.record(|| Event::ClockTick { at: Instant::now(), worker, clock: c });
         Ok(c)
@@ -374,13 +396,20 @@ impl ClientCore {
     /// Id order, for the same determinism reason as
     /// [`ClientCore::flush_all_tables`].
     pub fn flush_eager_tables(&self) {
+        self.flush_eager_tables_limited(self.cfg.max_batch_updates)
+    }
+
+    /// [`ClientCore::flush_eager_tables`] with an explicit per-table row
+    /// cap. The sim's priority ablation drains one row per flusher tick so
+    /// the magnitude-vs-FIFO egress order actually matters.
+    pub fn flush_eager_tables_limited(&self, max_rows: usize) {
         let mut handles: Vec<(TableId, Arc<ClientTable>)> =
             self.tables.read().unwrap().iter().map(|(id, t)| (*id, t.clone())).collect();
         handles.sort_unstable_by_key(|(id, _)| id.0);
         for (_, t) in handles {
             let mut st = t.state.lock().unwrap();
             if st.model.eager_propagation() && st.has_unsent() {
-                self.flush_locked(&mut st, self.cfg.max_batch_updates);
+                self.flush_locked(&mut st, max_rows);
             }
         }
     }
@@ -399,6 +428,8 @@ impl ClientCore {
         if balance_checks() {
             st.assert_balance("post_flush");
         }
+        self.metrics.egress_reorders.add(st.take_reorders());
+        self.metrics.egress_rows.set(st.egress_len() as f64);
         for (shard, batch) in batches {
             self.trace.record(|| Event::Push {
                 at: Instant::now(),
@@ -454,6 +485,7 @@ impl ClientCore {
             table,
             reason: BlockReason::Staleness,
         });
+        t.gate.note_read_denied();
         let t0 = Instant::now();
         // Re-issue the pull with exponential backoff: the in-flight
         // request may have died with a crashed shard, and the reply is
@@ -468,9 +500,9 @@ impl ClientCore {
             if needs_pull {
                 st.inflight_pulls.insert(row, required);
                 let shard = st.desc.shard_of(row, self.cfg.num_server_shards);
-                self.metrics.pulls.fetch_add(1, Ordering::Relaxed);
+                self.metrics.pulls.inc();
                 if retry {
-                    self.metrics.pull_retries.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.pull_retries.inc();
                     retry_after = retry_after.saturating_mul(2);
                 }
                 next_retry = Instant::now() + retry_after;
@@ -496,6 +528,7 @@ impl ClientCore {
             st = guard;
             if st.read_admissible(row, reader_clock) {
                 self.metrics.add_read_block(t0.elapsed());
+                t.gate.record_read_blocked_us(t0.elapsed().as_micros() as u64);
                 self.trace.record(|| Event::BlockEnd {
                     at: Instant::now(),
                     worker: WorkerId(u32::MAX),
@@ -527,6 +560,7 @@ impl ClientCore {
             table,
             reason: BlockReason::ValueBound,
         });
+        t.gate.note_write_denied();
         let t0 = Instant::now();
         // The blocked mass can only drain if it is on the wire: flush now.
         self.flush_locked(&mut st, usize::MAX);
@@ -547,6 +581,7 @@ impl ClientCore {
             st = guard;
             if st.write_admissible(row, col, delta) {
                 self.metrics.add_write_block(t0.elapsed());
+                t.gate.record_write_blocked_us(t0.elapsed().as_micros() as u64);
                 self.trace.record(|| Event::BlockEnd {
                     at: Instant::now(),
                     worker,
@@ -742,7 +777,7 @@ impl ClientCore {
             let mut st = t.state.lock().unwrap();
             st.set_shard_epoch(shard, epoch);
             for batch in st.retransmit_batches(shard, epoch) {
-                self.metrics.pushes_retransmitted.fetch_add(1, Ordering::Relaxed);
+                self.metrics.pushes_retransmitted.inc();
                 let _ = self.net.send(Msg {
                     src: NodeId::Client(self.proc),
                     dst: NodeId::Server(shard),
@@ -762,7 +797,8 @@ impl ClientCore {
             payload: Payload::ClockNotify { proc: self.proc, clock: m, epoch },
         });
         for (table, row, needed_clock) in pulls {
-            self.metrics.pulls.fetch_add(1, Ordering::Relaxed);
+            self.metrics.pulls.inc();
+            self.metrics.pull_retries.inc();
             let _ = self.net.send(Msg {
                 src: NodeId::Client(self.proc),
                 dst: NodeId::Server(shard),

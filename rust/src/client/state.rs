@@ -490,6 +490,17 @@ impl TableState {
     pub fn overlay_depth(&self) -> usize {
         self.overlay.values().map(|q| q.len()).sum()
     }
+
+    /// Pending egress rows awaiting flush (feeds the queue-depth gauge).
+    pub fn egress_len(&self) -> usize {
+        self.egress.len()
+    }
+
+    /// Take (and reset) the egress drain-order overtake count since the
+    /// last call (magnitude priority only; FIFO drains report zero).
+    pub fn take_reorders(&mut self) -> u64 {
+        self.egress.take_reorders()
+    }
 }
 
 #[cfg(test)]

@@ -244,8 +244,14 @@ impl Network {
     /// Build a network with the given profile. A dispatcher thread is
     /// spawned only when the profile actually delays messages.
     pub fn new(net: NetConfig) -> Self {
+        Self::new_with_metrics(net, Arc::new(NetMetrics::default()))
+    }
+
+    /// Same, but recording into an externally constructed metrics handle —
+    /// so the bus's counters live in a shared [`crate::metrics::Registry`]
+    /// instead of a throwaway one.
+    pub fn new_with_metrics(net: NetConfig, metrics: Arc<NetMetrics>) -> Self {
         let ideal = net.latency_us == 0 && net.bandwidth_bps == 0 && net.jitter_us == 0;
-        let metrics = Arc::new(NetMetrics::default());
         let jitter_rng = Mutex::new(Rng64::seed_from_u64(net.seed));
 
         if ideal {
@@ -368,7 +374,10 @@ fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Scheduled>) {
                     break;
                 }
                 match rx.recv() {
-                    Ok(s) => heap.push(Reverse(s)),
+                    Ok(s) => {
+                        heap.push(Reverse(s));
+                        shared.metrics.set_inflight(heap.len());
+                    }
                     Err(_) => break, // all senders gone and heap empty
                 }
             }
@@ -376,7 +385,10 @@ fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Scheduled>) {
                 let now = Instant::now();
                 if at > now && !disconnected {
                     match rx.recv_timeout(at - now) {
-                        Ok(s) => heap.push(Reverse(s)),
+                        Ok(s) => {
+                            heap.push(Reverse(s));
+                            shared.metrics.set_inflight(heap.len());
+                        }
                         Err(RecvTimeoutError::Timeout) => {}
                         Err(RecvTimeoutError::Disconnected) => disconnected = true,
                     }
@@ -400,6 +412,7 @@ fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Scheduled>) {
                 shared.metrics.record_deliver(s.msg.payload.kind());
                 let _ = tx.send(s.msg); // dst may have shut down; fine
             }
+            shared.metrics.set_inflight(heap.len());
         }
     }
 }

@@ -229,6 +229,30 @@ impl Payload {
     }
 }
 
+/// Every wire kind, in a fixed order: the index of a kind here is its
+/// slot in the per-kind metric arrays ([`crate::metrics::NetMetrics`]).
+pub const KINDS: [&str; 13] = [
+    "push",
+    "pull",
+    "pull_reply",
+    "clock",
+    "server_push",
+    "push_ack",
+    "vis_ack",
+    "min_clock",
+    "ping",
+    "pong",
+    "ack_probe",
+    "recovered",
+    "shutdown",
+];
+
+/// Slot of a [`Payload::kind`] tag in [`KINDS`]. Panics on an unknown
+/// tag (the set is closed; a miss is a programmer error).
+pub fn kind_index(kind: &str) -> usize {
+    KINDS.iter().position(|k| *k == kind).unwrap_or_else(|| panic!("unknown wire kind {kind}"))
+}
+
 /// An addressed message on the bus.
 #[derive(Debug, Clone)]
 pub struct Msg {
@@ -276,5 +300,19 @@ mod tests {
         ];
         let set: std::collections::HashSet<_> = kinds.iter().collect();
         assert_eq!(set.len(), kinds.len());
+    }
+
+    #[test]
+    fn kind_index_is_total_over_kinds() {
+        for (i, k) in KINDS.iter().enumerate() {
+            assert_eq!(kind_index(k), i);
+        }
+        assert_eq!(kind_index(Payload::Shutdown.kind()), KINDS.len() - 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown wire kind")]
+    fn kind_index_rejects_unknown() {
+        kind_index("nope");
     }
 }

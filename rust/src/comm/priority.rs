@@ -29,12 +29,15 @@ pub struct UpdateQueue {
     pending: HashMap<RowId, (RowUpdate, u64)>,
     next_seq: u64,
     order: DrainOrder,
+    /// How many drained rows overtook an older pending row (magnitude
+    /// priority reordering the egress stream); see [`Self::take_reorders`].
+    reorders: u64,
 }
 
 impl UpdateQueue {
     /// New queue with the given drain order.
     pub fn new(order: DrainOrder) -> Self {
-        UpdateQueue { pending: HashMap::new(), next_seq: 0, order }
+        UpdateQueue { pending: HashMap::new(), next_seq: 0, order, reorders: 0 }
     }
 
     /// Add a delta for `row`, merging with any pending delta for that row.
@@ -84,7 +87,19 @@ impl UpdateQueue {
                 b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal).then(a.2.cmp(&b.2))
             }),
         }
-        let mut out = Vec::with_capacity(max_rows.min(keys.len()));
+        let take = max_rows.min(keys.len());
+        if self.order == DrainOrder::Magnitude {
+            // Count overtakes: an emitted row whose first-touch sequence is
+            // newer than some row emitted after it jumped the FIFO queue.
+            let mut min_after = u64::MAX;
+            for &(_, _, seq) in keys[..take].iter().rev() {
+                if seq > min_after {
+                    self.reorders += 1;
+                }
+                min_after = min_after.min(seq);
+            }
+        }
+        let mut out = Vec::with_capacity(take);
         for (row, _, _) in keys.into_iter().take(max_rows) {
             if let Some((u, _)) = self.pending.remove(&row) {
                 if !u.is_zero() {
@@ -103,6 +118,12 @@ impl UpdateQueue {
     /// Drain everything (clock-boundary flush).
     pub fn drain_all(&mut self) -> Vec<(RowId, RowUpdate)> {
         self.drain(usize::MAX)
+    }
+
+    /// Take (and reset) the number of drain-order overtakes accumulated
+    /// since the last call — feeds `client_egress_reorders_total`.
+    pub fn take_reorders(&mut self) -> u64 {
+        std::mem::take(&mut self.reorders)
     }
 }
 
@@ -161,6 +182,23 @@ mod tests {
         // zero-magnitude row 0 is dropped on the final drain
         let rest = q.drain_all();
         assert_eq!(rest.len(), 6, "row 0 had delta 0.0 and must be dropped");
+    }
+
+    #[test]
+    fn reorders_counted_for_magnitude_only() {
+        let mut q = UpdateQueue::new(DrainOrder::Magnitude);
+        q.push(RowId(1), RowUpdate::single(0, 0.1)); // oldest, smallest
+        q.push(RowId(2), RowUpdate::single(0, 5.0));
+        q.push(RowId(3), RowUpdate::single(0, -9.0));
+        q.drain_all(); // emit order 3, 2, 1: rows 3 and 2 overtake row 1
+        assert_eq!(q.take_reorders(), 2);
+        assert_eq!(q.take_reorders(), 0, "take resets the counter");
+
+        let mut f = UpdateQueue::new(DrainOrder::Fifo);
+        f.push(RowId(1), RowUpdate::single(0, 0.1));
+        f.push(RowId(2), RowUpdate::single(0, 5.0));
+        f.drain_all();
+        assert_eq!(f.take_reorders(), 0, "FIFO never reorders");
     }
 
     #[test]

@@ -236,6 +236,9 @@ pub struct SystemConfig {
     /// Use magnitude-priority ordering when draining the oplog (paper
     /// §4.2); `false` = FIFO. Ablation E6 flips this.
     pub magnitude_priority: bool,
+    /// Bind a metrics scrape endpoint here at launch (e.g.
+    /// `127.0.0.1:9898`; `:0` picks a free port). `None` = no endpoint.
+    pub metrics_listen: Option<String>,
 }
 
 impl Default for SystemConfig {
@@ -261,8 +264,8 @@ impl SystemConfig {
     /// `max_batch_updates`, `wait_timeout_ms`, `pull_retry_ms`,
     /// `heartbeat_interval_us`, `heartbeat_deadline_us`,
     /// `checkpoint_every`, `artifacts_dir`, `trace`,
-    /// `magnitude_priority`, `straggler_workers` (comma list),
-    /// `straggler_slowdown`.
+    /// `magnitude_priority`, `metrics_listen`, `straggler_workers`
+    /// (comma list), `straggler_slowdown`.
     pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
         let text = std::fs::read_to_string(path.as_ref())?;
         let mut kv = HashMap::new();
@@ -337,6 +340,9 @@ impl SystemConfig {
         if let Some(v) = kv.get("magnitude_priority") {
             b = b.magnitude_priority(v == "true" || v == "1");
         }
+        if let Some(v) = kv.get("metrics_listen") {
+            b = b.metrics_listen(v.clone());
+        }
         let mut stragglers = StragglerConfig::default();
         if let Some(v) = kv.get("straggler_workers") {
             stragglers.workers = v
@@ -402,6 +408,7 @@ impl Default for SystemConfigBuilder {
                 artifacts_dir: PathBuf::from("artifacts"),
                 trace: false,
                 magnitude_priority: true,
+                metrics_listen: None,
             },
         }
     }
@@ -481,6 +488,11 @@ impl SystemConfigBuilder {
     /// Enable/disable magnitude-priority update scheduling.
     pub fn magnitude_priority(mut self, on: bool) -> Self {
         self.cfg.magnitude_priority = on;
+        self
+    }
+    /// Serve the metrics scrape endpoint on this address at launch.
+    pub fn metrics_listen(mut self, addr: impl Into<String>) -> Self {
+        self.cfg.metrics_listen = Some(addr.into());
         self
     }
     /// Finalize. Panics on invalid topology (programmer error); use

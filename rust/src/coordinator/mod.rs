@@ -18,7 +18,7 @@ use crate::comm::msg::{Msg, Payload};
 use crate::comm::{Endpoint, Network, Registrar};
 use crate::config::SystemConfig;
 use crate::error::{Error, Result};
-use crate::metrics::NetMetrics;
+use crate::metrics::{self, CoordMetrics, NetMetrics, Registry, ServeHandle, ShardMetrics};
 use crate::server::{MemPersistence, PersistHandle, ServerShard, ShardOptions, TableRegistry};
 use crate::table::TableDesc;
 use crate::trace::TraceRecorder;
@@ -44,13 +44,18 @@ pub struct PsSystem {
     /// `heartbeat_interval_us == 0`.
     monitor: Option<JoinHandle<Vec<JoinHandle<()>>>>,
     monitor_stop: Arc<AtomicBool>,
+    /// Shared metrics registry every layer records into.
+    hub: Arc<Registry>,
+    /// Scrape endpoint (when `cfg.metrics_listen` is set).
+    serve_handle: Option<ServeHandle>,
 }
 
 impl PsSystem {
     /// Launch shards, client cores and their background threads.
     pub fn launch(cfg: SystemConfig) -> Result<Self> {
         cfg.validate()?;
-        let network = Network::new(cfg.net.clone());
+        let hub = Arc::new(Registry::new());
+        let network = Network::new_with_metrics(cfg.net.clone(), Arc::new(NetMetrics::new(&hub)));
         let registry = Arc::new(TableRegistry::default());
         let trace = Arc::new(TraceRecorder::new(cfg.trace));
 
@@ -75,6 +80,7 @@ impl PsSystem {
         for (s, ep) in shard_eps.into_iter().enumerate() {
             let mut opts = ShardOptions::new(persists[s].clone());
             opts.checkpoint_every = cfg.checkpoint_every;
+            opts.metrics = ShardMetrics::new(hub.clone(), s as u32);
             let shard = ServerShard::with_options(
                 ShardId(s as u32),
                 cfg.num_client_procs,
@@ -100,6 +106,7 @@ impl PsSystem {
                 registry.clone(),
                 network.sender(),
                 trace.clone(),
+                hub.clone(),
             ));
             let ingress = core.clone();
             io_threads.push(
@@ -128,18 +135,25 @@ impl PsSystem {
             let m_trace = trace.clone();
             let m_registrar = network.registrar();
             let m_stop = monitor_stop.clone();
+            let m_hub = hub.clone();
             Some(
                 std::thread::Builder::new()
                     .name("monitor".into())
                     .spawn(move || {
                         monitor_loop(
                             m_cfg, m_registry, m_trace, m_registrar, persists, coord_ep, m_stop,
+                            m_hub,
                         )
                     })
                     .map_err(Error::Io)?,
             )
         } else {
             None
+        };
+
+        let serve_handle = match &cfg.metrics_listen {
+            Some(addr) => Some(metrics::serve(hub.clone(), addr).map_err(Error::Io)?),
+            None => None,
         };
 
         Ok(PsSystem {
@@ -152,6 +166,8 @@ impl PsSystem {
             io_threads,
             monitor,
             monitor_stop,
+            hub,
+            serve_handle,
         })
     }
 
@@ -245,6 +261,17 @@ impl PsSystem {
         self.network.metrics()
     }
 
+    /// The shared metrics registry (scrape it, snapshot it, report it).
+    pub fn metrics_registry(&self) -> Arc<Registry> {
+        self.hub.clone()
+    }
+
+    /// Bound address of the scrape endpoint, when one was requested via
+    /// [`SystemConfig::metrics_listen`](crate::config::SystemConfigBuilder::metrics_listen).
+    pub fn metrics_addr(&self) -> Option<std::net::SocketAddr> {
+        self.serve_handle.as_ref().map(|h| h.local_addr())
+    }
+
     /// The event trace recorder.
     pub fn trace(&self) -> Arc<TraceRecorder> {
         self.trace.clone()
@@ -269,6 +296,9 @@ impl PsSystem {
     /// still been joined.
     pub fn shutdown(mut self) -> Result<()> {
         let mut first_err: Option<Error> = None;
+        if let Some(h) = self.serve_handle.take() {
+            h.shutdown();
+        }
         // Monitor first, so it cannot respawn a shard we are stopping.
         self.monitor_stop.store(true, Ordering::Relaxed);
         let mut respawned = Vec::new();
@@ -342,7 +372,9 @@ fn monitor_loop(
     persists: Vec<PersistHandle>,
     ep: Endpoint,
     stop: Arc<AtomicBool>,
+    hub: Arc<Registry>,
 ) -> Vec<JoinHandle<()>> {
+    let cm = CoordMetrics::new(&hub);
     let sender = registrar.sender();
     let interval = Duration::from_micros(cfg.heartbeat_interval_us);
     let deadline = Duration::from_micros(cfg.heartbeat_deadline_us);
@@ -350,8 +382,14 @@ fn monitor_loop(
         (0..cfg.num_server_shards).map(|_| Instant::now()).collect();
     let mut respawned: Vec<JoinHandle<()>> = Vec::new();
     let mut seq: u64 = 0;
+    // Send instant of recent pings, keyed by seq, for pong RTTs.
+    let mut ping_sent: std::collections::HashMap<u64, Instant> = std::collections::HashMap::new();
     while !stop.load(Ordering::Relaxed) {
         seq += 1;
+        ping_sent.insert(seq, Instant::now());
+        if seq > 8 {
+            ping_sent.remove(&(seq - 8));
+        }
         for s in 0..cfg.num_server_shards {
             // A send failure here is itself a death signal, but the pong
             // deadline is the single arbiter — keep the loop simple.
@@ -363,7 +401,10 @@ fn monitor_loop(
         }
         std::thread::sleep(interval);
         while let Some(msg) = ep.try_recv() {
-            if let Payload::Pong { shard, .. } = msg.payload {
+            if let Payload::Pong { shard, seq: pong_seq } = msg.payload {
+                if let Some(t0) = ping_sent.get(&pong_seq) {
+                    cm.hb_rtt_us.record(t0.elapsed().as_micros() as u64);
+                }
                 if let Some(t) = last_pong.get_mut(shard.0 as usize) {
                     *t = Instant::now();
                 }
@@ -374,11 +415,13 @@ fn monitor_loop(
                 continue;
             }
             // Dead: swap the mailbox, recover from durable state, respawn.
+            cm.hb_misses.inc();
             let node = NodeId::Server(ShardId(s));
             registrar.deregister(node);
             let shard_ep = registrar.register(node);
             let mut opts = ShardOptions::new(persists[s as usize].clone());
             opts.checkpoint_every = cfg.checkpoint_every;
+            opts.metrics = ShardMetrics::new(hub.clone(), s);
             match ServerShard::recover(
                 ShardId(s),
                 cfg.num_client_procs,
@@ -388,6 +431,7 @@ fn monitor_loop(
                 opts,
             ) {
                 Ok(shard) => {
+                    cm.respawns.inc();
                     let spawn = std::thread::Builder::new()
                         .name(format!("shard{s}-r"))
                         .spawn(move || shard.run(shard_ep));

@@ -1,0 +1,748 @@
+//! Central metric registry: named, typed, labeled, lock-free.
+//!
+//! Every layer of the system registers its counters/gauges/histograms
+//! here once (registration takes a mutex; the returned handles are
+//! plain `Arc`s over atomics, so the hot paths never lock). A
+//! [`Registry::snapshot`] is a consistent-enough point-in-time copy that
+//! renders to Prometheus text exposition or a JSON dump.
+//!
+//! Two design rules keep the simulator deterministic:
+//!
+//! * **Time is injected.** Durations are measured with
+//!   [`Registry::now_us`], which reads either a wall [`Instant`] or, under
+//!   the sim, a shared virtual-time cell
+//!   ([`Registry::with_virtual_clock`]). Identical seed ⇒ identical
+//!   histogram contents, byte for byte.
+//! * **Histograms record exact maxima.** Alongside power-of-two buckets
+//!   each histogram keeps `max` via `fetch_max`, so the
+//!   metrics-vs-oracle cross-checks can assert *equality* against the
+//!   independent mirrors instead of bucket-bound inequalities.
+//!
+//! Every cell also carries a `touched` flag (set on first write), which
+//! the dead-metric lint unions across runs: a metric registered but never
+//! exercised by the smoke suite is a wiring bug.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Number of histogram buckets: bucket 0 counts exact zeros, bucket `i`
+/// (1 ≤ i ≤ 20) counts values in `[2^(i-1), 2^i)`, bucket 21 overflows.
+pub const HIST_BUCKETS: usize = 22;
+
+/// Monotonically increasing event counter.
+#[derive(Default)]
+pub struct Counter {
+    hits: AtomicU64,
+    touched: AtomicBool,
+}
+
+impl Counter {
+    /// Add one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.hits.fetch_add(n, Ordering::Relaxed);
+        self.touched.store(true, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins value. Stored as `f64` bits; [`Gauge::set_max`] is
+/// only meaningful for non-negative values (IEEE-754 bit order matches
+/// numeric order there), which is all this codebase records.
+#[derive(Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+    touched: AtomicBool,
+}
+
+impl Gauge {
+    /// Set the value.
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+        self.touched.store(true, Ordering::Relaxed);
+    }
+
+    /// Raise the value to at least `v` (`v` must be ≥ 0).
+    pub fn set_max(&self, v: f64) {
+        debug_assert!(v >= 0.0, "Gauge::set_max is bit-ordered: non-negative only");
+        self.bits.fetch_max(v.to_bits(), Ordering::Relaxed);
+        self.touched.store(true, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Power-of-two-bucketed histogram of `u64` samples (clocks, µs, …) with
+/// exact `sum` and exact `max`.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    touched: AtomicBool,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: Default::default(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            touched: AtomicBool::new(false),
+        }
+    }
+}
+
+impl Histogram {
+    /// Bucket index of a sample.
+    fn index(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+        }
+    }
+
+    /// Record one sample.
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.touched.store(true, Ordering::Relaxed);
+    }
+
+    /// Total samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of samples.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Exact maximum sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Bucket counts.
+    pub fn buckets(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+}
+
+enum Cell {
+    C(Arc<Counter>),
+    G(Arc<Gauge>),
+    H(Arc<Histogram>),
+}
+
+impl Cell {
+    fn kind(&self) -> &'static str {
+        match self {
+            Cell::C(_) => "counter",
+            Cell::G(_) => "gauge",
+            Cell::H(_) => "histogram",
+        }
+    }
+}
+
+type Key = (String, Vec<(String, String)>);
+
+struct Inner {
+    cells: BTreeMap<Key, Cell>,
+    /// Per metric *name*: (type, help). First registration wins.
+    help: BTreeMap<String, (&'static str, String)>,
+}
+
+/// Where `now_us` comes from: wall time (production) or a shared
+/// virtual-time cell the sim scheduler advances (determinism).
+enum TimeSource {
+    Wall(Instant),
+    Virtual(Arc<AtomicU64>),
+}
+
+/// The registry. Cheap to share (`Arc<Registry>`); all mutation after
+/// registration is on lock-free handles.
+pub struct Registry {
+    inner: Mutex<Inner>,
+    time: TimeSource,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    /// A wall-clock registry (production).
+    pub fn new() -> Self {
+        Registry {
+            inner: Mutex::new(Inner { cells: BTreeMap::new(), help: BTreeMap::new() }),
+            time: TimeSource::Wall(Instant::now()),
+        }
+    }
+
+    /// A registry whose `now_us` reads `clock` (sim: the scheduler stores
+    /// virtual time there, making every recorded duration deterministic).
+    pub fn with_virtual_clock(clock: Arc<AtomicU64>) -> Self {
+        Registry {
+            inner: Mutex::new(Inner { cells: BTreeMap::new(), help: BTreeMap::new() }),
+            time: TimeSource::Virtual(clock),
+        }
+    }
+
+    /// Microseconds since an arbitrary epoch (registry creation / virtual
+    /// time zero). Only differences are meaningful.
+    pub fn now_us(&self) -> u64 {
+        match &self.time {
+            TimeSource::Wall(start) => start.elapsed().as_micros() as u64,
+            TimeSource::Virtual(c) => c.load(Ordering::Relaxed),
+        }
+    }
+
+    fn key(name: &str, labels: &[(&str, &str)]) -> Key {
+        let mut l: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        l.sort();
+        (name.to_string(), l)
+    }
+
+    /// Get-or-register a counter. Same `(name, labels)` returns the same
+    /// handle; a kind clash panics (programmer error).
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.help.entry(name.to_string()).or_insert_with(|| ("counter", help.to_string()));
+        let cell = inner
+            .cells
+            .entry(Self::key(name, labels))
+            .or_insert_with(|| Cell::C(Arc::new(Counter::default())));
+        match cell {
+            Cell::C(c) => c.clone(),
+            other => panic!("metric {name} registered as {} not counter", other.kind()),
+        }
+    }
+
+    /// Get-or-register a gauge.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.help.entry(name.to_string()).or_insert_with(|| ("gauge", help.to_string()));
+        let cell = inner
+            .cells
+            .entry(Self::key(name, labels))
+            .or_insert_with(|| Cell::G(Arc::new(Gauge::default())));
+        match cell {
+            Cell::G(g) => g.clone(),
+            other => panic!("metric {name} registered as {} not gauge", other.kind()),
+        }
+    }
+
+    /// Get-or-register a histogram.
+    pub fn histogram(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.help.entry(name.to_string()).or_insert_with(|| ("histogram", help.to_string()));
+        let cell = inner
+            .cells
+            .entry(Self::key(name, labels))
+            .or_insert_with(|| Cell::H(Arc::new(Histogram::default())));
+        match cell {
+            Cell::H(h) => h.clone(),
+            other => panic!("metric {name} registered as {} not histogram", other.kind()),
+        }
+    }
+
+    /// Point-in-time copy of every registered metric, sorted by
+    /// `(name, labels)` (the `BTreeMap` order), so two snapshots of
+    /// identical state render identically.
+    pub fn snapshot(&self) -> Snapshot {
+        let inner = self.inner.lock().unwrap();
+        let samples = inner
+            .cells
+            .iter()
+            .map(|((name, labels), cell)| {
+                let (value, touched) = match cell {
+                    Cell::C(c) => {
+                        (SampleValue::Counter(c.get()), c.touched.load(Ordering::Relaxed))
+                    }
+                    Cell::G(g) => (SampleValue::Gauge(g.get()), g.touched.load(Ordering::Relaxed)),
+                    Cell::H(h) => (
+                        SampleValue::Histogram {
+                            buckets: h.buckets(),
+                            count: h.count(),
+                            sum: h.sum(),
+                            max: h.max(),
+                        },
+                        h.touched.load(Ordering::Relaxed),
+                    ),
+                };
+                let help = inner.help.get(name).map(|(_, h)| h.clone()).unwrap_or_default();
+                Sample { name: name.clone(), labels: labels.clone(), help, value, touched }
+            })
+            .collect();
+        Snapshot { samples }
+    }
+}
+
+/// One metric cell at snapshot time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    /// Metric name (e.g. `net_sends_total`).
+    pub name: String,
+    /// Sorted label pairs.
+    pub labels: Vec<(String, String)>,
+    /// Help text.
+    pub help: String,
+    /// The value.
+    pub value: SampleValue,
+    /// Was this cell ever written?
+    pub touched: bool,
+}
+
+/// A snapshotted value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SampleValue {
+    /// Counter value.
+    Counter(u64),
+    /// Gauge value.
+    Gauge(f64),
+    /// Histogram state.
+    Histogram {
+        /// Bucket counts (see [`HIST_BUCKETS`]).
+        buckets: Vec<u64>,
+        /// Total samples.
+        count: u64,
+        /// Sum of samples.
+        sum: u64,
+        /// Exact maximum sample.
+        max: u64,
+    },
+}
+
+/// Point-in-time registry copy; renders to Prometheus text or JSON.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Snapshot {
+    /// Samples sorted by `(name, labels)`.
+    pub samples: Vec<Sample>,
+}
+
+impl Snapshot {
+    /// Look up one sample by exact name + label set.
+    pub fn sample(&self, name: &str, labels: &[(&str, &str)]) -> Option<&Sample> {
+        let mut want: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        want.sort();
+        self.samples.iter().find(|s| s.name == name && s.labels == want)
+    }
+
+    /// Counter value at exact name + labels.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Option<u64> {
+        match self.sample(name, labels)?.value {
+            SampleValue::Counter(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Sum of a counter across all label sets (0 when unregistered).
+    pub fn counter_sum(&self, name: &str) -> u64 {
+        self.samples
+            .iter()
+            .filter(|s| s.name == name)
+            .map(|s| match s.value {
+                SampleValue::Counter(v) => v,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Gauge value at exact name + labels.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        match self.sample(name, labels)?.value {
+            SampleValue::Gauge(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Max of a gauge across all label sets (0.0 when unregistered).
+    pub fn gauge_max(&self, name: &str) -> f64 {
+        self.samples
+            .iter()
+            .filter(|s| s.name == name)
+            .map(|s| match s.value {
+                SampleValue::Gauge(v) => v,
+                _ => 0.0,
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Exact max of a histogram across all label sets.
+    pub fn hist_max(&self, name: &str) -> u64 {
+        self.hist_fold(name, |h| h.2)
+    }
+
+    /// Total samples of a histogram across all label sets.
+    pub fn hist_count(&self, name: &str) -> u64 {
+        self.samples
+            .iter()
+            .filter(|s| s.name == name)
+            .map(|s| match s.value {
+                SampleValue::Histogram { count, .. } => count,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Sum of samples of a histogram across all label sets.
+    pub fn hist_sum(&self, name: &str) -> u64 {
+        self.samples
+            .iter()
+            .filter(|s| s.name == name)
+            .map(|s| match s.value {
+                SampleValue::Histogram { sum, .. } => sum,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    fn hist_fold(&self, name: &str, pick: impl Fn((u64, u64, u64)) -> u64) -> u64 {
+        self.samples
+            .iter()
+            .filter(|s| s.name == name)
+            .map(|s| match s.value {
+                SampleValue::Histogram { count, sum, max, .. } => pick((count, sum, max)),
+                _ => 0,
+            })
+            .fold(0, u64::max)
+    }
+
+    /// Prometheus text exposition (v0.0.4).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_name = "";
+        for s in &self.samples {
+            if s.name != last_name {
+                let kind = match s.value {
+                    SampleValue::Counter(_) => "counter",
+                    SampleValue::Gauge(_) => "gauge",
+                    SampleValue::Histogram { .. } => "histogram",
+                };
+                if !s.help.is_empty() {
+                    out.push_str(&format!("# HELP {} {}\n", s.name, s.help));
+                }
+                out.push_str(&format!("# TYPE {} {kind}\n", s.name));
+                last_name = &s.name;
+            }
+            match &s.value {
+                SampleValue::Counter(v) => {
+                    out.push_str(&format!("{}{} {v}\n", s.name, prom_labels(&s.labels, None)));
+                }
+                SampleValue::Gauge(v) => {
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        s.name,
+                        prom_labels(&s.labels, None),
+                        fmt_f64(*v)
+                    ));
+                }
+                SampleValue::Histogram { buckets, count, sum, .. } => {
+                    let mut cum = 0u64;
+                    for (i, b) in buckets.iter().enumerate().take(HIST_BUCKETS - 1) {
+                        cum += b;
+                        let le = ((1u64 << i) - 1).to_string();
+                        out.push_str(&format!(
+                            "{}_bucket{} {cum}\n",
+                            s.name,
+                            prom_labels(&s.labels, Some(&le))
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{}_bucket{} {count}\n",
+                        s.name,
+                        prom_labels(&s.labels, Some("+Inf"))
+                    ));
+                    out.push_str(&format!(
+                        "{}_sum{} {sum}\n",
+                        s.name,
+                        prom_labels(&s.labels, None)
+                    ));
+                    out.push_str(&format!(
+                        "{}_count{} {count}\n",
+                        s.name,
+                        prom_labels(&s.labels, None)
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Deterministic JSON dump: one object per sample, sorted order, no
+    /// floating-point surprises (non-finite gauges render as `null`).
+    pub fn render_json(&self) -> String {
+        let mut out = String::from("{\"metrics\":[\n");
+        for (i, s) in self.samples.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            let mut labels = String::from("{");
+            for (j, (k, v)) in s.labels.iter().enumerate() {
+                if j > 0 {
+                    labels.push(',');
+                }
+                labels.push_str(&format!("{}:{}", json_str(k), json_str(v)));
+            }
+            labels.push('}');
+            let body = match &s.value {
+                SampleValue::Counter(v) => format!("\"type\":\"counter\",\"value\":{v}"),
+                SampleValue::Gauge(v) => {
+                    format!("\"type\":\"gauge\",\"value\":{}", fmt_json_f64(*v))
+                }
+                SampleValue::Histogram { buckets, count, sum, max } => {
+                    let b: Vec<String> = buckets.iter().map(|v| v.to_string()).collect();
+                    format!(
+                        "\"type\":\"histogram\",\"count\":{count},\"sum\":{sum},\"max\":{max},\
+                         \"buckets\":[{}]",
+                        b.join(",")
+                    )
+                }
+            };
+            out.push_str(&format!(
+                "{{\"name\":{},\"labels\":{labels},\"touched\":{},{body}}}",
+                json_str(&s.name),
+                s.touched
+            ));
+        }
+        out.push_str("\n]}\n");
+        out
+    }
+}
+
+/// Union the `touched` flags across snapshots (possibly from different
+/// registries / runs) and return every `(name, labels)` cell that no run
+/// ever wrote — the dead-metric lint.
+pub fn untouched_across<'a>(snaps: impl IntoIterator<Item = &'a Snapshot>) -> Vec<String> {
+    let mut seen: BTreeMap<String, bool> = BTreeMap::new();
+    for snap in snaps {
+        for s in &snap.samples {
+            let key = format!("{}{}", s.name, prom_labels(&s.labels, None));
+            let e = seen.entry(key).or_insert(false);
+            *e |= s.touched;
+        }
+    }
+    seen.into_iter().filter(|(_, touched)| !touched).map(|(k, _)| k).collect()
+}
+
+/// Like [`untouched_across`], but at metric-*name* granularity: a name
+/// counts as live if *any* of its label cells was ever written in *any*
+/// snapshot. This is the dead-metric lint the smoke suite runs — robust
+/// to per-label reachability (e.g. only one of two procs blocking).
+pub fn untouched_names_across<'a>(snaps: impl IntoIterator<Item = &'a Snapshot>) -> Vec<String> {
+    let mut seen: BTreeMap<String, bool> = BTreeMap::new();
+    for snap in snaps {
+        for s in &snap.samples {
+            let e = seen.entry(s.name.clone()).or_insert(false);
+            *e |= s.touched;
+        }
+    }
+    seen.into_iter().filter(|(_, touched)| !touched).map(|(k, _)| k).collect()
+}
+
+fn prom_labels(labels: &[(String, String)], le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", prom_escape(v))).collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+fn prom_escape(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn json_str(v: &str) -> String {
+    let mut out = String::from("\"");
+    for c in v.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "NaN".to_string()
+    }
+}
+
+fn fmt_json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_handles_are_shared_by_key() {
+        let r = Registry::new();
+        let a = r.counter("x_total", "help", &[("k", "v")]);
+        let b = r.counter("x_total", "help ignored", &[("k", "v")]);
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        let other = r.counter("x_total", "", &[("k", "w")]);
+        other.inc();
+        let snap = r.snapshot();
+        assert_eq!(snap.counter("x_total", &[("k", "v")]), Some(3));
+        assert_eq!(snap.counter("x_total", &[("k", "w")]), Some(1));
+        assert_eq!(snap.counter_sum("x_total"), 4);
+        assert_eq!(snap.counter("x_total", &[("k", "missing")]), None);
+    }
+
+    #[test]
+    fn gauge_set_and_set_max() {
+        let r = Registry::new();
+        let g = r.gauge("g", "", &[]);
+        g.set(1.5);
+        assert_eq!(g.get(), 1.5);
+        g.set_max(0.5);
+        assert_eq!(g.get(), 1.5, "set_max must not lower");
+        g.set_max(2.5);
+        assert_eq!(g.get(), 2.5);
+        assert_eq!(r.snapshot().gauge("g", &[]), Some(2.5));
+    }
+
+    #[test]
+    fn histogram_buckets_sum_and_exact_max() {
+        let r = Registry::new();
+        let h = r.histogram("h_us", "", &[]);
+        for v in [0u64, 1, 2, 3, 100, 1_000_000, u64::MAX] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.max(), u64::MAX);
+        let b = h.buckets();
+        assert_eq!(b[0], 1, "zero bucket");
+        assert_eq!(b[1], 1, "value 1");
+        assert_eq!(b[2], 2, "values 2,3");
+        assert_eq!(b[HIST_BUCKETS - 1], 2, "overflow bucket");
+        assert_eq!(b.iter().sum::<u64>(), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "registered as counter")]
+    fn kind_clash_panics() {
+        let r = Registry::new();
+        let _ = r.counter("clash", "", &[]);
+        let _ = r.gauge("clash", "", &[]);
+    }
+
+    #[test]
+    fn virtual_clock_drives_now_us() {
+        let clock = Arc::new(AtomicU64::new(0));
+        let r = Registry::with_virtual_clock(clock.clone());
+        assert_eq!(r.now_us(), 0);
+        clock.store(1234, Ordering::Relaxed);
+        assert_eq!(r.now_us(), 1234);
+    }
+
+    #[test]
+    fn prometheus_render_shape() {
+        let r = Registry::new();
+        r.counter("a_total", "does things", &[("proc", "0")]).add(5);
+        r.gauge("b", "", &[]).set(0.5);
+        r.histogram("c_us", "latency", &[]).record(3);
+        let text = r.snapshot().render_prometheus();
+        assert!(text.contains("# HELP a_total does things"), "{text}");
+        assert!(text.contains("# TYPE a_total counter"), "{text}");
+        assert!(text.contains("a_total{proc=\"0\"} 5"), "{text}");
+        assert!(text.contains("b 0.5"), "{text}");
+        assert!(text.contains("# TYPE c_us histogram"), "{text}");
+        assert!(text.contains("c_us_bucket{le=\"3\"} 1"), "{text}");
+        assert!(text.contains("c_us_bucket{le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("c_us_sum 3"), "{text}");
+        assert!(text.contains("c_us_count 1"), "{text}");
+    }
+
+    #[test]
+    fn json_render_is_deterministic_and_escaped() {
+        let r = Registry::new();
+        r.counter("a_total", "", &[("policy", "ssp(s=\"1\")")]).inc();
+        r.histogram("h", "", &[]).record(7);
+        let s1 = r.snapshot().render_json();
+        let s2 = r.snapshot().render_json();
+        assert_eq!(s1, s2);
+        assert!(s1.contains("\\\"1\\\""), "{s1}");
+        assert!(s1.contains("\"max\":7"), "{s1}");
+        assert!(s1.starts_with("{\"metrics\":["));
+    }
+
+    #[test]
+    fn untouched_union_across_snapshots() {
+        let r1 = Registry::new();
+        r1.counter("live_total", "", &[]);
+        r1.counter("dead_total", "", &[]);
+        let r2 = Registry::new();
+        r2.counter("live_total", "", &[]).inc();
+        let (s1, s2) = (r1.snapshot(), r2.snapshot());
+        let dead = untouched_across([&s1, &s2]);
+        assert_eq!(dead, vec!["dead_total".to_string()]);
+    }
+
+    #[test]
+    fn untouched_names_collapse_label_cells() {
+        let r = Registry::new();
+        r.counter("x_total", "", &[("proc", "0")]).inc();
+        r.counter("x_total", "", &[("proc", "1")]);
+        r.counter("y_total", "", &[("proc", "0")]);
+        let snap = r.snapshot();
+        assert_eq!(untouched_across([&snap]).len(), 2, "two untouched cells");
+        assert_eq!(untouched_names_across([&snap]), vec!["y_total".to_string()]);
+    }
+
+    #[test]
+    fn hist_helpers_fold_across_labels() {
+        let r = Registry::new();
+        r.histogram("h", "", &[("g", "a")]).record(10);
+        r.histogram("h", "", &[("g", "b")]).record(4);
+        let snap = r.snapshot();
+        assert_eq!(snap.hist_max("h"), 10);
+        assert_eq!(snap.hist_count("h"), 2);
+        assert_eq!(snap.hist_sum("h"), 14);
+        assert_eq!(snap.gauge_max("h"), 0.0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Stdlib-only metrics exposition: a tiny HTTP scrape endpoint plus a
+//! periodic reporter thread (production mode; the sim reads snapshots
+//! directly and never starts either).
+//!
+//! The endpoint speaks just enough HTTP/1.1 for `curl` and a Prometheus
+//! scraper: `GET /metrics` returns the text exposition, `GET
+//! /metrics.json` the deterministic JSON dump, anything else 404. One
+//! request per connection (`Connection: close`), no keep-alive, no TLS.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::registry::{Registry, Snapshot};
+
+/// Handle to a running scrape endpoint; dropping it leaks the thread, so
+/// call [`ServeHandle::shutdown`].
+pub struct ServeHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl ServeHandle {
+    /// The bound address (useful with a `:0` request).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the listener thread.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Bind `addr` (e.g. `"127.0.0.1:9898"` or `"127.0.0.1:0"`) and serve
+/// scrapes of `registry` from a background thread.
+pub fn serve(registry: Arc<Registry>, addr: &str) -> std::io::Result<ServeHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let t_stop = stop.clone();
+    let thread = std::thread::Builder::new()
+        .name("metrics-serve".into())
+        .spawn(move || {
+            for stream in listener.incoming().flatten() {
+                if t_stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                // Serve inline: scrapes are rare and tiny.
+                let _ = handle_conn(stream, &registry);
+            }
+        })?;
+    Ok(ServeHandle { addr: local, stop, thread: Some(thread) })
+}
+
+fn handle_conn(mut stream: TcpStream, registry: &Registry) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut buf = [0u8; 1024];
+    let n = stream.read(&mut buf)?;
+    let req = String::from_utf8_lossy(&buf[..n]);
+    let path = req.split_whitespace().nth(1).unwrap_or("/");
+    let (status, ctype, body) = match path {
+        "/metrics" => (
+            "200 OK",
+            "text/plain; version=0.0.4",
+            registry.snapshot().render_prometheus(),
+        ),
+        "/metrics.json" => ("200 OK", "application/json", registry.snapshot().render_json()),
+        _ => ("404 Not Found", "text/plain", "not found\n".to_string()),
+    };
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())
+}
+
+/// Handle to a periodic reporter thread.
+pub struct ReporterHandle {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl ReporterHandle {
+    /// Stop and join (fires `sink` one final time on the way out).
+    pub fn shutdown(mut self) {
+        let (lock, cvar) = &*self.stop;
+        *lock.lock().unwrap() = true;
+        cvar.notify_all();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Spawn a thread that snapshots `registry` every `every` and hands the
+/// snapshot to `sink` (log line, file dump, …).
+pub fn spawn_reporter(
+    registry: Arc<Registry>,
+    every: Duration,
+    mut sink: impl FnMut(&Snapshot) + Send + 'static,
+) -> ReporterHandle {
+    let stop = Arc::new((Mutex::new(false), Condvar::new()));
+    let t_stop = stop.clone();
+    let thread = std::thread::Builder::new()
+        .name("metrics-reporter".into())
+        .spawn(move || {
+            let (lock, cvar) = &*t_stop;
+            let mut stopped = lock.lock().unwrap();
+            loop {
+                if *stopped {
+                    break;
+                }
+                let (guard, _) = cvar.wait_timeout(stopped, every).unwrap();
+                stopped = guard;
+                sink(&registry.snapshot());
+            }
+        })
+        .expect("spawn metrics-reporter");
+    ReporterHandle { stop, thread: Some(thread) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scrape(addr: SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn endpoint_serves_prometheus_and_json() {
+        let reg = Arc::new(Registry::new());
+        reg.counter("scrape_me_total", "a counter", &[]).add(7);
+        let h = serve(reg, "127.0.0.1:0").unwrap();
+        let addr = h.local_addr();
+        let text = scrape(addr, "/metrics");
+        assert!(text.starts_with("HTTP/1.1 200 OK"), "{text}");
+        assert!(text.contains("scrape_me_total 7"), "{text}");
+        let json = scrape(addr, "/metrics.json");
+        assert!(json.contains("\"scrape_me_total\""), "{json}");
+        let missing = scrape(addr, "/nope");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+        h.shutdown();
+    }
+
+    #[test]
+    fn reporter_fires_and_stops() {
+        let reg = Arc::new(Registry::new());
+        reg.counter("tick_total", "", &[]).inc();
+        let seen = Arc::new(Mutex::new(0u32));
+        let t_seen = seen.clone();
+        let h = spawn_reporter(reg, Duration::from_millis(5), move |snap| {
+            assert_eq!(snap.counter("tick_total", &[]), Some(1));
+            *t_seen.lock().unwrap() += 1;
+        });
+        std::thread::sleep(Duration::from_millis(40));
+        h.shutdown();
+        assert!(*seen.lock().unwrap() >= 1);
+    }
+}

@@ -9,6 +9,7 @@ use crate::comm::{Endpoint, NetSender};
 use crate::config::PolicyConfig;
 use crate::consistency::ConsistencyModel;
 use crate::error::{Error, Result};
+use crate::metrics::ShardMetrics;
 use crate::table::{RowData, RowId, TableDesc, TableId, TableStore};
 use crate::types::{Clock, NodeId, ProcId, ShardId, WorkerId};
 
@@ -33,12 +34,20 @@ pub struct ShardOptions {
     /// during [`ServerShard::recover`], resurrecting the shard from the
     /// (stale) checkpoint alone. Never set outside tests.
     pub skip_wal_replay: bool,
+    /// Metric handles (registered on the system's hub registry by the
+    /// coordinator/harness; a throwaway registry by default).
+    pub metrics: ShardMetrics,
 }
 
 impl ShardOptions {
     /// Options with the default checkpoint cadence.
     pub fn new(persist: PersistHandle) -> Self {
-        ShardOptions { persist, checkpoint_every: DEFAULT_CHECKPOINT_EVERY, skip_wal_replay: false }
+        ShardOptions {
+            persist,
+            checkpoint_every: DEFAULT_CHECKPOINT_EVERY,
+            skip_wal_replay: false,
+            metrics: ShardMetrics::default(),
+        }
     }
 }
 
@@ -121,6 +130,8 @@ struct DeferredPull {
     row: RowId,
     worker: WorkerId,
     requester: NodeId,
+    /// Arrival time (registry clock) — feeds `shard_pull_serve_us`.
+    asked_at: u64,
 }
 
 /// One server shard: owns its partition of every table, applies pushes,
@@ -148,9 +159,11 @@ pub struct ServerShard {
     /// Sabotage knob (see [`ShardOptions::skip_wal_replay`]).
     skip_wal_replay: bool,
     /// True while replaying the WAL in [`ServerShard::recover`]: state
-    /// mutates exactly as live handling would, but sends, trace events and
-    /// WAL re-appends are suppressed.
+    /// mutates exactly as live handling would, but sends, trace events,
+    /// WAL re-appends and apply/dedup counters are suppressed.
     replaying: bool,
+    /// Metric handles (see [`ShardOptions::metrics`]).
+    metrics: ShardMetrics,
 }
 
 impl ServerShard {
@@ -212,6 +225,7 @@ impl ServerShard {
             checkpoint_every: opts.checkpoint_every,
             skip_wal_replay: opts.skip_wal_replay,
             replaying: false,
+            metrics: opts.metrics,
         }
     }
 
@@ -240,6 +254,7 @@ impl ServerShard {
             shard.import_checkpoint(cp);
         }
         if !skip_wal {
+            shard.metrics.wal_replayed.add(wal.len() as u64);
             shard.replaying = true;
             for rec in wal {
                 match rec {
@@ -256,6 +271,7 @@ impl ServerShard {
             shard.replaying = false;
         }
         shard.epoch = shard.persist.bump_epoch()?;
+        shard.metrics.epoch_bumps.inc();
         shard.announce_recovery();
         Ok(shard)
     }
@@ -341,9 +357,12 @@ impl ServerShard {
         if self.replaying {
             return;
         }
+        let t0 = self.metrics.now_us();
         if let Err(e) = self.persist.append(&rec) {
             panic!("shard {}: WAL append failed: {e}", self.id.0);
         }
+        self.metrics.wal_appends.inc();
+        self.metrics.wal_append_us.record(self.metrics.now_us().saturating_sub(t0));
         self.wal_since_cp += 1;
     }
 
@@ -352,10 +371,13 @@ impl ServerShard {
         {
             return;
         }
+        let t0 = self.metrics.now_us();
         let cp = self.export_checkpoint();
         if let Err(e) = self.persist.checkpoint(&cp) {
             panic!("shard {}: checkpoint failed: {e}", self.id.0);
         }
+        self.metrics.checkpoints.inc();
+        self.metrics.checkpoint_us.record(self.metrics.now_us().saturating_sub(t0));
         self.wal_since_cp = 0;
     }
 
@@ -401,7 +423,7 @@ impl ServerShard {
             self.deferred.drain(..).partition(|d| d.needed <= m);
         self.deferred = rest;
         for d in ready {
-            self.reply_pull(d.requester, d.table, d.row, d.worker);
+            self.reply_pull(d.requester, d.table, d.row, d.worker, d.asked_at);
         }
     }
 
@@ -475,6 +497,7 @@ impl ServerShard {
         // during replay — WAL records carry the epochs they were accepted
         // under.)
         if !self.replaying && batch.epoch < self.epoch {
+            self.metrics.pushes_fenced.inc();
             return;
         }
         // Idempotent dedup: at or below the applied frontier means this is a
@@ -487,10 +510,14 @@ impl ServerShard {
             .and_then(|t| t.applied_upto.get(&batch.origin))
             .map_or(false, |&p| batch.batch_id <= p)
         {
+            if !self.replaying {
+                self.metrics.pushes_deduped.inc();
+            }
             return;
         }
         let num_procs = self.num_client_procs;
         if !self.replaying {
+            self.metrics.pushes_applied.inc();
             self.trace.record(|| Event::ShardApplied {
                 at: std::time::Instant::now(),
                 shard: self.id.0,
@@ -502,6 +529,7 @@ impl ServerShard {
         // Write-ahead: log before mutating, so a crash mid-handler replays
         // the whole record rather than losing half of it.
         self.log(WalRecord::Push(batch.clone()));
+        let batch_table = batch.table;
         let t = self.table(batch.table);
         // Apply to the authoritative partition.
         for (row, u) in &batch.updates {
@@ -521,6 +549,8 @@ impl ServerShard {
                 Self::forward(&self.net, self.id, num_procs, min_clock, b);
             }
         }
+        let fwd_rows = self.tables[&batch_table].fwd.len();
+        self.metrics.fwd_rows.set(fwd_rows as f64);
         self.maybe_checkpoint();
     }
 
@@ -549,14 +579,24 @@ impl ServerShard {
         needed: Clock,
         worker: WorkerId,
     ) {
+        let asked_at = self.metrics.now_us();
         if self.effective_min() >= needed {
-            self.reply_pull(requester, table, row, worker);
+            self.reply_pull(requester, table, row, worker, asked_at);
         } else {
-            self.deferred.push(DeferredPull { needed, table, row, worker, requester });
+            self.deferred.push(DeferredPull { needed, table, row, worker, requester, asked_at });
         }
     }
 
-    fn reply_pull(&mut self, requester: NodeId, table: TableId, row: RowId, worker: WorkerId) {
+    fn reply_pull(
+        &mut self,
+        requester: NodeId,
+        table: TableId,
+        row: RowId,
+        worker: WorkerId,
+        asked_at: u64,
+    ) {
+        self.metrics.pulls_served.inc();
+        self.metrics.pull_serve_us.record(self.metrics.now_us().saturating_sub(asked_at));
         let min_clock = self.effective_min();
         let t = self.table(table);
         // Serve the *forwarded prefix*, not the authoritative store: see

@@ -11,6 +11,7 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::client::ClientCore;
@@ -18,6 +19,7 @@ use crate::comm::bus::Transport;
 use crate::comm::{Msg, NetSender, Payload};
 use crate::config::{PolicyConfig, SystemConfig};
 use crate::consistency::vap;
+use crate::metrics::{CoordMetrics, NetMetrics, Registry, ShardMetrics, Snapshot};
 use crate::server::{MemPersistence, ServerShard, ShardOptions, TableRegistry};
 use crate::table::{RowId, RowKind, TableDesc, TableId};
 use crate::trace::TraceRecorder;
@@ -93,6 +95,19 @@ pub struct SimReport {
     pub dropped_to_dead: u64,
     /// Last trace lines (only populated by [`Sim::run_traced`]).
     pub trace_tail: Vec<String>,
+    /// Point-in-time copy of the run's metrics registry, taken after the
+    /// drain. Virtual-clocked, so it is a deterministic function of
+    /// `(SimConfig, seed)` — byte-identical `render_json()` across runs.
+    pub snapshot: Snapshot,
+    /// Oracle's independent max read staleness (wire-fed mirror of the
+    /// `client_read_staleness_clocks` histogram max).
+    pub oracle_max_staleness: Clock,
+    /// Oracle's observed max |delta| (mirror of
+    /// `client_update_magnitude_max`).
+    pub oracle_u_obs: f32,
+    /// Oracle's count of distinct accepted push batches (mirror of
+    /// `shard_pushes_applied_total`).
+    pub oracle_applied_batches: u64,
 }
 
 impl SimReport {
@@ -244,7 +259,15 @@ pub struct Oracle {
     /// legitimate replay traffic, not ordering bugs.
     crash_expected: bool,
     /// Largest |delta| any worker wrote (the paper's `u`).
-    u_obs: f32,
+    pub u_obs: f32,
+    /// Largest `true_clock − effective_clock` any successful gated read
+    /// observed, tracked for *every* policy (the bound check only fires
+    /// where the policy defines one). Independent mirror for the
+    /// `client_read_staleness_clocks` histogram cross-check.
+    pub max_staleness: Clock,
+    /// Distinct push batches accepted (dedup'd, post-fence) across all
+    /// shards — the wire-fed mirror of `shard_pushes_applied_total`.
+    pub applied_batches: u64,
     violations: Vec<Violation>,
     truncated: u64,
 }
@@ -260,6 +283,8 @@ impl Oracle {
             shard_epoch: HashMap::new(),
             crash_expected: false,
             u_obs: 0.0,
+            max_staleness: 0,
+            applied_batches: 0,
             violations: Vec::new(),
             truncated: 0,
         }
@@ -307,6 +332,7 @@ impl Oracle {
                     }
                 }
                 self.applied_upto.insert(key, b.batch_id);
+                self.applied_batches += 1;
                 if self.policy.v_thr().is_some() {
                     let mut masses: Vec<((u64, u32), f64)> = Vec::new();
                     for (row, u) in &b.updates {
@@ -363,6 +389,7 @@ impl Oracle {
     /// A gated read succeeded: its effective row clock must satisfy the
     /// staleness bound for the worker's *true* clock.
     pub fn check_staleness(&mut self, at: u64, wid: WorkerId, true_clock: Clock, row: u64, eff: Clock) {
+        self.max_staleness = self.max_staleness.max(true_clock.saturating_sub(eff));
         if let Some(s) = self.policy.staleness() {
             let required = true_clock.saturating_sub(s.saturating_add(1));
             if eff < required {
@@ -552,9 +579,15 @@ impl Sim {
             .unwrap();
         let desc = registry.get(TABLE).unwrap();
 
-        let net = Arc::new(SimNet::new(
+        // One registry for the whole run, on a virtual clock the event
+        // loop advances: every duration any layer records is a function of
+        // the schedule, never of the wall — snapshots are reproducible.
+        let vclock = Arc::new(AtomicU64::new(0));
+        let hub = Arc::new(Registry::with_virtual_clock(vclock.clone()));
+        let net = Arc::new(SimNet::new_with_metrics(
             cfg.seed ^ 0x9E37_79B9_7F4A_7C15,
             cfg.faults,
+            Arc::new(NetMetrics::new(&hub)),
         ));
         let transport: Arc<dyn Transport> = net.clone();
         let sender = NetSender::from_transport(transport);
@@ -564,6 +597,7 @@ impl Sim {
             .num_client_procs(cfg.procs)
             .threads_per_proc(cfg.threads_per_proc)
             .trace(false)
+            .magnitude_priority(cfg.priority)
             .build();
 
         // Each shard owns a persistence handle that survives its crash:
@@ -575,6 +609,7 @@ impl Sim {
             let mut o = ShardOptions::new(persists[s].clone());
             o.checkpoint_every = cfg.checkpoint_every;
             o.skip_wal_replay = cfg.sabotage == Sabotage::SkipWalReplay;
+            o.metrics = ShardMetrics::new(hub.clone(), s as u32);
             o
         };
         let mut shards: Vec<Option<ServerShard>> = (0..cfg.shards)
@@ -597,6 +632,7 @@ impl Sim {
                     registry.clone(),
                     sender.clone(),
                     Arc::new(TraceRecorder::new(false)),
+                    hub.clone(),
                 )
             })
             .collect();
@@ -646,6 +682,20 @@ impl Sim {
         let mut ops_completed: u64 = 0;
         let mut retries_total: u64 = 0;
         let mut steps: u64 = 0;
+
+        // Harness-side gate observability: retry counts and blocked
+        // virtual time, split by op class (each retry re-runs after one
+        // op-cost quantum, so blocked time = retries × cost).
+        let gate_help = "op attempts returned gated, by op class";
+        let block_help = "virtual microseconds workers spent blocked on gates";
+        let retries_read = hub.counter("sim_gate_retries_total", gate_help, &[("gate", "read")]);
+        let retries_write = hub.counter("sim_gate_retries_total", gate_help, &[("gate", "write")]);
+        let blocked_read = hub.counter("sim_blocked_us", block_help, &[("gate", "read")]);
+        let blocked_write = hub.counter("sim_blocked_us", block_help, &[("gate", "write")]);
+        // Coordinator-side heartbeat metrics mirror the production
+        // monitor; inert (unregistered) unless a crash is configured.
+        let coord_metrics = cfg.faults.crash.map(|_| CoordMetrics::new(&hub));
+        let mut ping_sent_at: HashMap<u64, u64> = HashMap::new();
 
         // Crash/recovery machinery. All of it is inert — no events, no
         // trace lines — unless a crash is configured, so clean runs keep
@@ -708,6 +758,7 @@ impl Sim {
             if class == 0 {
                 let (t, which) = ts.unwrap();
                 now = now.max(t);
+                vclock.store(now, Ordering::Relaxed);
                 net.advance_to(t);
                 match which {
                     0 => {
@@ -738,6 +789,9 @@ impl Sim {
                         .expect("recovery from in-memory persistence");
                         shards[idx] = Some(sh);
                         oracle.on_shard_restart(idx as u32);
+                        if let Some(cm) = &coord_metrics {
+                            cm.respawns.inc();
+                        }
                         next_hb = None;
                         trace.push(format!("{t} restart shard{idx}"));
                     }
@@ -752,6 +806,9 @@ impl Sim {
                                 if down_shard == Some(s) {
                                     let c = cfg.faults.crash.unwrap();
                                     restart_at = Some(t.max(c.at_us + c.restart_after_us));
+                                    if let Some(cm) = &coord_metrics {
+                                        cm.hb_misses.inc();
+                                    }
                                     trace.push(format!("{t} detect shard{s} dead"));
                                 } else if shards[s].is_some() {
                                     oracle.violate(
@@ -763,6 +820,10 @@ impl Sim {
                             }
                         }
                         ping_seq += 1;
+                        ping_sent_at.insert(ping_seq, t);
+                        if ping_seq > 8 {
+                            ping_sent_at.remove(&(ping_seq - 8));
+                        }
                         for s in 0..cfg.shards {
                             let _ = sender.send(Msg {
                                 src: NodeId::Coordinator,
@@ -776,7 +837,7 @@ impl Sim {
                         // Virtual-time eager flusher — the sim analogue of
                         // the production flusher threads, in proc order.
                         for core in &cores {
-                            core.flush_eager_tables();
+                            core.flush_eager_tables_limited(cfg.flush_max_rows);
                         }
                         next_flush = Some(t + cfg.flusher_every_us);
                     }
@@ -784,6 +845,7 @@ impl Sim {
             } else if class == 1 {
                 let Some((at, msg)) = net.pop_next() else { continue };
                 now = at;
+                vclock.store(now, Ordering::Relaxed);
                 if let NodeId::Server(s) = msg.dst {
                     if down_shard == Some(s.0 as usize) {
                         // Dead destination: the message is destroyed before
@@ -813,14 +875,20 @@ impl Sim {
                         cores[p.0 as usize].handle_ingress(msg);
                     }
                     NodeId::Coordinator => {
-                        if let Payload::Pong { shard, .. } = msg.payload {
+                        if let Payload::Pong { shard, seq } = msg.payload {
                             last_pong[shard.0 as usize] = at;
+                            if let (Some(cm), Some(&t0)) =
+                                (&coord_metrics, ping_sent_at.get(&seq))
+                            {
+                                cm.hb_rtt_us.record(at.saturating_sub(t0));
+                            }
                         }
                     }
                 }
             } else {
                 let Reverse((t, widx)) = heap.pop().unwrap();
                 now = now.max(t);
+                vclock.store(now, Ordering::Relaxed);
                 net.advance_to(t);
                 let w = &mut workers[widx];
                 if w.cur.is_none() {
@@ -837,6 +905,16 @@ impl Sim {
                 } else {
                     w.retries_cur += 1;
                     retries_total += 1;
+                    match w.cur {
+                        Some(Op::GetShared { .. } | Op::GetOwn | Op::FifoRead) => {
+                            retries_read.inc();
+                            blocked_read.add(w.cost_us);
+                        }
+                        _ => {
+                            retries_write.inc();
+                            blocked_write.add(w.cost_us);
+                        }
+                    }
                     if w.retries_cur > RETRY_CAP {
                         let detail = format!(
                             "worker {} stuck on {:?} after {RETRY_CAP} retries",
@@ -868,6 +946,9 @@ impl Sim {
             .expect("recovery from in-memory persistence");
             shards[idx] = Some(sh);
             oracle.on_shard_restart(idx as u32);
+            if let Some(cm) = &coord_metrics {
+                cm.respawns.inc();
+            }
             trace.push(format!("{now} restart shard{idx} (forced at drain)"));
         }
 
@@ -885,6 +966,7 @@ impl Sim {
                 break;
             }
             now = at;
+            vclock.store(now, Ordering::Relaxed);
             oracle.observe_delivery(at, &msg);
             trace.push(format!(
                 "{at} net {}->{} {}",
@@ -922,6 +1004,10 @@ impl Sim {
             crashes,
             dropped_to_dead,
             trace_tail: trace.tail(40),
+            snapshot: hub.snapshot(),
+            oracle_max_staleness: oracle.max_staleness,
+            oracle_u_obs: oracle.u_obs,
+            oracle_applied_batches: oracle.applied_batches,
         }
     }
 }
@@ -990,6 +1076,10 @@ fn exec_op(
             let row = cfg.own_row(w.wid.0);
             match core.try_get(TABLE, RowId(row), col0(), w.clock).unwrap() {
                 Some(v) => {
+                    // Mirror the staleness the client just recorded, so the
+                    // oracle's max tracks every successful gated read.
+                    let (_, snap_c, floor, _, _) = core.debug_param(TABLE, RowId(row), col0());
+                    oracle.check_staleness(at, w.wid, w.clock, row, snap_c.max(floor));
                     if v != w.own_expected {
                         oracle.violate(
                             at,
@@ -1035,10 +1125,14 @@ fn exec_op(
                 trace.push(format!("{at} w{} fifo_r blocked", w.wid.0));
                 return false;
             };
+            let (_, c0, f0, _, _) = core.debug_param(TABLE, RowId(row), 0);
+            oracle.check_staleness(at, w.wid, w.clock, row, c0.max(f0));
             let Some(v1) = core.try_get(TABLE, RowId(row), 1, w.clock).unwrap() else {
                 trace.push(format!("{at} w{} fifo_r blocked", w.wid.0));
                 return false;
             };
+            let (_, c1, f1, _, _) = core.debug_param(TABLE, RowId(row), 1);
+            oracle.check_staleness(at, w.wid, w.clock, row, c1.max(f1));
             if v0 < v1 {
                 oracle.violate(
                     at,

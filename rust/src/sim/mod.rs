@@ -76,7 +76,7 @@ pub mod vtrace;
 
 pub use harness::{Oracle, Sim, SimReport, Violation};
 pub use net::{SimNet, SimNetStats};
-pub use sweep::{shrink, sweep, SweepOutcome};
+pub use sweep::{ablate, shrink, sweep, AblationArm, AblationReport, SweepOutcome};
 pub use vtrace::SimTrace;
 
 use crate::config::PolicyConfig;
@@ -219,6 +219,13 @@ pub struct SimConfig {
     /// Shard checkpoint cadence in WAL records (0 = never; recovery then
     /// replays the full WAL).
     pub checkpoint_every: u64,
+    /// Magnitude-priority egress ordering (paper §4.2); `false` = FIFO.
+    /// The ablation flips this on otherwise-identical seeds.
+    pub priority: bool,
+    /// Rows the virtual-time flusher drains per table per tick
+    /// (`usize::MAX` = everything). Partial drains keep the egress queue
+    /// populated so the drain *order* is actually observable.
+    pub flush_max_rows: usize,
 }
 
 impl Default for SimConfig {
@@ -241,6 +248,8 @@ impl Default for SimConfig {
             heartbeat_every_us: 400,
             heartbeat_deadline_us: 2_500,
             checkpoint_every: 16,
+            priority: true,
+            flush_max_rows: usize::MAX,
         }
     }
 }
@@ -262,6 +271,18 @@ impl SimConfig {
     /// of `restart_after_us`.
     pub fn with_crash(mut self, shard: u32, at_us: u64, restart_after_us: u64) -> Self {
         self.faults.crash = Some(CrashFault { shard, at_us, restart_after_us });
+        self
+    }
+
+    /// Same run, magnitude priority on/off (the E6 ablation knob).
+    pub fn with_priority(mut self, on: bool) -> Self {
+        self.priority = on;
+        self
+    }
+
+    /// Same run, flusher drains at most `rows` rows per table per tick.
+    pub fn with_flush_max_rows(mut self, rows: usize) -> Self {
+        self.flush_max_rows = rows;
         self
     }
 

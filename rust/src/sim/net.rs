@@ -120,6 +120,13 @@ impl SimNet {
     /// New network; `seed` must derive from the run's master seed by fixed
     /// mixing so the fault schedule is reproducible.
     pub fn new(seed: u64, faults: FaultConfig) -> Self {
+        Self::new_with_metrics(seed, faults, Arc::new(NetMetrics::default()))
+    }
+
+    /// Same, but recording into an externally constructed metrics handle —
+    /// the harness registers it on the run's shared registry so net counters
+    /// appear in the per-run snapshot.
+    pub fn new_with_metrics(seed: u64, faults: FaultConfig, metrics: Arc<NetMetrics>) -> Self {
         SimNet {
             inner: Mutex::new(Inner {
                 now: 0,
@@ -130,7 +137,7 @@ impl SimNet {
                 faults,
                 stats: SimNetStats::default(),
             }),
-            metrics: Arc::new(NetMetrics::default()),
+            metrics,
         }
     }
 
@@ -156,6 +163,7 @@ impl SimNet {
         g.now = g.now.max(f.at);
         g.stats.delivered += 1;
         self.metrics.record_deliver(f.msg.payload.kind());
+        self.metrics.set_inflight(g.heap.len());
         Some((f.at, f.msg))
     }
 
@@ -243,6 +251,7 @@ impl Transport for SimNet {
             g.stats.duplicates_injected += 1;
             g.heap.push(Reverse(InFlight { at: dup_at, seq: dup_seq, link_seq, msg: m }));
         }
+        self.metrics.set_inflight(g.heap.len());
         Ok(())
     }
 

@@ -7,6 +7,8 @@
 //! persists, so the survivor is a minimal reproduction to debug against
 //! (determinism makes every re-run exact).
 
+use crate::metrics::Snapshot;
+
 use super::harness::{Sim, SimReport};
 use super::{FaultConfig, SimConfig};
 
@@ -17,6 +19,9 @@ pub struct SweepOutcome {
     pub runs: u64,
     /// `(seed, report)` for every failing run.
     pub failures: Vec<(u64, SimReport)>,
+    /// `(seed, metrics snapshot)` for **every** run, failing or not —
+    /// the per-run observability record the smoke suite serializes.
+    pub snapshots: Vec<(u64, Snapshot)>,
 }
 
 impl SweepOutcome {
@@ -42,6 +47,7 @@ impl SweepOutcome {
 pub fn sweep(base: &SimConfig, seeds: std::ops::Range<u64>) -> SweepOutcome {
     let mut runs = 0;
     let mut failures = Vec::new();
+    let mut snapshots = Vec::new();
     for seed in seeds {
         runs += 1;
         let report = Sim::run(&base.clone().with_seed(seed));
@@ -50,8 +56,103 @@ pub fn sweep(base: &SimConfig, seeds: std::ops::Range<u64>) -> SweepOutcome {
             // schedule tail (identical by determinism).
             failures.push((seed, Sim::run_traced(&base.clone().with_seed(seed))));
         }
+        snapshots.push((seed, report.snapshot));
     }
-    SweepOutcome { runs, failures }
+    SweepOutcome { runs, failures, snapshots }
+}
+
+/// One arm of the magnitude-priority ablation: aggregates over all seeds
+/// run with the same `priority` setting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AblationArm {
+    /// Egress drain order this arm ran with (`true` = magnitude).
+    pub priority: bool,
+    /// Seeds run.
+    pub runs: u64,
+    /// Runs with oracle violations (must be 0 either way — the ablation
+    /// compares performance signals, never correctness).
+    pub failures: u64,
+    /// Σ `sim_gate_retries_total{gate="write"}` — write-gate blocks.
+    pub write_blocks: u64,
+    /// Σ `sim_blocked_us{gate="write"}` — virtual µs writers sat blocked.
+    pub write_blocked_us: u64,
+    /// Σ `client_egress_reorders_total` — rows that overtook older rows.
+    pub egress_reorders: u64,
+}
+
+/// Outcome of [`ablate`]: the same seeds, magnitude priority on vs. off.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AblationReport {
+    /// Magnitude-priority arm.
+    pub on: AblationArm,
+    /// FIFO arm.
+    pub off: AblationArm,
+}
+
+impl AblationReport {
+    /// Both arms violation-free?
+    pub fn ok(&self) -> bool {
+        self.on.failures == 0 && self.off.failures == 0
+    }
+
+    /// Two-line comparison for logs. Deltas are reported, not asserted:
+    /// which order blocks less is workload-dependent; what the harness
+    /// guarantees is that both orders uphold every bound.
+    pub fn describe(&self) -> String {
+        let line = |a: &AblationArm| {
+            format!(
+                "priority={} runs={} failures={} write_blocks={} write_blocked_us={} \
+                 egress_reorders={}",
+                a.priority,
+                a.runs,
+                a.failures,
+                a.write_blocks,
+                a.write_blocked_us,
+                a.egress_reorders
+            )
+        };
+        format!("{}
+{}", line(&self.on), line(&self.off))
+    }
+}
+
+/// Run `base` across `seeds` twice — magnitude priority on, then off —
+/// and aggregate the gate/blocking metrics of each arm (ablation E6).
+///
+/// The base configuration is nudged toward partial drains (flusher on,
+/// one row per tick) so the egress queue actually holds several rows and
+/// the drain *order* is observable; with whole-queue drains both orders
+/// ship identical batches.
+pub fn ablate(base: &SimConfig, seeds: std::ops::Range<u64>) -> AblationReport {
+    let mut arm_cfg = base.clone().with_flush_max_rows(1);
+    if arm_cfg.flusher_every_us == 0 {
+        arm_cfg.flusher_every_us = 60;
+    }
+    let run_arm = |priority: bool| {
+        let mut arm = AblationArm {
+            priority,
+            runs: 0,
+            failures: 0,
+            write_blocks: 0,
+            write_blocked_us: 0,
+            egress_reorders: 0,
+        };
+        for seed in seeds.clone() {
+            let r = Sim::run(&arm_cfg.clone().with_priority(priority).with_seed(seed));
+            arm.runs += 1;
+            if !r.ok() {
+                arm.failures += 1;
+            }
+            let gate_write: &[(&str, &str)] = &[("gate", "write")];
+            let blocks = r.snapshot.counter("sim_gate_retries_total", gate_write);
+            arm.write_blocks += blocks.unwrap_or(0);
+            let blocked = r.snapshot.counter("sim_blocked_us", gate_write);
+            arm.write_blocked_us += blocked.unwrap_or(0);
+            arm.egress_reorders += r.snapshot.counter_sum("client_egress_reorders_total");
+        }
+        arm
+    };
+    AblationReport { on: run_arm(true), off: run_arm(false) }
 }
 
 /// Candidate simplifications, most aggressive first. Each either disables
@@ -140,6 +241,24 @@ mod tests {
         let out = sweep(&SimConfig::default(), 100..108);
         assert!(out.ok(), "{}", out.describe());
         assert_eq!(out.runs, 8);
+        assert_eq!(out.snapshots.len(), 8, "every run carries a metric snapshot");
+        for (seed, snap) in &out.snapshots {
+            assert!(snap.counter_sum("shard_pushes_applied_total") > 0, "seed {seed}: no pushes");
+        }
+    }
+
+    #[test]
+    fn ablation_runs_both_arms_clean_and_deterministic() {
+        let base =
+            SimConfig::default().with_policy(PolicyConfig::Vap { v_thr: 1.0, strong: false });
+        let a = ablate(&base, 300..302);
+        assert!(a.ok(), "{}", a.describe());
+        assert_eq!(a.on.runs, 2);
+        assert_eq!(a.off.runs, 2);
+        // Only the magnitude arm can reorder egress; FIFO reports zero by
+        // construction, and the whole report replays exactly.
+        assert_eq!(a.off.egress_reorders, 0, "{}", a.describe());
+        assert_eq!(a, ablate(&base, 300..302), "ablation must be deterministic");
     }
 
     #[test]
