@@ -1,0 +1,227 @@
+//! E8 — serve-path benchmark: push-apply throughput and pull-reply cost
+//! through a single `ServerShard`, swept over `apply_threads` ∈ {1, 2, 4}.
+//!
+//! The shard is driven synchronously through [`ServerShard::handle`] with a
+//! null transport swallowing replies, so the numbers isolate the apply path:
+//! WAL encode + striped-store apply (+ forwarded-prefix apply + fan-out
+//! construction), with no bus, client, or scheduler noise. Per-batch handle
+//! latency is recorded exactly (no histogram buckets) and summarized as
+//! p50/p99; rows/sec counts applied updates per wall-clock second.
+//!
+//! Emits `BENCH_serve.json` (CI uploads it next to `BENCH_sim.json`).
+//! Thread-count *speedups* are only meaningful on multi-core runners; the
+//! JSON records whatever the host measured.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use bapps::comm::msg::{Msg, Payload, PushBatch};
+use bapps::comm::{NetSender, Transport};
+use bapps::config::PolicyConfig;
+use bapps::error::Result;
+use bapps::metrics::NetMetrics;
+use bapps::server::{MemPersistence, ServerShard, ShardOptions, TableRegistry};
+use bapps::table::{RowId, RowKind, RowUpdate, TableDesc, TableId};
+use bapps::trace::TraceRecorder;
+use bapps::types::{NodeId, ProcId, ShardId, WorkerId};
+
+/// Swallows every send: the bench measures the shard's handler cost, not
+/// delivery. Fan-out construction (the per-proc `Arc` bumps in `forward`)
+/// still happens, so the clone-free path is what's being timed.
+struct NullTransport {
+    metrics: Arc<NetMetrics>,
+}
+
+impl Transport for NullTransport {
+    fn send(&self, _msg: Msg) -> Result<()> {
+        Ok(())
+    }
+    fn metrics(&self) -> Arc<NetMetrics> {
+        Arc::clone(&self.metrics)
+    }
+}
+
+const TABLE: TableId = TableId(0);
+const ROWS: u64 = 4096;
+const WIDTH: u32 = 64;
+/// Updates per push batch. Large enough that fanning one batch across lanes
+/// amortizes the pool's dispatch + barrier; the default client batcher caps
+/// in the same range.
+const BATCH: usize = 512;
+const WARMUP_BATCHES: usize = 16;
+const BATCHES: usize = 192;
+const PULLS: usize = 20_000;
+
+/// Dense-gradient push workload: `BATCHES` batches of `BATCH` row updates,
+/// rows striding over the table so every store stripe stays hot. Built once
+/// and shared (`Arc` clones) across thread-count runs so each run applies
+/// byte-identical input.
+fn build_batches() -> Vec<PushBatch> {
+    let mut next_row = 0u64;
+    (0..WARMUP_BATCHES + BATCHES)
+        .map(|b| {
+            let updates: Vec<(RowId, RowUpdate)> = (0..BATCH)
+                .map(|i| {
+                    let row = RowId(next_row % ROWS);
+                    next_row += 1;
+                    let seed = (b * BATCH + i) as f32;
+                    let grad: Vec<f32> =
+                        (0..WIDTH).map(|c| (seed + c as f32) * 1e-4 - 0.01).collect();
+                    (row, RowUpdate::Dense(grad))
+                })
+                .collect();
+            PushBatch {
+                table: TABLE,
+                origin: ProcId(0),
+                batch_id: b as u64,
+                updates: Arc::new(updates),
+                clock: 1,
+                epoch: 0,
+            }
+        })
+        .collect()
+}
+
+struct RunStats {
+    apply_threads: u32,
+    rows_per_sec: f64,
+    push_p50_us: f64,
+    push_p99_us: f64,
+    pull_p50_us: f64,
+    pull_p99_us: f64,
+}
+
+fn percentile(sorted_us: &[f64], p: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_us.len() as f64 - 1.0) * p).round() as usize;
+    sorted_us[idx]
+}
+
+fn run_one(apply_threads: u32, batches: &[PushBatch]) -> RunStats {
+    let registry = Arc::new(TableRegistry::default());
+    registry
+        .insert(TableDesc {
+            id: TABLE,
+            num_rows: ROWS,
+            row_width: WIDTH,
+            row_kind: RowKind::Dense,
+            policy: PolicyConfig::BestEffort,
+        })
+        .unwrap();
+    let net = NetSender::from_transport(Arc::new(NullTransport {
+        metrics: Arc::new(NetMetrics::default()),
+    }));
+    let mut opts = ShardOptions::new(Arc::new(MemPersistence::new()));
+    // Never checkpoint: the WAL encode stays in the measured path (it is
+    // part of every live push), but snapshot assembly is not.
+    opts.checkpoint_every = 0;
+    opts.apply_threads = apply_threads;
+    let mut shard = ServerShard::with_options(
+        ShardId(0),
+        1,
+        registry,
+        net,
+        Arc::new(TraceRecorder::new(false)),
+        opts,
+    );
+
+    // --- push phase ---
+    let mut push_us: Vec<f64> = Vec::with_capacity(BATCHES);
+    let mut measured_t0 = Instant::now();
+    for (i, b) in batches.iter().enumerate() {
+        if i == WARMUP_BATCHES {
+            measured_t0 = Instant::now();
+        }
+        let t0 = Instant::now();
+        shard.handle(Msg {
+            src: NodeId::Client(ProcId(0)),
+            dst: NodeId::Server(ShardId(0)),
+            payload: Payload::PushUpdates(b.clone()),
+        });
+        if i >= WARMUP_BATCHES {
+            push_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+    }
+    let push_secs = measured_t0.elapsed().as_secs_f64();
+    let rows_per_sec = (BATCHES * BATCH) as f64 / push_secs;
+
+    // --- pull phase (forwarded-prefix reads; replies share the CoW row) ---
+    let mut pull_us: Vec<f64> = Vec::with_capacity(PULLS);
+    for i in 0..PULLS {
+        let t0 = Instant::now();
+        shard.handle(Msg {
+            src: NodeId::Client(ProcId(0)),
+            dst: NodeId::Server(ShardId(0)),
+            payload: Payload::PullRow {
+                table: TABLE,
+                row: RowId(i as u64 % ROWS),
+                needed_clock: 0,
+                worker: WorkerId(0),
+            },
+        });
+        pull_us.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+
+    push_us.sort_by(f64::total_cmp);
+    pull_us.sort_by(f64::total_cmp);
+    RunStats {
+        apply_threads,
+        rows_per_sec,
+        push_p50_us: percentile(&push_us, 0.50),
+        push_p99_us: percentile(&push_us, 0.99),
+        pull_p50_us: percentile(&pull_us, 0.50),
+        pull_p99_us: percentile(&pull_us, 0.99),
+    }
+}
+
+fn main() {
+    let batches = build_batches();
+    println!("# E8 — serve-path bench: {BATCHES} batches × {BATCH} updates × {WIDTH} cols\n");
+    println!("| threads |     rows/s | push p50 us | push p99 us | pull p50 us | pull p99 us |");
+    println!("|---------|------------|-------------|-------------|-------------|-------------|");
+
+    let mut runs: Vec<RunStats> = Vec::new();
+    for threads in [1u32, 2, 4] {
+        let s = run_one(threads, &batches);
+        println!(
+            "| {:>7} | {:>10.0} | {:>11.1} | {:>11.1} | {:>11.1} | {:>11.1} |",
+            s.apply_threads,
+            s.rows_per_sec,
+            s.push_p50_us,
+            s.push_p99_us,
+            s.pull_p50_us,
+            s.pull_p99_us
+        );
+        runs.push(s);
+    }
+
+    let base = runs[0].rows_per_sec;
+    let cpus = std::thread::available_parallelism().map_or(0, |n| n.get());
+    let mut out = String::from("{\n  \"bench\": \"serve_push_pull\",\n");
+    out.push_str(&format!(
+        "  \"workload\": {{\"rows\": {ROWS}, \"row_width\": {WIDTH}, \"batch\": {BATCH}, \
+         \"batches\": {BATCHES}, \"pulls\": {PULLS}}},\n"
+    ));
+    out.push_str(&format!("  \"host_cpus\": {cpus},\n"));
+    out.push_str("  \"runs\": [\n");
+    for (i, s) in runs.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"apply_threads\": {}, \"rows_per_sec\": {:.0}, \"speedup_vs_1\": {:.3}, \
+             \"push_p50_us\": {:.2}, \"push_p99_us\": {:.2}, \"pull_p50_us\": {:.2}, \
+             \"pull_p99_us\": {:.2}}}{}\n",
+            s.apply_threads,
+            s.rows_per_sec,
+            s.rows_per_sec / base,
+            s.push_p50_us,
+            s.push_p99_us,
+            s.pull_p50_us,
+            s.pull_p99_us,
+            if i + 1 < runs.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write("BENCH_serve.json", &out).expect("write BENCH_serve.json");
+    println!("\nwrote BENCH_serve.json ({} bytes, {} runs)", out.len(), runs.len());
+}

@@ -6,6 +6,7 @@
 //! property-testable.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 
 use crate::comm::batcher::Batcher;
 use crate::comm::msg::{PushBatch, ServerPushBatch};
@@ -22,7 +23,9 @@ use crate::types::{Clock, ProcId, ShardId};
 struct OverlayEntry {
     batch_id: u64,
     clock: Clock,
-    updates: Vec<(RowId, RowUpdate)>,
+    /// Shared with the sent `PushBatch` (recording/retransmitting an
+    /// overlay entry clones the `Arc`, not the update list).
+    updates: Arc<Vec<(RowId, RowUpdate)>>,
 }
 
 /// Client-side state of one table in one process.
@@ -156,7 +159,7 @@ impl TableState {
         let mut v = self.snapshot.get(row).and_then(|sr| sr.data.get(col)).unwrap_or(0.0);
         if let Some(q) = self.overlay.get(&self.desc.shard_of(row, self.num_shards)) {
             for e in q {
-                for (r, u) in &e.updates {
+                for (r, u) in e.updates.iter() {
                     if *r == row {
                         for (c, d) in u.iter_nonzero() {
                             if c == col {
@@ -191,7 +194,7 @@ impl TableState {
     pub fn read_row_into(&self, row: RowId, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.desc.row_width as usize);
         match self.snapshot.get(row) {
-            Some(sr) => match &sr.data {
+            Some(sr) => match sr.data.as_ref() {
                 crate::table::RowData::Dense(d) => out.copy_from_slice(d),
                 sparse => {
                     out.iter_mut().for_each(|x| *x = 0.0);
@@ -204,7 +207,7 @@ impl TableState {
         }
         if let Some(q) = self.overlay.get(&self.desc.shard_of(row, self.num_shards)) {
             for e in q {
-                for (r, u) in &e.updates {
+                for (r, u) in e.updates.iter() {
                     if *r == row {
                         for (c, d) in u.iter_nonzero() {
                             if (c as usize) < out.len() {
@@ -248,7 +251,7 @@ impl TableState {
             });
             if track_mass {
                 let mut masses = Vec::new();
-                for (row, u) in &b.updates {
+                for (row, u) in b.updates.iter() {
                     for (c, d) in u.iter_nonzero() {
                         masses.push(((*row, c), d));
                     }
@@ -358,14 +361,15 @@ impl TableState {
                 }
             }
         }
-        for (row, u) in &push.updates {
+        for (row, u) in push.updates.iter() {
             self.snapshot.apply(*row, u);
             self.snapshot.bump_clock(*row, push.min_clock);
         }
     }
 
-    /// Install a pull reply (full-row snapshot).
-    pub fn apply_pull_reply(&mut self, row: RowId, data: RowData, clock: Clock) {
+    /// Install a pull reply (full-row snapshot). The data `Arc` comes
+    /// straight off the wire message — installing it is clone-free.
+    pub fn apply_pull_reply(&mut self, row: RowId, data: Arc<RowData>, clock: Clock) {
         self.snapshot.install(row, data, clock);
         if let Some(needed) = self.inflight_pulls.get(&row).copied() {
             if clock >= needed {
@@ -414,7 +418,7 @@ impl TableState {
         let mut overlay_v = 0.0;
         if let Some(q) = self.overlay.get(&self.desc.shard_of(row, self.num_shards)) {
             for e in q {
-                for (r, u) in &e.updates {
+                for (r, u) in e.updates.iter() {
                     if *r == row {
                         for (c, d) in u.iter_nonzero() {
                             if c == col {
@@ -563,7 +567,7 @@ mod tests {
             table: TableId(0),
             origin: ProcId(9),
             batch_id: 0,
-            updates: vec![(RowId(3), RowUpdate::single(1, 5.0))],
+            updates: Arc::new(vec![(RowId(3), RowUpdate::single(1, 5.0))]),
             min_clock: 2,
         };
         st.apply_server_push(ProcId(0), &push);
@@ -621,9 +625,9 @@ mod tests {
     fn pull_reply_clears_matching_inflight() {
         let mut st = state(PolicyConfig::Ssp { staleness: 0 });
         st.inflight_pulls.insert(RowId(1), 5);
-        st.apply_pull_reply(RowId(1), RowData::Dense(vec![1.0; 4]), 3);
+        st.apply_pull_reply(RowId(1), Arc::new(RowData::Dense(vec![1.0; 4])), 3);
         assert!(st.inflight_pulls.contains_key(&RowId(1)), "reply too stale to clear");
-        st.apply_pull_reply(RowId(1), RowData::Dense(vec![2.0; 4]), 5);
+        st.apply_pull_reply(RowId(1), Arc::new(RowData::Dense(vec![2.0; 4])), 5);
         assert!(!st.inflight_pulls.contains_key(&RowId(1)));
         assert_eq!(st.read(RowId(1), 0), 2.0);
         assert_eq!(st.effective_clock(RowId(1)), 5);
@@ -636,7 +640,7 @@ mod tests {
             table: TableId(0),
             origin: ProcId(9),
             batch_id: 0,
-            updates: vec![(RowId(2), RowUpdate::Dense(vec![1.0, 1.0, 1.0, 1.0]))],
+            updates: Arc::new(vec![(RowId(2), RowUpdate::Dense(vec![1.0, 1.0, 1.0, 1.0]))]),
             min_clock: 0,
         };
         st.apply_server_push(ProcId(0), &push);

@@ -12,6 +12,7 @@
 //! update visibility the consistency models assume.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::comm::msg::PushBatch;
 use crate::table::{RowId, RowUpdate, TableDesc};
@@ -65,7 +66,7 @@ impl Batcher {
                     table: desc.id,
                     origin: self.origin,
                     batch_id: self.next_batch_id,
-                    updates: chunk.to_vec(),
+                    updates: Arc::new(chunk.to_vec()),
                     clock,
                     // Stamped with the sender's believed shard epoch at send
                     // time (the batcher doesn't track incarnations).
@@ -105,7 +106,7 @@ mod tests {
         let mut seen_rows = 0;
         for (shard, batch) in &batches {
             assert_eq!(batch.clock, 3);
-            for (row, _) in &batch.updates {
+            for (row, _) in batch.updates.iter() {
                 assert_eq!(d.shard_of(*row, 4), *shard, "row routed to wrong shard");
                 seen_rows += 1;
             }

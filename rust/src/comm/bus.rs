@@ -521,7 +521,7 @@ mod tests {
             payload: Payload::PullReply {
                 table: crate::table::TableId(0),
                 row: crate::table::RowId(0),
-                data: crate::table::RowData::Dense(vec![0.0; 25_000]), // 100 KB
+                data: std::sync::Arc::new(crate::table::RowData::Dense(vec![0.0; 25_000])), // 100 KB
                 clock: 0,
                 worker: crate::types::WorkerId(0),
             },

@@ -11,6 +11,8 @@
 //! process vector clock.
 
 
+use std::sync::Arc;
+
 use crate::table::{RowData, RowId, RowUpdate, TableId};
 use crate::types::{Clock, NodeId, ProcId, ShardId, WorkerId};
 
@@ -28,8 +30,13 @@ pub struct PushBatch {
     pub origin: ProcId,
     /// Process-unique, monotonically increasing batch id (FIFO per origin).
     pub batch_id: u64,
-    /// Row-granular deltas, pre-aggregated per row by the batcher.
-    pub updates: Vec<(RowId, RowUpdate)>,
+    /// Row-granular deltas, pre-aggregated per row by the batcher. Shared
+    /// (`Arc`) so the WAL, the visibility tracker's held queue and the
+    /// fan-out to forwarded server pushes reference one allocation instead
+    /// of deep-cloning the update list on every hop. Legal because the
+    /// in-process bus moves Rust values — nothing serializes the batch
+    /// except the (reference-taking) persistence codec.
+    pub updates: Arc<Vec<(RowId, RowUpdate)>>,
     /// Clock timestamp of the newest update in the batch (updates generated
     /// in `(c-1, c]` are stamped `c`, paper §2.1).
     pub clock: Clock,
@@ -58,8 +65,10 @@ pub struct ServerPushBatch {
     pub origin: ProcId,
     /// The origin's batch id (for the receiver's ack).
     pub batch_id: u64,
-    /// Row deltas to apply to the process cache.
-    pub updates: Vec<(RowId, RowUpdate)>,
+    /// Row deltas to apply to the process cache. Shared with the origin
+    /// `PushBatch`: forwarding to `P` processes clones the `Arc`, not the
+    /// update list.
+    pub updates: Arc<Vec<(RowId, RowUpdate)>>,
     /// The shard's min process clock at forward time; receiving caches may
     /// raise row freshness to this value.
     pub min_clock: Clock,
@@ -96,8 +105,9 @@ pub enum Payload {
         table: TableId,
         /// The row id.
         row: RowId,
-        /// Row value snapshot.
-        data: RowData,
+        /// Row value snapshot. Shared with the shard's store (copy-on-write
+        /// rows): serving a pull clones the `Arc`, not the row.
+        data: Arc<RowData>,
         /// Freshness: shard min process clock when the snapshot was taken.
         clock: Clock,
         /// The worker that asked.
@@ -274,12 +284,14 @@ mod tests {
             table: TableId(0),
             origin: ProcId(0),
             batch_id: 0,
-            updates: vec![(RowId(0), RowUpdate::single(0, 1.0))],
+            updates: Arc::new(vec![(RowId(0), RowUpdate::single(0, 1.0))]),
             clock: 0,
             epoch: 0,
         };
         let big = PushBatch {
-            updates: (0..100).map(|i| (RowId(i), RowUpdate::Dense(vec![1.0; 64]))).collect(),
+            updates: Arc::new(
+                (0..100).map(|i| (RowId(i), RowUpdate::Dense(vec![1.0; 64]))).collect(),
+            ),
             ..small.clone()
         };
         assert!(big.wire_bytes() > small.wire_bytes() * 50);

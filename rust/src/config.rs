@@ -229,6 +229,12 @@ pub struct SystemConfig {
     /// Shards checkpoint after this many WAL records (bounds replay
     /// time). 0 = never checkpoint (WAL-only recovery).
     pub checkpoint_every: u64,
+    /// Apply-path worker threads per shard. `1` (default) applies pushes
+    /// inline on the shard event loop; `> 1` fans each batch's row updates
+    /// across a lane-partitioned worker pool over the striped store. Row
+    /// apply order is preserved either way, so results are bit-identical —
+    /// the deterministic simulator pins this to 1 regardless.
+    pub apply_threads: u32,
     /// Directory holding AOT artifacts (`*.hlo.txt`).
     pub artifacts_dir: PathBuf,
     /// Enable the event-trace recorder (costly; used by tests/Fig-1 bench).
@@ -263,7 +269,7 @@ impl SystemConfig {
     /// `bandwidth_bps`, `jitter_us`, `flush_interval_us`,
     /// `max_batch_updates`, `wait_timeout_ms`, `pull_retry_ms`,
     /// `heartbeat_interval_us`, `heartbeat_deadline_us`,
-    /// `checkpoint_every`, `artifacts_dir`, `trace`,
+    /// `checkpoint_every`, `apply_threads`, `artifacts_dir`, `trace`,
     /// `magnitude_priority`, `metrics_listen`, `straggler_workers`
     /// (comma list), `straggler_slowdown`.
     pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
@@ -331,6 +337,9 @@ impl SystemConfig {
         if let Some(v) = parse_u64(&kv, "checkpoint_every")? {
             b = b.checkpoint_every(v);
         }
+        if let Some(v) = parse_u32(&kv, "apply_threads")? {
+            b = b.apply_threads(v);
+        }
         if let Some(v) = kv.get("artifacts_dir") {
             b = b.artifacts_dir(v.clone());
         }
@@ -379,6 +388,9 @@ impl SystemConfig {
                 "heartbeat_deadline_us must exceed heartbeat_interval_us".into(),
             ));
         }
+        if self.apply_threads == 0 {
+            return Err(Error::Config("apply_threads must be ≥ 1".into()));
+        }
         Ok(())
     }
 }
@@ -405,6 +417,7 @@ impl Default for SystemConfigBuilder {
                 heartbeat_interval_us: 0,
                 heartbeat_deadline_us: 200_000,
                 checkpoint_every: 64,
+                apply_threads: 1,
                 artifacts_dir: PathBuf::from("artifacts"),
                 trace: false,
                 magnitude_priority: true,
@@ -473,6 +486,11 @@ impl SystemConfigBuilder {
     /// Set the shard checkpoint cadence in WAL records (0 = never).
     pub fn checkpoint_every(mut self, n: u64) -> Self {
         self.cfg.checkpoint_every = n;
+        self
+    }
+    /// Set apply-path worker threads per shard (1 = inline/sequential).
+    pub fn apply_threads(mut self, n: u32) -> Self {
+        self.cfg.apply_threads = n;
         self
     }
     /// Set the artifacts directory.

@@ -102,6 +102,19 @@ impl ConsistencyModel {
         }
     }
 
+    /// Whether [`Self::release_blocked`] can ever return `true` — i.e.
+    /// whether this model carries the strong-VAP/CVAP server release gate.
+    /// When it cannot, the shard skips per-parameter in-flight mass
+    /// accounting entirely: for ungated models that bookkeeping is pure
+    /// per-push overhead (two hash operations per nonzero column) feeding a
+    /// gate that is a constant `false`.
+    pub fn release_gated(&self) -> bool {
+        matches!(
+            self.cfg,
+            PolicyConfig::Vap { strong: true, .. } | PolicyConfig::Cvap { strong: true, .. }
+        )
+    }
+
     /// Does this model propagate updates eagerly (async flusher active)
     /// rather than only at the clock boundary?
     pub fn eager_propagation(&self) -> bool {
@@ -178,10 +191,16 @@ mod tests {
     #[test]
     fn release_gate_only_for_strong() {
         let weak = ConsistencyModel::new(PolicyConfig::Vap { v_thr: 2.0, strong: false });
+        assert!(!weak.release_gated());
         assert!(!weak.release_blocked(100.0, 100.0, 1.0));
         let strong = ConsistencyModel::new(PolicyConfig::Vap { v_thr: 2.0, strong: true });
+        assert!(strong.release_gated());
         assert!(strong.release_blocked(2.0, 1.0, 1.0));
         assert!(!strong.release_blocked(0.0, 1.0, 1.0));
+        assert!(!ConsistencyModel::new(PolicyConfig::Ssp { staleness: 2 }).release_gated());
+        assert!(!ConsistencyModel::new(PolicyConfig::BestEffort).release_gated());
+        let cvap = PolicyConfig::Cvap { staleness: 1, v_thr: 2.0, strong: true };
+        assert!(ConsistencyModel::new(cvap).release_gated());
     }
 
     #[test]

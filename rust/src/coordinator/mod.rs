@@ -18,7 +18,9 @@ use crate::comm::msg::{Msg, Payload};
 use crate::comm::{Endpoint, Network, Registrar};
 use crate::config::SystemConfig;
 use crate::error::{Error, Result};
-use crate::metrics::{self, CoordMetrics, NetMetrics, Registry, ServeHandle, ShardMetrics};
+use crate::metrics::{
+    self, ApplyPoolMetrics, CoordMetrics, NetMetrics, Registry, ServeHandle, ShardMetrics,
+};
 use crate::server::{MemPersistence, PersistHandle, ServerShard, ShardOptions, TableRegistry};
 use crate::table::TableDesc;
 use crate::trace::TraceRecorder;
@@ -81,6 +83,11 @@ impl PsSystem {
             let mut opts = ShardOptions::new(persists[s].clone());
             opts.checkpoint_every = cfg.checkpoint_every;
             opts.metrics = ShardMetrics::new(hub.clone(), s as u32);
+            opts.apply_threads = cfg.apply_threads;
+            // Pool metric names exist only when the pool does (dead-metric
+            // lint: a counter that cannot fire must not register).
+            opts.pool_metrics =
+                (cfg.apply_threads > 1).then(|| ApplyPoolMetrics::new(&hub, s as u32));
             let shard = ServerShard::with_options(
                 ShardId(s as u32),
                 cfg.num_client_procs,
@@ -422,6 +429,10 @@ fn monitor_loop(
             let mut opts = ShardOptions::new(persists[s as usize].clone());
             opts.checkpoint_every = cfg.checkpoint_every;
             opts.metrics = ShardMetrics::new(hub.clone(), s);
+            opts.apply_threads = cfg.apply_threads;
+            // Re-register returns the same counter cells (same name+labels),
+            // so respawns keep accumulating rather than resetting.
+            opts.pool_metrics = (cfg.apply_threads > 1).then(|| ApplyPoolMetrics::new(&hub, s));
             match ServerShard::recover(
                 ShardId(s),
                 cfg.num_client_procs,

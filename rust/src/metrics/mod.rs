@@ -375,6 +375,9 @@ pub struct ShardMetrics {
     pub pulls_served: Arc<Counter>,
     /// Pull latency: request arrival → reply send (0 when immediate).
     pub pull_serve_us: Arc<Histogram>,
+    /// Batch apply duration: WAL append done → store mutated (covers the
+    /// pooled fan-out barrier when `apply_threads > 1`).
+    pub apply_us: Arc<Histogram>,
     /// Rows in the forwarded-prefix replica.
     pub fwd_rows: Arc<Gauge>,
     /// WAL records appended.
@@ -424,6 +427,7 @@ impl ShardMetrics {
                 "pull latency: arrival to reply (0 = immediate)",
                 l,
             ),
+            apply_us: hub.histogram("shard_apply_us", "push batch apply duration", l),
             fwd_rows: hub.gauge("shard_fwd_rows", "rows in the forwarded-prefix replica", l),
             wal_appends: hub.counter("shard_wal_appends_total", "WAL records appended", l),
             wal_append_us: hub.histogram("shard_wal_append_us", "WAL append duration", l),
@@ -442,6 +446,39 @@ impl ShardMetrics {
     /// Time source for duration measurements (virtual under the sim).
     pub fn now_us(&self) -> u64 {
         self.hub.now_us()
+    }
+}
+
+/// Apply-pool metrics. Only registered (by the coordinator) when a shard
+/// actually runs with `apply_threads > 1` — under the deterministic
+/// simulator (always single-threaded apply) these names must not exist,
+/// or the dead-metric lint would flag them.
+#[derive(Clone)]
+pub struct ApplyPoolMetrics {
+    /// Push batches fanned across the apply-worker lanes.
+    pub batches_fanned: Arc<Counter>,
+    /// Stripe write locks found contended on first try (store-level
+    /// counter deltas, authoritative + forwarded stores combined).
+    pub stripe_contended: Arc<Counter>,
+}
+
+impl ApplyPoolMetrics {
+    /// Register shard `shard`'s pool counters on `hub`.
+    pub fn new(hub: &Registry, shard: u32) -> Self {
+        let s = shard.to_string();
+        let l: &[(&str, &str)] = &[("shard", &s)];
+        ApplyPoolMetrics {
+            batches_fanned: hub.counter(
+                "shard_apply_fanout_total",
+                "push batches fanned across apply-worker lanes",
+                l,
+            ),
+            stripe_contended: hub.counter(
+                "shard_apply_stripe_contended_total",
+                "stripe write locks found contended on first try",
+                l,
+            ),
+        }
     }
 }
 

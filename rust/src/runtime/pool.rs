@@ -3,7 +3,7 @@
 
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Barrier, Mutex};
 use std::thread::JoinHandle;
 
 use crate::error::{Error, Result};
@@ -11,10 +11,14 @@ use crate::error::{Error, Result};
 use super::engine::Engine;
 use super::Tensor;
 
-struct Job {
-    name: String,
-    inputs: Vec<Tensor>,
-    reply: SyncSender<Result<Vec<Tensor>>>,
+enum Job {
+    /// Execute one artifact and reply with its outputs.
+    Run { name: String, inputs: Vec<Tensor>, reply: SyncSender<Result<Vec<Tensor>>> },
+    /// Compile `names` into this thread's engine cache, then rendezvous at
+    /// `barrier` so no thread can dequeue a second warm job before every
+    /// thread holds one (the barrier is what makes warmup cover *all*
+    /// threads rather than however many were idle).
+    Warm { names: Arc<Vec<String>>, barrier: Arc<Barrier>, reply: SyncSender<usize> },
 }
 
 /// A pool of PJRT service threads. Clone-free sharing via `Arc`.
@@ -27,6 +31,9 @@ struct Job {
 pub struct ComputePool {
     tx: Sender<Job>,
     handles: Vec<JoinHandle<()>>,
+    /// Serializes [`ComputePool::warmup`] calls: two concurrent warmups
+    /// would split the threads across two barriers and deadlock.
+    warmup_lock: Mutex<()>,
 }
 
 impl ComputePool {
@@ -55,21 +62,43 @@ impl ComputePool {
                                     Err(_) => break,
                                 }
                             };
-                            let result = (|| {
-                                if engine.is_none() {
-                                    engine = Some(Engine::cpu(dir.clone())?);
+                            match job {
+                                Job::Run { name, inputs, reply } => {
+                                    let result = (|| {
+                                        if engine.is_none() {
+                                            engine = Some(Engine::cpu(dir.clone())?);
+                                        }
+                                        let eng = engine.as_mut().unwrap();
+                                        let comp = eng.load(&name)?;
+                                        comp.run_f32(&inputs)
+                                    })();
+                                    let _ = reply.send(result);
                                 }
-                                let eng = engine.as_mut().unwrap();
-                                let comp = eng.load(&job.name)?;
-                                comp.run_f32(&job.inputs)
-                            })();
-                            let _ = job.reply.send(result);
+                                Job::Warm { names, barrier, reply } => {
+                                    // Best-effort: a missing artifact or a
+                                    // failed engine warms nothing but must
+                                    // still hit the barrier, or the other
+                                    // threads' warm jobs hang.
+                                    let warmed = (|| {
+                                        if engine.is_none() {
+                                            match Engine::cpu(dir.clone()) {
+                                                Ok(e) => engine = Some(e),
+                                                Err(_) => return 0,
+                                            }
+                                        }
+                                        let eng = engine.as_mut().unwrap();
+                                        names.iter().filter(|n| eng.load(n).is_ok()).count()
+                                    })();
+                                    barrier.wait();
+                                    let _ = reply.send(warmed);
+                                }
+                            }
                         }
                     })
                     .map_err(Error::Io)?,
             );
         }
-        Ok(ComputePool { tx, handles })
+        Ok(ComputePool { tx, handles, warmup_lock: Mutex::new(()) })
     }
 
     /// Execute artifact `name` with `inputs`; blocks until the result is
@@ -77,20 +106,35 @@ impl ComputePool {
     pub fn run(&self, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
         let (reply_tx, reply_rx) = std::sync::mpsc::sync_channel(1);
         self.tx
-            .send(Job { name: name.to_string(), inputs, reply: reply_tx })
+            .send(Job::Run { name: name.to_string(), inputs, reply: reply_tx })
             .map_err(|_| Error::Runtime("compute pool stopped".into()))?;
         reply_rx.recv().map_err(|_| Error::Runtime("compute pool dropped job".into()))?
     }
 
-    /// Warm the caches: compile `names` on every service thread so the
-    /// first hot-path call doesn't pay compilation. Best-effort.
-    pub fn warmup(&self, names: &[&str]) {
-        // A run with empty inputs will fail execution but still compile;
-        // instead we just issue a real load via a zero-input probe only
-        // when the artifact takes zero inputs. Simplest robust warmup:
-        // callers run one real step; this helper is a no-op placeholder
-        // kept for API stability.
-        let _ = names;
+    /// Warm the caches: compile `names` on **every** service thread so the
+    /// first hot-path call doesn't pay compilation. One warm job per
+    /// thread, with a barrier keeping any thread from taking two, so
+    /// coverage is exact rather than "whoever was idle". Best-effort per
+    /// artifact (missing ones are skipped); blocks until all threads are
+    /// done and returns the total number of successful loads.
+    pub fn warmup(&self, names: &[&str]) -> usize {
+        let _serial = self.warmup_lock.lock().unwrap();
+        let n = self.handles.len();
+        let names: Arc<Vec<String>> = Arc::new(names.iter().map(|s| s.to_string()).collect());
+        let barrier = Arc::new(Barrier::new(n));
+        let (reply_tx, reply_rx) = std::sync::mpsc::sync_channel(n);
+        for _ in 0..n {
+            let job = Job::Warm {
+                names: Arc::clone(&names),
+                barrier: Arc::clone(&barrier),
+                reply: reply_tx.clone(),
+            };
+            if self.tx.send(job).is_err() {
+                return 0; // pool stopped
+            }
+        }
+        drop(reply_tx);
+        reply_rx.iter().sum()
     }
 
     /// Stop the pool and join service threads.
@@ -111,6 +155,18 @@ mod tests {
         let pool = ComputePool::start("/nope", 1).unwrap();
         let err = pool.run("missing", vec![]).unwrap_err();
         assert!(matches!(err, Error::MissingArtifact(_)), "{err}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn warmup_covers_all_threads_and_tolerates_missing_artifacts() {
+        // No artifacts exist under /nope: every load fails, so the total is
+        // 0 — but the call must complete (barrier reached on all threads)
+        // and the pool must stay usable afterwards.
+        let pool = ComputePool::start("/nope", 3).unwrap();
+        assert_eq!(pool.warmup(&["logreg_grad", "missing"]), 0);
+        assert_eq!(pool.warmup(&[]), 0);
+        assert!(pool.run("missing", vec![]).is_err());
         pool.shutdown();
     }
 

@@ -1,0 +1,168 @@
+//! Parallel push-apply worker pool.
+//!
+//! The shard event loop stays the single sequencer — it receives batches in
+//! bus order and hands each one to the pool, which fans the row updates
+//! across worker lanes and **barriers** before the loop touches the next
+//! message. Lane assignment is `stripe_of(row) % num_lanes`: every row maps
+//! to exactly one lane for the lifetime of the pool, so the updates touching
+//! a given row are always applied by the same worker, in slice order. That
+//! preserves the per-row apply order of the sequential path exactly — float
+//! addition is order-sensitive, and the deterministic simulator's per-seed
+//! byte-identity depends on it.
+//!
+//! Workers never contend on a stripe: distinct lanes own disjoint stripe
+//! sets, so the striped [`TableStore`] locks are uncontended during a
+//! fan-out (pulls may still share stripes read-side, which `RwLock` allows).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::table::{RowId, RowUpdate, TableStore};
+
+/// One fan-out unit: apply `updates` (the lane's subset) against `store`.
+struct Job {
+    store: Arc<TableStore>,
+    updates: Arc<Vec<(RowId, RowUpdate)>>,
+    done: Sender<()>,
+}
+
+/// Fixed pool of apply workers, one lane each.
+///
+/// `apply` dispatches a batch to every lane and blocks until all lanes
+/// report done — a per-batch barrier, so from the event loop's perspective
+/// the call is indistinguishable from a sequential apply (just faster on
+/// multi-core hosts).
+pub struct ApplyPool {
+    lanes: Vec<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    batches: AtomicU64,
+}
+
+impl std::fmt::Debug for ApplyPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ApplyPool").field("lanes", &self.lanes.len()).finish()
+    }
+}
+
+impl ApplyPool {
+    /// Spawn `threads` workers for shard `shard` (thread names
+    /// `apply{shard}-{lane}`). `threads` is clamped to ≥ 1; a 1-lane pool
+    /// is functional but pointless — callers keep the inline path for that.
+    pub fn new(shard: u32, threads: u32) -> Self {
+        let threads = threads.max(1) as usize;
+        let mut lanes = Vec::with_capacity(threads);
+        let mut workers = Vec::with_capacity(threads);
+        for lane in 0..threads {
+            let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
+            // Receiver into a worker thread; Mutex only to satisfy the
+            // builder closure's move semantics cleanly.
+            let rx = Mutex::new(rx);
+            let handle = std::thread::Builder::new()
+                .name(format!("apply{shard}-{lane}"))
+                .spawn(move || {
+                    let rx = rx.lock().expect("apply lane rx");
+                    while let Ok(job) = rx.recv() {
+                        job.store.apply_lane(&job.updates, lane, threads);
+                        // Receiver may be gone if the dispatcher panicked
+                        // mid-barrier; nothing to do but drop the signal.
+                        let _ = job.done.send(());
+                    }
+                })
+                .expect("spawn apply worker");
+            lanes.push(tx);
+            workers.push(handle);
+        }
+        ApplyPool { lanes, workers, batches: AtomicU64::new(0) }
+    }
+
+    /// Number of lanes (worker threads).
+    pub fn num_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Batches fanned out so far (drained by the shard's metrics hook).
+    pub fn batches_fanned(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Fan one batch's updates across all lanes and wait for every lane to
+    /// finish (barrier). Row → lane assignment is stable, so per-row apply
+    /// order equals the sequential slice order.
+    pub fn apply(&self, store: &Arc<TableStore>, updates: &Arc<Vec<(RowId, RowUpdate)>>) {
+        let (done_tx, done_rx) = channel();
+        for lane in &self.lanes {
+            let job = Job {
+                store: Arc::clone(store),
+                updates: Arc::clone(updates),
+                done: done_tx.clone(),
+            };
+            lane.send(job).expect("apply lane died");
+        }
+        drop(done_tx);
+        for _ in 0..self.lanes.len() {
+            done_rx.recv().expect("apply lane died mid-batch");
+        }
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+impl Drop for ApplyPool {
+    fn drop(&mut self) {
+        // Closing the senders ends each worker's recv loop.
+        self.lanes.clear();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::table::RowKind;
+
+    fn seq_store(updates: &[(RowId, RowUpdate)]) -> TableStore {
+        let store = TableStore::new(RowKind::Dense, 4);
+        for (row, u) in updates {
+            store.apply(*row, u);
+        }
+        store
+    }
+
+    fn make_updates(n: u64, rows: u64) -> Vec<(RowId, RowUpdate)> {
+        (0..n)
+            .map(|i| (RowId(i % rows), RowUpdate::single((i % 4) as u32, 0.1 + i as f32 * 0.01)))
+            .collect()
+    }
+
+    #[test]
+    fn pooled_apply_matches_sequential() {
+        let updates = Arc::new(make_updates(500, 23));
+        let expect = seq_store(&updates);
+        for threads in [1u32, 2, 3, 4] {
+            let pool = ApplyPool::new(0, threads);
+            let store = Arc::new(TableStore::new(RowKind::Dense, 4));
+            pool.apply(&store, &updates);
+            for (row, sr) in expect.snapshot_rows() {
+                let got = store.get(row).expect("row present");
+                assert_eq!(*got.data, *sr.data, "threads={threads} row={row:?}");
+            }
+            assert_eq!(store.len(), expect.len());
+        }
+    }
+
+    #[test]
+    fn barrier_completes_before_return() {
+        let pool = ApplyPool::new(1, 4);
+        let store = Arc::new(TableStore::new(RowKind::Dense, 4));
+        for _ in 0..50 {
+            let updates = Arc::new(make_updates(64, 64));
+            pool.apply(&store, &updates);
+        }
+        // Every apply barriered, so all 50 * 64 updates are visible now.
+        assert_eq!(pool.batches_fanned(), 50);
+        assert_eq!(store.len(), 64);
+    }
+}

@@ -20,10 +20,12 @@
 //! which makes every per-table mutation trivially atomic — the same
 //! design as Petuum PS's server threads.
 
+mod apply;
 mod persist;
 mod shard;
 mod visibility;
 
+pub use apply::ApplyPool;
 pub use persist::{
     FilePersistence, MemPersistence, PersistHandle, Persistence, RowImage, ShardCheckpoint,
     TableImage, WalRecord,

@@ -62,8 +62,10 @@ pub enum WalRecord {
 }
 
 /// Materialized rows of one store, `(row, value, row clock)`, sorted by row
-/// id for deterministic encoding.
-pub type RowImage = Vec<(RowId, RowData, Clock)>;
+/// id for deterministic encoding. Values are `Arc`-shared with the live
+/// store (copy-on-write rows), so imaging a table for a checkpoint never
+/// deep-copies row data — the codec encodes through the references.
+pub type RowImage = Vec<(RowId, Arc<RowData>, Clock)>;
 
 /// Checkpoint of one table's state on one shard.
 #[derive(Debug, Clone)]
@@ -320,7 +322,7 @@ fn put_push_batch(b: &mut Vec<u8>, p: &PushBatch) {
     put_u32(b, p.clock);
     put_u32(b, p.epoch);
     put_u32(b, p.updates.len() as u32);
-    for (row, u) in &p.updates {
+    for (row, u) in p.updates.iter() {
         put_u64(b, row.0);
         put_row_update(b, u);
     }
@@ -338,7 +340,7 @@ fn get_push_batch(r: &mut Reader) -> Result<PushBatch> {
         let row = RowId(r.u64()?);
         updates.push((row, get_row_update(r)?));
     }
-    Ok(PushBatch { table, origin, batch_id, updates, clock, epoch })
+    Ok(PushBatch { table, origin, batch_id, updates: Arc::new(updates), clock, epoch })
 }
 
 /// Encode one WAL record (without framing).
@@ -396,7 +398,7 @@ fn get_row_image(r: &mut Reader) -> Result<RowImage> {
     let mut rows = Vec::with_capacity(n);
     for _ in 0..n {
         let row = RowId(r.u64()?);
-        let data = get_row_data(r)?;
+        let data = Arc::new(get_row_data(r)?);
         rows.push((row, data, r.u32()?));
     }
     Ok(rows)
@@ -656,12 +658,10 @@ impl Persistence for FilePersistence {
 // Checkpoint assembly helpers (shard ⇄ image).
 // ---------------------------------------------------------------------------
 
-/// Deterministically image a `TableStore` (rows sorted by id).
+/// Deterministically image a `TableStore` (rows sorted by id). The values
+/// are `Arc` clones of the live rows — O(rows), not O(bytes).
 pub fn image_store(store: &TableStore) -> RowImage {
-    let mut rows: RowImage =
-        store.iter().map(|(id, sr)| (id, sr.data.clone(), sr.clock)).collect();
-    rows.sort_unstable_by_key(|(id, _, _)| id.0);
-    rows
+    store.snapshot_rows().into_iter().map(|(id, sr)| (id, sr.data, sr.clock)).collect()
 }
 
 /// Deterministically image an applied-frontier map (sorted by origin).
@@ -681,10 +681,10 @@ mod tests {
             table: TableId(0),
             origin: ProcId(1),
             batch_id: id,
-            updates: vec![
+            updates: Arc::new(vec![
                 (RowId(3), RowUpdate::Dense(vec![1.0, -2.5])),
                 (RowId(9), RowUpdate::Sparse(vec![(0, 0.5), (7, -0.25)])),
-            ],
+            ]),
             clock: 4,
             epoch: 2,
         }
@@ -699,10 +699,10 @@ mod tests {
             tables: vec![TableImage {
                 id: TableId(0),
                 store: vec![
-                    (RowId(1), RowData::Dense(vec![1.0, 2.0]), 3),
-                    (RowId(4), RowData::Sparse(sparse.clone()), 2),
+                    (RowId(1), Arc::new(RowData::Dense(vec![1.0, 2.0])), 3),
+                    (RowId(4), Arc::new(RowData::Sparse(sparse.clone())), 2),
                 ],
-                fwd: vec![(RowId(1), RowData::Dense(vec![1.0, 0.0]), 3)],
+                fwd: vec![(RowId(1), Arc::new(RowData::Dense(vec![1.0, 0.0])), 3)],
                 applied_upto: vec![(ProcId(0), 7), (ProcId(1), 2)],
                 vis: VisibilityImage {
                     num_procs: 2,

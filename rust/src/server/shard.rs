@@ -1,7 +1,7 @@
 //! The shard event loop.
 
-use std::sync::RwLock;
 use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
 
 use crate::clock::VectorClock;
 use crate::comm::msg::{Msg, Payload, PushBatch, ServerPushBatch};
@@ -9,12 +9,13 @@ use crate::comm::{Endpoint, NetSender};
 use crate::config::PolicyConfig;
 use crate::consistency::ConsistencyModel;
 use crate::error::{Error, Result};
-use crate::metrics::ShardMetrics;
-use crate::table::{RowData, RowId, TableDesc, TableId, TableStore};
+use crate::metrics::{ApplyPoolMetrics, ShardMetrics};
+use crate::table::{RowData, RowId, RowUpdate, TableDesc, TableId, TableStore};
 use crate::types::{Clock, NodeId, ProcId, ShardId, WorkerId};
 
 use crate::trace::{Event, TraceRecorder};
 
+use super::apply::ApplyPool;
 use super::persist::{self, MemPersistence, PersistHandle, ShardCheckpoint, TableImage, WalRecord};
 use super::visibility::VisibilityTracker;
 
@@ -37,6 +38,17 @@ pub struct ShardOptions {
     /// Metric handles (registered on the system's hub registry by the
     /// coordinator/harness; a throwaway registry by default).
     pub metrics: ShardMetrics,
+    /// Apply-path worker threads. `1` (the default, and the only value the
+    /// deterministic simulator uses) keeps the sequential inline path; `> 1`
+    /// fans each batch's updates across a lane-partitioned [`ApplyPool`].
+    /// Either way per-row apply order is the batch slice order, so the
+    /// resulting float state is bit-identical.
+    pub apply_threads: u32,
+    /// Pool-path metric handles. `None` (default) registers nothing — the
+    /// coordinator sets this only when `apply_threads > 1`, so the metric
+    /// name set is independent of thread count under the simulator's
+    /// dead-metric lint.
+    pub pool_metrics: Option<ApplyPoolMetrics>,
 }
 
 impl ShardOptions {
@@ -47,6 +59,8 @@ impl ShardOptions {
             checkpoint_every: DEFAULT_CHECKPOINT_EVERY,
             skip_wal_replay: false,
             metrics: ShardMetrics::default(),
+            apply_threads: 1,
+            pool_metrics: None,
         }
     }
 }
@@ -89,7 +103,7 @@ impl TableRegistry {
 struct ServerTable {
     desc: TableDesc,
     model: ConsistencyModel,
-    store: TableStore,
+    store: Arc<TableStore>,
     /// Forwarded-prefix replica: batches are applied here at *forward*
     /// time (admission through the release gate), not at arrival. Pull
     /// replies are served from this store, never from `store`: a reply
@@ -101,7 +115,7 @@ struct ServerTable {
     /// reply is delivered before it (already inside the snapshot), and
     /// every push forwarded after it is delivered after (applied once on
     /// top).
-    fwd: TableStore,
+    fwd: Arc<TableStore>,
     /// Highest applied batch id per origin (monotone; FIFO links).
     applied_upto: HashMap<ProcId, u64>,
     vis: VisibilityTracker,
@@ -110,8 +124,8 @@ struct ServerTable {
 impl ServerTable {
     fn new(desc: TableDesc, num_procs: u32) -> Self {
         let model = ConsistencyModel::new(desc.policy);
-        let store = TableStore::new(desc.row_kind, desc.row_width);
-        let fwd = TableStore::new(desc.row_kind, desc.row_width);
+        let store = Arc::new(TableStore::new(desc.row_kind, desc.row_width));
+        let fwd = Arc::new(TableStore::new(desc.row_kind, desc.row_width));
         ServerTable {
             desc,
             model,
@@ -164,6 +178,17 @@ pub struct ServerShard {
     replaying: bool,
     /// Metric handles (see [`ShardOptions::metrics`]).
     metrics: ShardMetrics,
+    /// Lane-partitioned apply workers; `None` keeps the sequential inline
+    /// path (see [`ShardOptions::apply_threads`]).
+    pool: Option<ApplyPool>,
+    /// Pool-path metric handles (coordinator-registered; see
+    /// [`ShardOptions::pool_metrics`]).
+    pool_metrics: Option<ApplyPoolMetrics>,
+    /// Stripe-contention total already exported to `pool_metrics` (the
+    /// stores keep running counters; the shard exports deltas).
+    contended_seen: u64,
+    /// Pool fan-out total already exported to `pool_metrics`.
+    fanned_seen: u64,
 }
 
 impl ServerShard {
@@ -209,6 +234,7 @@ impl ServerShard {
     ) -> Self {
         let vclock = VectorClock::new((0..num_client_procs).map(ProcId));
         let epoch = opts.persist.epoch().unwrap_or(0);
+        let pool = (opts.apply_threads > 1).then(|| ApplyPool::new(id.0, opts.apply_threads));
         ServerShard {
             id,
             num_client_procs,
@@ -226,6 +252,10 @@ impl ServerShard {
             skip_wal_replay: opts.skip_wal_replay,
             replaying: false,
             metrics: opts.metrics,
+            pool,
+            pool_metrics: opts.pool_metrics,
+            contended_seen: 0,
+            fanned_seen: 0,
         }
     }
 
@@ -477,9 +507,11 @@ impl ServerShard {
         self.vclock.min_clock()
     }
 
-    /// Read a row snapshot directly (tests).
-    pub fn row_snapshot(&self, table: TableId, row: RowId) -> Option<RowData> {
-        self.tables.get(&table).and_then(|t| t.store.get(row)).map(|sr| sr.data.clone())
+    /// Read a row snapshot directly (tests). The returned `Arc` shares the
+    /// live copy-on-write row; later applies replace it, they do not mutate
+    /// through it.
+    pub fn row_snapshot(&self, table: TableId, row: RowId) -> Option<Arc<RowData>> {
+        self.tables.get(&table).and_then(|t| t.store.get(row)).map(|sr| sr.data)
     }
 
     fn table(&mut self, id: TableId) -> &mut ServerTable {
@@ -527,40 +559,86 @@ impl ServerShard {
             });
         }
         // Write-ahead: log before mutating, so a crash mid-handler replays
-        // the whole record rather than losing half of it.
+        // the whole record rather than losing half of it. The batch clone is
+        // an `Arc` bump — the WAL record shares the update list.
         self.log(WalRecord::Push(batch.clone()));
         let batch_table = batch.table;
-        let t = self.table(batch.table);
-        // Apply to the authoritative partition.
-        for (row, u) in &batch.updates {
-            t.store.apply(*row, u);
+        // Apply to the authoritative partition (pooled when configured).
+        let apply_t0 = self.metrics.now_us();
+        let store = Arc::clone(&self.table(batch_table).store);
+        self.apply_batch(&store, &batch.updates);
+        if !self.replaying {
+            self.metrics.apply_us.record(self.metrics.now_us().saturating_sub(apply_t0));
         }
-        t.applied_upto.insert(batch.origin, batch.batch_id);
-        t.vis.observe(&batch);
         // Admit through the (strong-VAP) release gate, then forward. The
         // forwarded-prefix replica advances in lockstep with the forwards
         // so pull replies compose exactly-once with in-flight pushes.
-        if let Some(b) = t.vis.admit(&t.model, batch) {
-            for (row, u) in &b.updates {
-                t.fwd.apply(*row, u);
-            }
+        let (admitted, fwd) = {
+            let t = self.table(batch_table);
+            t.applied_upto.insert(batch.origin, batch.batch_id);
+            t.vis.observe(&batch);
+            let admitted = t.vis.admit(&t.model, batch);
+            (admitted, Arc::clone(&t.fwd))
+        };
+        if let Some(b) = admitted {
+            self.apply_batch(&fwd, &b.updates);
             if !self.replaying {
                 let min_clock = self.effective_min();
                 Self::forward(&self.net, self.id, num_procs, min_clock, b);
             }
         }
+        self.export_pool_metrics();
         let fwd_rows = self.tables[&batch_table].fwd.len();
         self.metrics.fwd_rows.set(fwd_rows as f64);
         self.maybe_checkpoint();
     }
 
+    /// Apply one batch's updates to `store` — fanned across the worker pool
+    /// when one is configured, inline otherwise. Both paths apply each row's
+    /// updates in slice order (the pool's lanes partition rows), so the
+    /// float results are bit-identical.
+    fn apply_batch(&self, store: &Arc<TableStore>, updates: &Arc<Vec<(RowId, RowUpdate)>>) {
+        match &self.pool {
+            Some(pool) => pool.apply(store, updates),
+            None => {
+                for (row, u) in updates.iter() {
+                    store.apply(*row, u);
+                }
+            }
+        }
+    }
+
+    /// Export pool-path counters (fan-outs, stripe-contention deltas) to the
+    /// coordinator-registered handles, when present.
+    fn export_pool_metrics(&mut self) {
+        if self.replaying || self.pool_metrics.is_none() {
+            return;
+        }
+        let fanned = self.pool.as_ref().map_or(0, |p| p.batches_fanned());
+        let contended: u64 =
+            self.tables.values().map(|t| t.store.contended() + t.fwd.contended()).sum();
+        let fanned_delta = fanned.saturating_sub(self.fanned_seen);
+        let contended_delta = contended.saturating_sub(self.contended_seen);
+        self.fanned_seen = fanned;
+        self.contended_seen = contended;
+        let pm = self.pool_metrics.as_ref().unwrap();
+        if fanned_delta > 0 {
+            pm.batches_fanned.add(fanned_delta);
+        }
+        if contended_delta > 0 {
+            pm.stripe_contended.add(contended_delta);
+        }
+    }
+
     fn forward(net: &NetSender, shard: ShardId, num_procs: u32, min_clock: Clock, b: PushBatch) {
         for p in 0..num_procs {
+            // Per-process fan-out shares the origin batch's update list —
+            // `P` forwarded pushes, one allocation.
             let push = ServerPushBatch {
                 table: b.table,
                 origin: b.origin,
                 batch_id: b.batch_id,
-                updates: b.updates.clone(),
+                updates: Arc::clone(&b.updates),
                 min_clock,
             };
             let _ = net.send(Msg {
@@ -600,12 +678,14 @@ impl ServerShard {
         let min_clock = self.effective_min();
         let t = self.table(table);
         // Serve the *forwarded prefix*, not the authoritative store: see
-        // the `ServerTable::fwd` docs for the exactly-once argument.
+        // the `ServerTable::fwd` docs for the exactly-once argument. The
+        // reply shares the copy-on-write row — no deep copy on the pull
+        // hot path.
         let data = t
             .fwd
             .get(row)
-            .map(|sr| sr.data.clone())
-            .unwrap_or_else(|| RowData::zeros(t.desc.row_kind, t.desc.row_width));
+            .map(|sr| sr.data)
+            .unwrap_or_else(|| Arc::new(RowData::zeros(t.desc.row_kind, t.desc.row_width)));
         let _ = self.net.send(Msg {
             src: NodeId::Server(self.id),
             dst: requester,
@@ -657,11 +737,9 @@ impl ServerShard {
         // Mass released: forward any batches the gate now admits, keeping
         // the forwarded-prefix replica in lockstep.
         {
-            let t = self.table(table);
+            let fwd = Arc::clone(&self.table(table).fwd);
             for b in &released {
-                for (row, u) in &b.updates {
-                    t.fwd.apply(*row, u);
-                }
+                self.apply_batch(&fwd, &b.updates);
             }
         }
         if !self.replaying {
@@ -719,7 +797,7 @@ mod tests {
                 table: TableId(0),
                 origin: ProcId(origin),
                 batch_id: id,
-                updates: vec![(RowId(row), RowUpdate::single(0, delta))],
+                updates: Arc::new(vec![(RowId(row), RowUpdate::single(0, delta))]),
                 clock: 1,
                 epoch: 0,
             }),
@@ -893,7 +971,7 @@ mod tests {
                 table: TableId(0),
                 origin: ProcId(origin),
                 batch_id: id,
-                updates: vec![(RowId(row), RowUpdate::single(0, delta))],
+                updates: Arc::new(vec![(RowId(row), RowUpdate::single(0, delta))]),
                 clock: 1,
                 epoch,
             }),

@@ -65,7 +65,7 @@ impl VisibilityTracker {
     /// Record the magnitudes contained in a freshly applied batch (keeps
     /// `u_obs` current regardless of gating).
     pub fn observe(&mut self, batch: &PushBatch) {
-        for (_, u) in &batch.updates {
+        for (_, u) in batch.updates.iter() {
             self.u_obs = self.u_obs.max(u.magnitude());
         }
     }
@@ -82,7 +82,7 @@ impl VisibilityTracker {
             self.held.entry(batch.origin).or_default().push_back(batch);
             return None;
         }
-        self.start_flight(&batch);
+        self.start_flight(model, &batch);
         Some(batch)
     }
 
@@ -158,7 +158,7 @@ impl VisibilityTracker {
                 };
                 if passes {
                     let batch = self.held.get_mut(&origin).unwrap().pop_front().unwrap();
-                    self.start_flight(&batch);
+                    self.start_flight(model, &batch);
                     out.push(batch);
                     progressed = true;
                 }
@@ -195,7 +195,12 @@ impl VisibilityTracker {
     }
 
     fn gate_passes(&self, model: &ConsistencyModel, batch: &PushBatch) -> bool {
-        for (row, u) in &batch.updates {
+        if !model.release_gated() {
+            // The gate is a constant `false` for this model; skip the
+            // per-parameter walk entirely.
+            return true;
+        }
+        for (row, u) in batch.updates.iter() {
             for (col, v) in u.iter_nonzero() {
                 let key = (*row, col);
                 let inflight = self.inflight.get(&key).copied().unwrap_or(0.0);
@@ -207,10 +212,16 @@ impl VisibilityTracker {
         true
     }
 
-    fn start_flight(&mut self, batch: &PushBatch) {
+    fn start_flight(&mut self, model: &ConsistencyModel, batch: &PushBatch) {
         self.pending.insert((batch.origin, batch.batch_id), BTreeSet::new());
+        // Per-parameter mass is only consumed by the strong-VAP/CVAP release
+        // gate; for every other model it would be dead weight accumulated on
+        // the push hot path (and `ack` already tolerates its absence).
+        if !model.release_gated() {
+            return;
+        }
         let mut masses = Vec::new();
-        for (row, u) in &batch.updates {
+        for (row, u) in batch.updates.iter() {
             for (col, v) in u.iter_nonzero() {
                 let key = (*row, col);
                 *self.inflight.entry(key).or_insert(0.0) += v.abs();
@@ -298,7 +309,7 @@ mod tests {
             table: TableId(0),
             origin: ProcId(origin),
             batch_id: id,
-            updates: vec![(RowId(row), RowUpdate::single(0, delta))],
+            updates: std::sync::Arc::new(vec![(RowId(row), RowUpdate::single(0, delta))]),
             clock: 0,
             epoch: 0,
         }

@@ -335,7 +335,7 @@ impl Oracle {
                 self.applied_batches += 1;
                 if self.policy.v_thr().is_some() {
                     let mut masses: Vec<((u64, u32), f64)> = Vec::new();
-                    for (row, u) in &b.updates {
+                    for (row, u) in b.updates.iter() {
                         for (col, v) in u.iter_nonzero() {
                             masses.push(((row.0, col), v as f64));
                         }
@@ -610,6 +610,9 @@ impl Sim {
             o.checkpoint_every = cfg.checkpoint_every;
             o.skip_wal_replay = cfg.sabotage == Sabotage::SkipWalReplay;
             o.metrics = ShardMetrics::new(hub.clone(), s as u32);
+            // Pool metrics stay unregistered under the sim regardless of
+            // thread count, so snapshots carry one name set per seed.
+            o.apply_threads = cfg.apply_threads;
             o
         };
         let mut shards: Vec<Option<ServerShard>> = (0..cfg.shards)

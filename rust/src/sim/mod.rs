@@ -226,6 +226,10 @@ pub struct SimConfig {
     /// (`usize::MAX` = everything). Partial drains keep the egress queue
     /// populated so the drain *order* is actually observable.
     pub flush_max_rows: usize,
+    /// Shard apply-path worker threads. The pool preserves per-row apply
+    /// order, so any value must leave every per-seed snapshot byte-identical
+    /// to `1` — the determinism suite pins exactly that. Default 1 (inline).
+    pub apply_threads: u32,
 }
 
 impl Default for SimConfig {
@@ -250,6 +254,7 @@ impl Default for SimConfig {
             checkpoint_every: 16,
             priority: true,
             flush_max_rows: usize::MAX,
+            apply_threads: 1,
         }
     }
 }

@@ -4,17 +4,45 @@
 //! metadata the clock-bounded models key off: on the **server** it is the
 //! min process clock at the time the row version was formed; in the
 //! **process cache** it records how fresh the cached copy is.
+//!
+//! ## Concurrency
+//!
+//! The store is **stripe-locked**: rows hash into [`NUM_STRIPES`]
+//! independent `RwLock<HashMap>` stripes, so writers on different stripes
+//! never contend and readers never block writers on other stripes. All
+//! methods take `&self`; share the store across threads with `Arc`.
+//!
+//! Row values are `Arc<RowData>` **copy-on-write**: reading a row
+//! ([`TableStore::get`]) hands out a cheap `Arc` clone instead of
+//! deep-copying the vector, which is what lets pull replies and checkpoint
+//! images borrow row data without cloning it. Writers mutate through
+//! `Arc::make_mut`, which copies only when a reader still holds the old
+//! version — the common uncontended case mutates in place.
+//!
+//! Byte accounting ([`TableStore::approx_bytes`]) is a running atomic
+//! counter maintained on `apply`/`install`/`evict`, so cache-accounting
+//! callers pay O(1) instead of a full scan.
 
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock, RwLockWriteGuard, TryLockError};
 
 use crate::table::{RowData, RowId, RowKind, RowUpdate};
 use crate::types::Clock;
 
+/// Lock stripes per store (power of two so the stripe index is a mask).
+pub const NUM_STRIPES: usize = 16;
+
+/// Fixed per-row bookkeeping overhead charged by the byte accounting
+/// (id + clock + map slot), matching the historical `approx_bytes` formula.
+const ROW_OVERHEAD: usize = 16;
+
 /// One cached/stored row with its freshness clock.
 #[derive(Debug, Clone)]
 pub struct StoredRow {
-    /// Current value.
-    pub data: RowData,
+    /// Current value (copy-on-write; cloning a `StoredRow` is O(1)).
+    pub data: Arc<RowData>,
     /// Freshness: all updates with timestamp `≤ clock` from every worker
     /// are reflected in `data` (clock-bounded models), best-effort newer
     /// updates may also be included (paper eq. (1) "best-effort in-window").
@@ -27,13 +55,39 @@ pub struct StoredRow {
 pub struct TableStore {
     kind: RowKind,
     width: u32,
-    rows: HashMap<RowId, StoredRow>,
+    stripes: Box<[RwLock<HashMap<RowId, StoredRow>>]>,
+    /// Running `approx_bytes` total (O(1) reads for cache accounting).
+    bytes: AtomicUsize,
+    /// Materialized row count.
+    rows: AtomicUsize,
+    /// Stripe write-lock acquisitions that found the lock held (contention
+    /// diagnostic for the parallel apply path).
+    contended: AtomicU64,
+}
+
+/// SplitMix64 finalizer — decorrelates sequential row ids across stripes
+/// (same mixer family as `TableDesc::shard_of`, different constants path
+/// so stripe choice is independent of shard choice).
+fn mix(row: u64) -> u64 {
+    let mut z = row.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
 }
 
 impl TableStore {
     /// New empty store for rows of the given shape.
     pub fn new(kind: RowKind, width: u32) -> Self {
-        TableStore { kind, width, rows: HashMap::new() }
+        let stripes: Vec<RwLock<HashMap<RowId, StoredRow>>> =
+            (0..NUM_STRIPES).map(|_| RwLock::new(HashMap::new())).collect();
+        TableStore {
+            kind,
+            width,
+            stripes: stripes.into_boxed_slice(),
+            bytes: AtomicUsize::new(0),
+            rows: AtomicUsize::new(0),
+            contended: AtomicU64::new(0),
+        }
     }
 
     /// Row width (dense width / sparse column bound).
@@ -46,85 +100,194 @@ impl TableStore {
         self.kind
     }
 
-    /// Read-only access; `None` if the row has never been touched
-    /// (semantically a zero row at clock 0).
-    pub fn get(&self, row: RowId) -> Option<&StoredRow> {
-        self.rows.get(&row)
+    /// Stripe index of a row (stable for the store's lifetime; the apply
+    /// pool partitions batch updates by this).
+    pub fn stripe_of(&self, row: RowId) -> usize {
+        (mix(row.0) as usize) & (NUM_STRIPES - 1)
     }
 
-    /// Mutable access, materializing a zero row on first touch.
-    pub fn get_or_init(&mut self, row: RowId) -> &mut StoredRow {
-        let (kind, width) = (self.kind, self.width);
-        self.rows
-            .entry(row)
-            .or_insert_with(|| StoredRow { data: RowData::zeros(kind, width), clock: 0 })
+    /// Number of lock stripes.
+    pub fn num_stripes(&self) -> usize {
+        NUM_STRIPES
+    }
+
+    /// Write-lock one stripe, counting contention when the lock was held.
+    fn write_stripe(&self, i: usize) -> RwLockWriteGuard<'_, HashMap<RowId, StoredRow>> {
+        match self.stripes[i].try_write() {
+            Ok(g) => g,
+            Err(TryLockError::WouldBlock) => {
+                self.contended.fetch_add(1, Ordering::Relaxed);
+                self.stripes[i].write().unwrap()
+            }
+            Err(TryLockError::Poisoned(_)) => self.stripes[i].write().unwrap(),
+        }
+    }
+
+    fn adjust_bytes(&self, before: usize, after: usize) {
+        if after >= before {
+            self.bytes.fetch_add(after - before, Ordering::Relaxed);
+        } else {
+            self.bytes.fetch_sub(before - after, Ordering::Relaxed);
+        }
+    }
+
+    /// Read a row; `None` if it has never been touched (semantically a
+    /// zero row at clock 0). Returns an owned `StoredRow` — an O(1) `Arc`
+    /// clone of the value, never a deep copy.
+    pub fn get(&self, row: RowId) -> Option<StoredRow> {
+        self.stripes[self.stripe_of(row)].read().unwrap().get(&row).cloned()
     }
 
     /// Apply an update delta to a row (materializing it if needed).
-    pub fn apply(&mut self, row: RowId, update: &RowUpdate) {
-        self.get_or_init(row).data.apply(update);
+    pub fn apply(&self, row: RowId, update: &RowUpdate) {
+        let mut g = self.write_stripe(self.stripe_of(row));
+        match g.entry(row) {
+            Entry::Occupied(mut e) => {
+                let sr = e.get_mut();
+                let before = sr.data.wire_bytes();
+                Arc::make_mut(&mut sr.data).apply(update);
+                let after = sr.data.wire_bytes();
+                drop(g);
+                self.adjust_bytes(before, after);
+            }
+            Entry::Vacant(e) => {
+                let mut data = RowData::zeros(self.kind, self.width);
+                data.apply(update);
+                let after = data.wire_bytes();
+                e.insert(StoredRow { data: Arc::new(data), clock: 0 });
+                drop(g);
+                self.rows.fetch_add(1, Ordering::Relaxed);
+                self.bytes.fetch_add(after + ROW_OVERHEAD, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Apply the subset of `updates` whose stripe maps to `lane` (i.e.
+    /// `stripe_of(row) % num_lanes == lane`), in slice order. The apply
+    /// pool gives each worker thread one lane, so every stripe is only
+    /// ever written by one worker per batch and the per-row apply order
+    /// equals the batch order — float applies stay deterministic.
+    pub fn apply_lane(&self, updates: &[(RowId, RowUpdate)], lane: usize, num_lanes: usize) {
+        for (row, u) in updates {
+            if self.stripe_of(*row) % num_lanes == lane {
+                self.apply(*row, u);
+            }
+        }
     }
 
     /// Replace a row wholesale (pull replies / server pushes of full rows).
     /// Keeps the *maximum* of the stored and incoming clock: a full-row
     /// install can never make the local copy less fresh.
-    pub fn install(&mut self, row: RowId, data: RowData, clock: Clock) {
-        match self.rows.get_mut(&row) {
-            Some(sr) => {
+    pub fn install(&self, row: RowId, data: Arc<RowData>, clock: Clock) {
+        let mut g = self.write_stripe(self.stripe_of(row));
+        match g.entry(row) {
+            Entry::Occupied(mut e) => {
+                let sr = e.get_mut();
                 if clock >= sr.clock {
+                    let before = sr.data.wire_bytes();
+                    let after = data.wire_bytes();
                     sr.data = data;
                     sr.clock = clock;
+                    drop(g);
+                    self.adjust_bytes(before, after);
                 }
             }
-            None => {
-                self.rows.insert(row, StoredRow { data, clock });
+            Entry::Vacant(e) => {
+                let after = data.wire_bytes();
+                e.insert(StoredRow { data, clock });
+                drop(g);
+                self.rows.fetch_add(1, Ordering::Relaxed);
+                self.bytes.fetch_add(after + ROW_OVERHEAD, Ordering::Relaxed);
             }
         }
     }
 
     /// Advance a row's freshness clock without changing the data (used when
     /// the server learns the global min advanced and its stored value is
-    /// thereby known to cover all updates ≤ new min).
-    pub fn bump_clock(&mut self, row: RowId, clock: Clock) {
-        let sr = self.get_or_init(row);
-        if clock > sr.clock {
-            sr.clock = clock;
+    /// thereby known to cover all updates ≤ new min). Materializes a zero
+    /// row if absent.
+    pub fn bump_clock(&self, row: RowId, clock: Clock) {
+        let mut g = self.write_stripe(self.stripe_of(row));
+        match g.entry(row) {
+            Entry::Occupied(mut e) => {
+                let sr = e.get_mut();
+                if clock > sr.clock {
+                    sr.clock = clock;
+                }
+            }
+            Entry::Vacant(e) => {
+                let data = RowData::zeros(self.kind, self.width);
+                let after = data.wire_bytes();
+                e.insert(StoredRow { data: Arc::new(data), clock });
+                drop(g);
+                self.rows.fetch_add(1, Ordering::Relaxed);
+                self.bytes.fetch_add(after + ROW_OVERHEAD, Ordering::Relaxed);
+            }
         }
     }
 
     /// Advance every materialized row's clock (server-side on min-clock
     /// advance: the stored values now reflect every update ≤ `clock`).
-    pub fn bump_all_clocks(&mut self, clock: Clock) {
-        for sr in self.rows.values_mut() {
-            if clock > sr.clock {
-                sr.clock = clock;
+    pub fn bump_all_clocks(&self, clock: Clock) {
+        for s in self.stripes.iter() {
+            for sr in s.write().unwrap().values_mut() {
+                if clock > sr.clock {
+                    sr.clock = clock;
+                }
             }
         }
     }
 
     /// Number of materialized rows.
     pub fn len(&self) -> usize {
-        self.rows.len()
+        self.rows.load(Ordering::Relaxed)
     }
 
     /// True when no row has been materialized.
     pub fn is_empty(&self) -> bool {
-        self.rows.is_empty()
+        self.len() == 0
     }
 
-    /// Iterate materialized rows.
-    pub fn iter(&self) -> impl Iterator<Item = (RowId, &StoredRow)> + '_ {
-        self.rows.iter().map(|(k, v)| (*k, v))
+    /// Consistent-enough copy of all materialized rows, sorted by row id
+    /// (checkpoint imaging, tests). Values are O(1) `Arc` clones. Each
+    /// stripe is snapshotted atomically; the caller serializes against
+    /// concurrent writers if cross-stripe atomicity matters (the shard
+    /// event loop checkpoints only between batches, so it does).
+    pub fn snapshot_rows(&self) -> Vec<(RowId, StoredRow)> {
+        let mut out: Vec<(RowId, StoredRow)> = Vec::with_capacity(self.len());
+        for s in self.stripes.iter() {
+            let g = s.read().unwrap();
+            out.extend(g.iter().map(|(k, v)| (*k, v.clone())));
+        }
+        out.sort_unstable_by_key(|(id, _)| id.0);
+        out
     }
 
     /// Drop a cached row (cache eviction).
-    pub fn evict(&mut self, row: RowId) -> bool {
-        self.rows.remove(&row).is_some()
+    pub fn evict(&self, row: RowId) -> bool {
+        let mut g = self.write_stripe(self.stripe_of(row));
+        match g.remove(&row) {
+            Some(sr) => {
+                let freed = sr.data.wire_bytes() + ROW_OVERHEAD;
+                drop(g);
+                self.rows.fetch_sub(1, Ordering::Relaxed);
+                self.bytes.fetch_sub(freed, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
     }
 
-    /// Total approximate bytes held (cache accounting).
+    /// Total approximate bytes held (cache accounting). O(1): maintained
+    /// as a running counter on `apply`/`install`/`evict`.
     pub fn approx_bytes(&self) -> usize {
-        self.rows.values().map(|r| r.data.wire_bytes() + 16).sum()
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative stripe write-lock contention events (diagnostics for the
+    /// parallel apply path; monotone).
+    pub fn contended(&self) -> u64 {
+        self.contended.load(Ordering::Relaxed)
     }
 }
 
@@ -134,7 +297,7 @@ mod tests {
 
     #[test]
     fn lazy_materialization() {
-        let mut s = TableStore::new(RowKind::Dense, 4);
+        let s = TableStore::new(RowKind::Dense, 4);
         assert!(s.get(RowId(3)).is_none());
         s.apply(RowId(3), &RowUpdate::single(1, 2.0));
         assert_eq!(s.get(RowId(3)).unwrap().data.get(1), Some(2.0));
@@ -143,21 +306,21 @@ mod tests {
 
     #[test]
     fn install_respects_clock_ordering() {
-        let mut s = TableStore::new(RowKind::Dense, 2);
-        s.install(RowId(0), RowData::Dense(vec![1.0, 1.0]), 5);
+        let s = TableStore::new(RowKind::Dense, 2);
+        s.install(RowId(0), Arc::new(RowData::Dense(vec![1.0, 1.0])), 5);
         // stale install ignored
-        s.install(RowId(0), RowData::Dense(vec![9.0, 9.0]), 3);
+        s.install(RowId(0), Arc::new(RowData::Dense(vec![9.0, 9.0])), 3);
         assert_eq!(s.get(RowId(0)).unwrap().data.get(0), Some(1.0));
         assert_eq!(s.get(RowId(0)).unwrap().clock, 5);
         // fresher install wins
-        s.install(RowId(0), RowData::Dense(vec![2.0, 2.0]), 7);
+        s.install(RowId(0), Arc::new(RowData::Dense(vec![2.0, 2.0])), 7);
         assert_eq!(s.get(RowId(0)).unwrap().clock, 7);
         assert_eq!(s.get(RowId(0)).unwrap().data.get(0), Some(2.0));
     }
 
     #[test]
     fn bump_clock_never_regresses() {
-        let mut s = TableStore::new(RowKind::Sparse, 100);
+        let s = TableStore::new(RowKind::Sparse, 100);
         s.apply(RowId(1), &RowUpdate::single(0, 1.0));
         s.bump_clock(RowId(1), 4);
         s.bump_clock(RowId(1), 2);
@@ -166,7 +329,7 @@ mod tests {
 
     #[test]
     fn bump_all_clocks_touches_only_materialized() {
-        let mut s = TableStore::new(RowKind::Dense, 2);
+        let s = TableStore::new(RowKind::Dense, 2);
         s.apply(RowId(0), &RowUpdate::single(0, 1.0));
         s.apply(RowId(5), &RowUpdate::single(1, 1.0));
         s.bump_all_clocks(9);
@@ -177,11 +340,82 @@ mod tests {
 
     #[test]
     fn evict_and_bytes() {
-        let mut s = TableStore::new(RowKind::Dense, 8);
+        let s = TableStore::new(RowKind::Dense, 8);
         s.apply(RowId(0), &RowUpdate::single(0, 1.0));
         assert!(s.approx_bytes() >= 32);
         assert!(s.evict(RowId(0)));
         assert!(!s.evict(RowId(0)));
         assert!(s.is_empty());
+        assert_eq!(s.approx_bytes(), 0);
+    }
+
+    /// The running byte counter must equal a from-scratch scan after any
+    /// mix of apply / install / evict — including sparse rows whose size
+    /// shrinks when entries cancel to zero.
+    #[test]
+    fn approx_bytes_matches_full_scan() {
+        let s = TableStore::new(RowKind::Sparse, 1000);
+        for i in 0..50u64 {
+            s.apply(RowId(i % 7), &RowUpdate::single((i % 5) as u32, 1.0));
+        }
+        // cancel some entries back to zero (sparse rows drop them)
+        for i in 0..20u64 {
+            s.apply(RowId(i % 7), &RowUpdate::single((i % 5) as u32, -1.0));
+        }
+        s.install(RowId(100), Arc::new(RowData::Sparse([(3, 2.0)].into_iter().collect())), 4);
+        s.evict(RowId(0));
+        let scan: usize =
+            s.snapshot_rows().iter().map(|(_, sr)| sr.data.wire_bytes() + 16).sum();
+        assert_eq!(s.approx_bytes(), scan);
+    }
+
+    #[test]
+    fn snapshot_rows_sorted_and_cheap() {
+        let s = TableStore::new(RowKind::Dense, 2);
+        for i in [9u64, 3, 7, 1] {
+            s.apply(RowId(i), &RowUpdate::single(0, i as f32));
+        }
+        let snap = s.snapshot_rows();
+        let ids: Vec<u64> = snap.iter().map(|(id, _)| id.0).collect();
+        assert_eq!(ids, vec![1, 3, 7, 9]);
+        // the snapshot shares data with the store (CoW, not deep copy)
+        let live = s.get(RowId(3)).unwrap();
+        assert!(Arc::ptr_eq(&live.data, &snap[1].1.data));
+    }
+
+    /// Copy-on-write: a reader holding a row's `Arc` keeps the old value
+    /// while a concurrent apply produces a new version.
+    #[test]
+    fn cow_preserves_reader_snapshot() {
+        let s = TableStore::new(RowKind::Dense, 2);
+        s.apply(RowId(0), &RowUpdate::single(0, 1.0));
+        let before = s.get(RowId(0)).unwrap();
+        s.apply(RowId(0), &RowUpdate::single(0, 1.0));
+        assert_eq!(before.data.get(0), Some(1.0), "reader's snapshot must not move");
+        assert_eq!(s.get(RowId(0)).unwrap().data.get(0), Some(2.0));
+    }
+
+    /// apply_lane over all lanes covers exactly the full update list, with
+    /// per-row order preserved, so lane-parallel apply equals sequential.
+    #[test]
+    fn apply_lane_partitions_cover_sequential() {
+        let updates: Vec<(RowId, RowUpdate)> =
+            (0..200u64).map(|i| (RowId(i % 17), RowUpdate::single(0, 0.5 + i as f32))).collect();
+        let seq = TableStore::new(RowKind::Dense, 4);
+        for (row, u) in &updates {
+            seq.apply(*row, u);
+        }
+        let laned = TableStore::new(RowKind::Dense, 4);
+        for lane in 0..3 {
+            laned.apply_lane(&updates, lane, 3);
+        }
+        for i in 0..17u64 {
+            assert_eq!(
+                seq.get(RowId(i)).unwrap().data.get(0),
+                laned.get(RowId(i)).unwrap().data.get(0),
+                "row {i} diverged"
+            );
+        }
+        assert_eq!(seq.approx_bytes(), laned.approx_bytes());
     }
 }

@@ -1,0 +1,153 @@
+//! The parallel apply path must be invisible in the state: a shard
+//! configured with `apply_threads > 1` fans each push batch's row updates
+//! across lane-partitioned workers, but per-row apply order is the batch
+//! slice order either way — so the resulting float state is required to be
+//! *byte-identical* to the sequential shard's, and the deterministic
+//! simulator is required to produce byte-identical runs per seed whatever
+//! the thread count.
+
+use std::sync::Arc;
+
+use bapps::comm::msg::{Msg, Payload, PushBatch};
+use bapps::comm::Network;
+use bapps::config::{NetConfig, PolicyConfig};
+use bapps::server::{MemPersistence, ServerShard, ShardOptions, TableRegistry};
+use bapps::sim::{Sim, SimConfig};
+use bapps::table::{RowId, RowKind, RowUpdate, TableDesc, TableId};
+use bapps::trace::TraceRecorder;
+use bapps::types::{NodeId, ProcId, ShardId};
+use bapps::util::Rng64;
+
+const TABLE: TableId = TableId(0);
+const ROWS: u64 = 97; // prime: rows collide across stripes and lanes
+const WIDTH: u32 = 8;
+const PROCS: u32 = 2;
+const BATCHES: u64 = 60;
+const UPDATES_PER_BATCH: usize = 64;
+
+/// Deterministic mixed dense/sparse push workload, two origins.
+fn workload(seed: u64) -> Vec<PushBatch> {
+    let mut rng = Rng64::seed_from_u64(seed);
+    let mut next_id = [0u64; PROCS as usize];
+    (0..BATCHES)
+        .map(|_| {
+            let origin = rng.below(PROCS as usize);
+            let updates: Vec<(RowId, RowUpdate)> = (0..UPDATES_PER_BATCH)
+                .map(|_| {
+                    let row = RowId(rng.below(ROWS as usize) as u64);
+                    let u = if rng.chance(0.5) {
+                        RowUpdate::Dense(
+                            (0..WIDTH).map(|_| (rng.f32() * 2.0 - 1.0) * 3.0).collect(),
+                        )
+                    } else {
+                        RowUpdate::single(rng.below(WIDTH as usize) as u32, rng.f32() - 0.5)
+                    };
+                    (row, u)
+                })
+                .collect();
+            let batch_id = next_id[origin];
+            next_id[origin] += 1;
+            PushBatch {
+                table: TABLE,
+                origin: ProcId(origin as u32),
+                batch_id,
+                updates: Arc::new(updates),
+                clock: 1,
+                epoch: 0,
+            }
+        })
+        .collect()
+}
+
+/// Run `batches` through a fresh shard and return the exact bit pattern of
+/// every row in both the authoritative and forwarded-prefix stores.
+fn shard_state_bits(apply_threads: u32, batches: &[PushBatch]) -> Vec<(u64, Vec<u32>)> {
+    let net = Network::new(NetConfig::default());
+    let registry = Arc::new(TableRegistry::default());
+    registry
+        .insert(TableDesc {
+            id: TABLE,
+            num_rows: ROWS,
+            row_width: WIDTH,
+            row_kind: RowKind::Dense,
+            policy: PolicyConfig::BestEffort,
+        })
+        .unwrap();
+    let _shard_ep = net.register(NodeId::Server(ShardId(0)));
+    let _clients: Vec<_> = (0..PROCS).map(|p| net.register(NodeId::Client(ProcId(p)))).collect();
+    let mut opts = ShardOptions::new(Arc::new(MemPersistence::new()));
+    opts.apply_threads = apply_threads;
+    let mut shard = ServerShard::with_options(
+        ShardId(0),
+        PROCS,
+        registry,
+        net.sender(),
+        Arc::new(TraceRecorder::new(false)),
+        opts,
+    );
+    for b in batches {
+        shard.handle(Msg {
+            src: NodeId::Client(b.origin),
+            dst: NodeId::Server(ShardId(0)),
+            payload: Payload::PushUpdates(b.clone()),
+        });
+    }
+    let cp = shard.export_checkpoint();
+    let mut bits = Vec::new();
+    for t in &cp.tables {
+        for (tag, image) in [(0u64, &t.store), (1u64, &t.fwd)] {
+            for (row, data, clock) in image {
+                let key = (tag << 32) | (u64::from(t.id.0) << 40) | row.0;
+                let mut cols: Vec<u32> =
+                    data.to_dense(WIDTH).iter().map(|v| v.to_bits()).collect();
+                cols.push(*clock);
+                bits.push((key, cols));
+            }
+        }
+    }
+    bits
+}
+
+/// Stripe-parallel applies must leave state byte-identical to sequential:
+/// every row of both stores, compared at the `f32` bit level, across lane
+/// counts that divide the stripes evenly and unevenly.
+#[test]
+fn pooled_shard_state_is_byte_identical_to_sequential() {
+    for seed in [11u64, 23, 47] {
+        let batches = workload(seed);
+        let baseline = shard_state_bits(1, &batches);
+        assert!(!baseline.is_empty(), "workload must touch rows");
+        for threads in [2u32, 3, 4, 8] {
+            let got = shard_state_bits(threads, &batches);
+            assert_eq!(got, baseline, "seed {seed}, apply_threads {threads}");
+        }
+    }
+}
+
+/// The deterministic simulator must be a pure function of `(config, seed)`
+/// even with the apply pool engaged: same trace fingerprint, same rendered
+/// metrics snapshot, no oracle violations.
+#[test]
+fn sim_runs_are_byte_identical_across_apply_threads() {
+    for (seed, policy) in [
+        (9301u64, PolicyConfig::Ssp { staleness: 1 }),
+        (9302, PolicyConfig::Vap { v_thr: 2.0, strong: true }),
+        (9303, PolicyConfig::BestEffort),
+    ] {
+        let base = SimConfig::default().with_policy(policy).with_seed(seed);
+        let r1 = Sim::run(&base);
+        assert!(r1.violations.is_empty(), "seed {seed}: {:?}", r1.violations);
+        for threads in [2u32, 4] {
+            let mut cfg = base.clone();
+            cfg.apply_threads = threads;
+            let r = Sim::run(&cfg);
+            assert!(r.violations.is_empty(), "seed {seed} t{threads}: {:?}", r.violations);
+            assert_eq!(r.trace_hash, r1.trace_hash, "seed {seed} t{threads}: trace diverged");
+            assert_eq!(
+                r.snapshot.render_json(),
+                r1.snapshot.render_json(),
+                "seed {seed} t{threads}: metrics snapshot diverged"
+            );
+        }
+    }
+}

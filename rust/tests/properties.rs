@@ -100,7 +100,7 @@ fn prop_batcher_partitions_updates() {
         let mut last_id = None;
         for (shard, b) in &batches {
             assert!(b.updates.len() <= max_batch);
-            for (row, _) in &b.updates {
+            for (row, _) in b.updates.iter() {
                 assert_eq!(desc.shard_of(*row, shards), *shard);
                 total_out += 1;
             }
@@ -216,10 +216,10 @@ fn prop_visibility_tracker_acks() {
                     table: TableId(0),
                     origin: ProcId(origin),
                     batch_id: next_id[origin as usize],
-                    updates: vec![(
+                    updates: std::sync::Arc::new(vec![(
                         RowId(rng.below(3) as u64),
                         RowUpdate::single(0, (rng.f32() * 2.0 - 1.0) * 2.0),
-                    )],
+                    )]),
                     clock: 1,
                     epoch: 0,
                 };
