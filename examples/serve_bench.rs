@@ -11,6 +11,11 @@
 //! Emits `BENCH_serve.json` (CI uploads it next to `BENCH_sim.json`).
 //! Thread-count *speedups* are only meaningful on multi-core runners; the
 //! JSON records whatever the host measured.
+//!
+//! The single-threaded run is additionally repeated with span capture
+//! disabled, giving the causal tracer's overhead as a throughput ratio
+//! (`trace_overhead.rows_per_sec_ratio`; the acceptance bound is < 5%
+//! regression with tracing on).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -19,10 +24,10 @@ use bapps::comm::msg::{Msg, Payload, PushBatch};
 use bapps::comm::{NetSender, Transport};
 use bapps::config::PolicyConfig;
 use bapps::error::Result;
-use bapps::metrics::NetMetrics;
+use bapps::metrics::{NetMetrics, Registry};
 use bapps::server::{MemPersistence, ServerShard, ShardOptions, TableRegistry};
 use bapps::table::{RowId, RowKind, RowUpdate, TableDesc, TableId};
-use bapps::trace::TraceRecorder;
+use bapps::trace::{TraceClock, TraceCtx, TraceRecorder, DEFAULT_RING_SLOTS};
 use bapps::types::{NodeId, ProcId, ShardId, WorkerId};
 
 /// Swallows every send: the bench measures the shard's handler cost, not
@@ -77,6 +82,9 @@ fn build_batches() -> Vec<PushBatch> {
                 updates: Arc::new(updates),
                 clock: 1,
                 epoch: 0,
+                // Real minted contexts: the bench must time the span
+                // record path, not the `is_none()` early-outs.
+                trace: TraceCtx::mint(1, 0, b as u64, 0, 0),
             }
         })
         .collect()
@@ -99,7 +107,7 @@ fn percentile(sorted_us: &[f64], p: f64) -> f64 {
     sorted_us[idx]
 }
 
-fn run_one(apply_threads: u32, batches: &[PushBatch]) -> RunStats {
+fn run_one(apply_threads: u32, batches: &[PushBatch], span_capture: bool) -> RunStats {
     let registry = Arc::new(TableRegistry::default());
     registry
         .insert(TableDesc {
@@ -118,14 +126,16 @@ fn run_one(apply_threads: u32, batches: &[PushBatch]) -> RunStats {
     // part of every live push), but snapshot assembly is not.
     opts.checkpoint_every = 0;
     opts.apply_threads = apply_threads;
-    let mut shard = ServerShard::with_options(
-        ShardId(0),
-        1,
-        registry,
-        net,
-        Arc::new(TraceRecorder::new(false)),
-        opts,
-    );
+    // Registry-backed recorder so the A/B includes the full production
+    // record path: ring write + lazy stage-histogram update.
+    let trace = Arc::new(TraceRecorder::with_registry(
+        false,
+        Arc::new(Registry::new()),
+        TraceClock::wall(),
+        DEFAULT_RING_SLOTS,
+    ));
+    trace.set_span_capture(span_capture);
+    let mut shard = ServerShard::with_options(ShardId(0), 1, registry, net, trace, opts);
 
     // --- push phase ---
     let mut push_us: Vec<f64> = Vec::with_capacity(BATCHES);
@@ -159,6 +169,7 @@ fn run_one(apply_threads: u32, batches: &[PushBatch]) -> RunStats {
                 row: RowId(i as u64 % ROWS),
                 needed_clock: 0,
                 worker: WorkerId(0),
+                trace: TraceCtx::mint(2, 0, i as u64, 0, 0),
             },
         });
         pull_us.push(t0.elapsed().as_secs_f64() * 1e6);
@@ -184,7 +195,7 @@ fn main() {
 
     let mut runs: Vec<RunStats> = Vec::new();
     for threads in [1u32, 2, 4] {
-        let s = run_one(threads, &batches);
+        let s = run_one(threads, &batches, true);
         println!(
             "| {:>7} | {:>10.0} | {:>11.1} | {:>11.1} | {:>11.1} | {:>11.1} |",
             s.apply_threads,
@@ -197,6 +208,15 @@ fn main() {
         runs.push(s);
     }
 
+    // Tracer overhead A/B at threads = 1: same workload with span capture
+    // off. Ratio < 1 means capture cost; the acceptance bound is ≥ 0.95.
+    let no_spans = run_one(1, &batches, false);
+    let overhead_ratio = runs[0].rows_per_sec / no_spans.rows_per_sec;
+    println!(
+        "\ntracing on vs off (threads = 1): {:.0} vs {:.0} rows/s (ratio {:.3})",
+        runs[0].rows_per_sec, no_spans.rows_per_sec, overhead_ratio
+    );
+
     let base = runs[0].rows_per_sec;
     let cpus = std::thread::available_parallelism().map_or(0, |n| n.get());
     let mut out = String::from("{\n  \"bench\": \"serve_push_pull\",\n");
@@ -205,6 +225,11 @@ fn main() {
          \"batches\": {BATCHES}, \"pulls\": {PULLS}}},\n"
     ));
     out.push_str(&format!("  \"host_cpus\": {cpus},\n"));
+    out.push_str(&format!(
+        "  \"trace_overhead\": {{\"rows_per_sec_on\": {:.0}, \"rows_per_sec_off\": {:.0}, \
+         \"rows_per_sec_ratio\": {:.4}}},\n",
+        runs[0].rows_per_sec, no_spans.rows_per_sec, overhead_ratio
+    ));
     out.push_str("  \"runs\": [\n");
     for (i, s) in runs.iter().enumerate() {
         out.push_str(&format!(

@@ -9,6 +9,14 @@
 //! respawn, heartbeat detection, client resync — the full suite lives
 //! in `rust/tests/sim_recovery.rs`).
 //!
+//! With `--trace`, runs the causal-tracing slice: one traced seed per
+//! policy, validating that the exported Perfetto JSON parses, that the
+//! span-tree oracle saw a closed batch→net→apply→visible chain for
+//! every accepted batch, that the recorder dropped zero spans at the
+//! default ring size, and that the export is byte-identical across two
+//! runs of the same seed. Writes one representative `trace.json` as a
+//! CI artifact.
+//!
 //! With `--metrics`, runs the observability slice: every sim run's
 //! metric snapshot is cross-checked against the oracle's independent
 //! wire-fed mirrors, the magnitude-priority ablation is reported, a
@@ -47,6 +55,10 @@ fn main() {
         run_metrics_slice();
         return;
     }
+    if args.iter().any(|a| a == "--trace") {
+        run_trace_slice();
+        return;
+    }
     let crash = args.iter().any(|a| a == "--crash");
     for pol in policies() {
         let (base, seeds) = if crash {
@@ -63,6 +75,162 @@ fn main() {
     } else {
         println!("sim smoke sweep: all policies clean");
     }
+}
+
+/// One traced seed per policy: parse the Perfetto export, confirm the
+/// determinism and zero-drop contracts, and leave `trace.json` behind as
+/// the CI artifact.
+fn run_trace_slice() {
+    let mut artifact: Option<String> = None;
+    for pol in policies() {
+        let cfg = SimConfig::default().with_policy(pol).with_seed(9042);
+        let r = Sim::run_traced(&cfg);
+        // The span-tree oracle runs inside the sim: any missing
+        // batch→net→apply→visible link or orphan span is a violation.
+        assert!(r.ok(), "policy {:?}:\n{}", pol, r.describe());
+        let json = r.trace_json.clone().expect("run_traced populates trace_json");
+        validate_json(&json).unwrap_or_else(|e| panic!("{:?}: trace.json invalid: {e}", pol));
+        assert!(json.starts_with("{\"traceEvents\":["), "{:?}: unexpected envelope", pol);
+        assert!(json.contains("\"ph\":\"M\""), "{:?}: no process-name metadata", pol);
+        assert!(json.contains("\"ph\":\"X\""), "{:?}: no complete spans", pol);
+        assert_eq!(
+            r.snapshot.counter_sum("trace_spans_dropped_total"),
+            0,
+            "{:?}: spans dropped at default ring size",
+            pol
+        );
+        // Byte-identity: the same seed must export the same bytes.
+        let again = Sim::run_traced(&cfg);
+        assert_eq!(
+            again.trace_json.as_deref(),
+            Some(json.as_str()),
+            "{:?}: trace.json differs across identical runs",
+            pol
+        );
+        let stages = ["\"batch\"", "\"net\"", "\"apply\"", "\"visible\""];
+        for st in stages {
+            assert!(json.contains(st), "{:?}: no {st} spans in export", pol);
+        }
+        println!("{:?}: seed 9042 traced, {} bytes, chains closed", pol, json.len());
+        if artifact.is_none() {
+            artifact = Some(json);
+        }
+    }
+    let json = artifact.unwrap();
+    std::fs::write("trace.json", &json).expect("write trace.json");
+    println!("trace slice: wrote trace.json ({} bytes)", json.len());
+}
+
+/// Minimal JSON well-formedness check (no deps): a recursive-descent
+/// scan over the grammar. Returns the error position on failure.
+fn validate_json(s: &str) -> Result<(), String> {
+    let b = s.as_bytes();
+    let mut i = 0usize;
+    fn ws(b: &[u8], i: &mut usize) {
+        while *i < b.len() && matches!(b[*i], b' ' | b'\t' | b'\n' | b'\r') {
+            *i += 1;
+        }
+    }
+    fn value(b: &[u8], i: &mut usize, depth: u32) -> Result<(), String> {
+        if depth > 64 {
+            return Err("nesting too deep".into());
+        }
+        ws(b, i);
+        match b.get(*i) {
+            Some(b'{') => {
+                *i += 1;
+                ws(b, i);
+                if b.get(*i) == Some(&b'}') {
+                    *i += 1;
+                    return Ok(());
+                }
+                loop {
+                    ws(b, i);
+                    string(b, i)?;
+                    ws(b, i);
+                    if b.get(*i) != Some(&b':') {
+                        return Err(format!("expected ':' at {i}"));
+                    }
+                    *i += 1;
+                    value(b, i, depth + 1)?;
+                    ws(b, i);
+                    match b.get(*i) {
+                        Some(b',') => *i += 1,
+                        Some(b'}') => {
+                            *i += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(format!("expected ',' or '}}' at {i}")),
+                    }
+                }
+            }
+            Some(b'[') => {
+                *i += 1;
+                ws(b, i);
+                if b.get(*i) == Some(&b']') {
+                    *i += 1;
+                    return Ok(());
+                }
+                loop {
+                    value(b, i, depth + 1)?;
+                    ws(b, i);
+                    match b.get(*i) {
+                        Some(b',') => *i += 1,
+                        Some(b']') => {
+                            *i += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(format!("expected ',' or ']' at {i}")),
+                    }
+                }
+            }
+            Some(b'"') => string(b, i),
+            Some(b't') => lit(b, i, "true"),
+            Some(b'f') => lit(b, i, "false"),
+            Some(b'n') => lit(b, i, "null"),
+            Some(c) if c.is_ascii_digit() || *c == b'-' => {
+                *i += 1;
+                while *i < b.len()
+                    && matches!(b[*i], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+                {
+                    *i += 1;
+                }
+                Ok(())
+            }
+            _ => Err(format!("unexpected byte at {i}")),
+        }
+    }
+    fn string(b: &[u8], i: &mut usize) -> Result<(), String> {
+        if b.get(*i) != Some(&b'"') {
+            return Err(format!("expected string at {i}"));
+        }
+        *i += 1;
+        while let Some(&c) = b.get(*i) {
+            match c {
+                b'"' => {
+                    *i += 1;
+                    return Ok(());
+                }
+                b'\\' => *i += 2,
+                _ => *i += 1,
+            }
+        }
+        Err("unterminated string".into())
+    }
+    fn lit(b: &[u8], i: &mut usize, word: &str) -> Result<(), String> {
+        if b[*i..].starts_with(word.as_bytes()) {
+            *i += word.len();
+            Ok(())
+        } else {
+            Err(format!("bad literal at {i}"))
+        }
+    }
+    value(b, &mut i, 0)?;
+    ws(b, &mut i);
+    if i != b.len() {
+        return Err(format!("trailing bytes at {i}"));
+    }
+    Ok(())
 }
 
 /// Registry numbers must agree exactly with the oracle's independent

@@ -1,7 +1,7 @@
 //! The per-process client core: shared caches, ingress and flusher loops.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
 use std::time::{Duration, Instant};
 
@@ -13,7 +13,7 @@ use crate::error::{Error, Result};
 use crate::metrics::{GateMetrics, Registry, StalenessHist, WorkerMetrics};
 use crate::server::TableRegistry;
 use crate::table::{RowId, TableId};
-use crate::trace::{BlockReason, Event, TraceRecorder};
+use crate::trace::{BlockReason, Event, SpanKind, SpanNode, SpanSink, TraceCtx, TraceRecorder};
 use crate::types::{Clock, NodeId, ProcId, ShardId, WorkerId};
 
 use super::state::TableState;
@@ -50,8 +50,13 @@ pub struct ClientCore {
     pub metrics: Arc<WorkerMetrics>,
     /// Observed read-staleness distribution.
     pub staleness: Arc<StalenessHist>,
-    /// Trace recorder (may be disabled).
+    /// Trace recorder (legacy event surface may be disabled; span capture
+    /// is always on).
     pub trace: Arc<TraceRecorder>,
+    /// This process's span-recording lane.
+    sink: SpanSink,
+    /// Monotone pull-request counter (mints per-pull trace ids).
+    pull_seq: AtomicU64,
     /// The process's metric registry (shared with the bus, shards and
     /// coordinator when launched through [`crate::coordinator::PsSystem`]).
     hub: Arc<Registry>,
@@ -74,6 +79,7 @@ impl ClientCore {
         hub: Arc<Registry>,
     ) -> Self {
         let shard_epochs = (0..cfg.num_server_shards).map(|_| AtomicU32::new(0)).collect();
+        let sink = trace.sink(SpanNode::Client(proc));
         ClientCore {
             proc,
             cfg,
@@ -84,9 +90,27 @@ impl ClientCore {
             metrics: Arc::new(WorkerMetrics::new(&hub, proc.0)),
             staleness: Arc::new(StalenessHist::new(&hub, proc.0)),
             trace,
+            sink,
+            pull_seq: AtomicU64::new(0),
             hub,
             shard_epochs,
             stop: AtomicBool::new(false),
+        }
+    }
+
+    /// Mint the trace context for a new pull request: per-process pull
+    /// counter keyed under tag 2 (pushes use tag 1), so pull and push span
+    /// trees never collide.
+    fn next_pull_ctx(&self) -> TraceCtx {
+        let seq = self.pull_seq.fetch_add(1, Ordering::Relaxed);
+        TraceCtx::mint(2, self.proc.0 as u64, seq, 0, self.trace.now_us())
+    }
+
+    /// Open the `batch` stage on the first update entering an empty
+    /// egress queue (closed at the next flush's seal time).
+    fn stamp_egress(&self, st: &mut TableState) {
+        if st.egress_since_us.is_none() && st.has_unsent() {
+            st.egress_since_us = Some(self.trace.now_us());
         }
     }
 
@@ -191,6 +215,7 @@ impl ClientCore {
         Self::check_bounds(&st, row, Some(col))?;
         let mut st = self.wait_write_admissible(&t, st, row, col, delta, worker)?;
         st.apply_inc(row, col, delta);
+        self.stamp_egress(&mut st);
         if balance_checks() {
             st.assert_balance("inc");
         }
@@ -219,6 +244,7 @@ impl ClientCore {
             }
         }
         st.apply_inc_row(row, deltas);
+        self.stamp_egress(&mut st);
         if balance_checks() {
             st.assert_balance("inc_row");
         }
@@ -253,6 +279,7 @@ impl ClientCore {
             st.apply_inc(row, col, delta);
             self.metrics.update_magnitude_max.set_max(delta.abs() as f64);
         }
+        self.stamp_egress(&mut st);
         self.metrics.incs.add(updates.len() as u64);
         Ok(())
     }
@@ -296,6 +323,7 @@ impl ClientCore {
                         row,
                         needed_clock: required,
                         worker: WorkerId(u32::MAX),
+                        trace: self.next_pull_ctx(),
                     },
                 });
             }
@@ -322,6 +350,7 @@ impl ClientCore {
             return Ok(false);
         }
         st.apply_inc(row, col, delta);
+        self.stamp_egress(&mut st);
         if balance_checks() {
             st.assert_balance("try_inc");
         }
@@ -342,6 +371,7 @@ impl ClientCore {
         let mut st = t.state.lock().unwrap();
         Self::check_bounds(&st, row, Some(col))?;
         st.apply_inc(row, col, delta);
+        self.stamp_egress(&mut st);
         self.metrics.update_magnitude_max.set_max(delta.abs() as f64);
         self.metrics.incs.inc();
         Ok(())
@@ -371,7 +401,7 @@ impl ClientCore {
         }
         self.metrics.clocks.inc();
         let c = self.vclock.lock().unwrap().get(worker).unwrap_or(0);
-        self.trace.record(|| Event::ClockTick { at: Instant::now(), worker, clock: c });
+        self.trace.record(|| Event::ClockTick { at: self.trace.now_us(), worker, clock: c });
         Ok(c)
     }
 
@@ -424,15 +454,23 @@ impl ClientCore {
             st.assert_balance("pre_flush");
         }
         let stamp = self.min_clock() + 1; // lowest possible stamp in egress
-        let batches = st.make_push_batches(max_rows, stamp);
+        let now = self.trace.now_us(); // seal time: closes batch, opens net
+        let batch_open = st.egress_since_us.unwrap_or(now);
+        let batches = st.make_push_batches(max_rows, stamp, now);
         if balance_checks() {
             st.assert_balance("post_flush");
         }
+        // A partial drain leaves updates queued: their batch stage re-opens
+        // at the seal rather than keeping the (already reported) old edge.
+        st.egress_since_us = if st.has_unsent() { Some(now) } else { None };
         self.metrics.egress_reorders.add(st.take_reorders());
         self.metrics.egress_rows.set(st.egress_len() as f64);
         for (shard, batch) in batches {
+            let rows = batch.updates.len() as u64;
+            let key = [batch.table.0 as u64, self.proc.0 as u64, batch.batch_id, rows];
+            self.sink.span(SpanKind::Batch, batch.trace.id, batch_open, now, key);
             self.trace.record(|| Event::Push {
-                at: Instant::now(),
+                at: now,
                 proc: self.proc,
                 table: batch.table,
                 batch_id: batch.batch_id,
@@ -480,7 +518,7 @@ impl ClientCore {
         let deadline = crate::util::Deadline::after_ms(self.cfg.wait_timeout_ms);
         let table = st.desc.id;
         self.trace.record(|| Event::BlockStart {
-            at: Instant::now(),
+            at: self.trace.now_us(),
             worker: WorkerId(u32::MAX),
             table,
             reason: BlockReason::Staleness,
@@ -514,6 +552,7 @@ impl ClientCore {
                         row,
                         needed_clock: required,
                         worker: WorkerId(u32::MAX),
+                        trace: self.next_pull_ctx(),
                     },
                 });
             }
@@ -530,7 +569,7 @@ impl ClientCore {
                 self.metrics.add_read_block(t0.elapsed());
                 t.gate.record_read_blocked_us(t0.elapsed().as_micros() as u64);
                 self.trace.record(|| Event::BlockEnd {
-                    at: Instant::now(),
+                    at: self.trace.now_us(),
                     worker: WorkerId(u32::MAX),
                     table,
                     reason: BlockReason::Staleness,
@@ -555,7 +594,7 @@ impl ClientCore {
         let deadline = crate::util::Deadline::after_ms(self.cfg.wait_timeout_ms);
         let table = st.desc.id;
         self.trace.record(|| Event::BlockStart {
-            at: Instant::now(),
+            at: self.trace.now_us(),
             worker,
             table,
             reason: BlockReason::ValueBound,
@@ -583,7 +622,7 @@ impl ClientCore {
                 self.metrics.add_write_block(t0.elapsed());
                 t.gate.record_write_blocked_us(t0.elapsed().as_micros() as u64);
                 self.trace.record(|| Event::BlockEnd {
-                    at: Instant::now(),
+                    at: self.trace.now_us(),
                     worker,
                     table,
                     reason: BlockReason::ValueBound,
@@ -649,7 +688,7 @@ impl ClientCore {
                     };
                     if fresh {
                         self.trace.record(|| Event::Applied {
-                            at: Instant::now(),
+                            at: self.trace.now_us(),
                             proc: self.proc,
                             table: push.table,
                             origin: push.origin,
@@ -675,18 +714,29 @@ impl ClientCore {
                     }
                 }
             }
-            Payload::PullReply { table, row, data, clock, .. } => {
+            Payload::PullReply { table, row, data, clock, trace, .. } => {
                 if let Ok(t) = self.table(table) {
                     {
                         let mut st = t.state.lock().unwrap();
                         st.apply_pull_reply(row, data, clock);
                     }
                     t.cv.notify_all();
+                    // The echoed context carries the issue time, so the
+                    // round trip closes without a request table.
+                    if !trace.is_none() {
+                        self.sink.span(
+                            SpanKind::Pull,
+                            trace.id,
+                            trace.at_us,
+                            self.trace.now_us(),
+                            [table.0 as u64, row.0, self.proc.0 as u64, clock as u64],
+                        );
+                    }
                 }
             }
             Payload::MinClock { shard, clock } => {
                 self.trace.record(|| Event::Floor {
-                    at: Instant::now(),
+                    at: self.trace.now_us(),
                     proc: self.proc,
                     shard: shard.0,
                     clock,
@@ -719,7 +769,7 @@ impl ClientCore {
                         t.cv.notify_all();
                     }
                     self.trace.record(|| Event::Visible {
-                        at: Instant::now(),
+                        at: self.trace.now_us(),
                         proc: self.proc,
                         table,
                         batch_id,
@@ -807,6 +857,7 @@ impl ClientCore {
                     row,
                     needed_clock,
                     worker: WorkerId(u32::MAX),
+                    trace: self.next_pull_ctx(),
                 },
             });
         }

@@ -7,7 +7,7 @@
 
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::error::Result;
 use crate::table::{RowId, TableId};
@@ -146,7 +146,7 @@ impl TableHandle {
             self.seq.set(s + 1);
             let (worker, table) = (self.worker, self.id);
             self.core.trace.record(|| Event::Inc {
-                at: Instant::now(),
+                at: self.core.trace.now_us(),
                 worker,
                 table,
                 row,

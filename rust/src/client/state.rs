@@ -13,6 +13,7 @@ use crate::comm::msg::{PushBatch, ServerPushBatch};
 use crate::comm::priority::{DrainOrder, UpdateQueue};
 use crate::consistency::ConsistencyModel;
 use crate::table::{RowData, RowId, RowUpdate, TableDesc, TableStore};
+use crate::trace::TraceCtx;
 use crate::types::{Clock, ProcId, ShardId};
 
 /// A sent-but-not-yet-echoed batch kept for read-my-writes — and, since
@@ -26,6 +27,9 @@ struct OverlayEntry {
     /// Shared with the sent `PushBatch` (recording/retransmitting an
     /// overlay entry clones the `Arc`, not the update list).
     updates: Arc<Vec<(RowId, RowUpdate)>>,
+    /// The batch's minted trace context; a retransmission carries the
+    /// *original* context so its span tree stays one tree.
+    trace: TraceCtx,
 }
 
 /// Client-side state of one table in one process.
@@ -71,6 +75,11 @@ pub struct TableState {
     batcher: Batcher,
     /// Largest delta magnitude this process wrote (diagnostics: paper's u).
     pub u_local: f32,
+    /// Trace time (µs) the oldest currently-unsent update entered the
+    /// egress queue — the open edge of the next `batch` span. `None`
+    /// while the queue is empty; the core stamps it on the first `inc`
+    /// after a drain.
+    pub egress_since_us: Option<u64>,
 }
 
 impl TableState {
@@ -98,6 +107,7 @@ impl TableState {
             shard_epochs: vec![0; num_shards as usize],
             batcher: Batcher::new(origin, max_batch),
             u_local: 0.0,
+            egress_since_us: None,
             num_shards,
             desc,
         }
@@ -230,17 +240,21 @@ impl TableState {
     /// Drain up to `max_rows` egress rows into per-shard push batches;
     /// records overlay entries + VAP batch masses. `clock` stamps the
     /// batches (the lowest possible stamp of contained updates = current
-    /// proc min clock + 1). Returns `(shard, batch)` pairs ready to send.
+    /// proc min clock + 1); `now` (trace µs) is the seal time minted into
+    /// each batch's trace context. Returns `(shard, batch)` pairs ready
+    /// to send.
     pub fn make_push_batches(
         &mut self,
         max_rows: usize,
         clock: Clock,
+        now: u64,
     ) -> Vec<(ShardId, PushBatch)> {
         let updates = self.egress.drain(max_rows);
         if updates.is_empty() {
             return Vec::new();
         }
-        let mut batches = self.batcher.make_batches(&self.desc, self.num_shards, updates, clock);
+        let mut batches =
+            self.batcher.make_batches(&self.desc, self.num_shards, updates, clock, now);
         let track_mass = self.model.v_thr().is_some();
         for (shard, b) in &mut batches {
             b.epoch = self.shard_epochs[shard.0 as usize];
@@ -248,6 +262,7 @@ impl TableState {
                 batch_id: b.batch_id,
                 clock: b.clock,
                 updates: b.updates.clone(),
+                trace: b.trace,
             });
             if track_mass {
                 let mut masses = Vec::new();
@@ -316,6 +331,7 @@ impl TableState {
                     updates: e.updates.clone(),
                     clock: e.clock,
                     epoch,
+                    trace: e.trace,
                 })
                 .collect()
         })
@@ -537,6 +553,7 @@ mod tests {
             batch_id: batch.batch_id,
             updates: batch.updates.clone(),
             min_clock,
+            trace: batch.trace,
         }
     }
 
@@ -547,7 +564,7 @@ mod tests {
         st.apply_inc(RowId(3), 1, 2.0);
         assert_eq!(st.read(RowId(3), 1), 2.0);
         // sent (overlay)
-        let batches = st.make_push_batches(usize::MAX, 1);
+        let batches = st.make_push_batches(usize::MAX, 1, 0);
         assert_eq!(batches.len(), 1);
         assert_eq!(st.read(RowId(3), 1), 2.0, "value survives the send");
         assert_eq!(st.overlay_depth(), 1);
@@ -569,6 +586,7 @@ mod tests {
             batch_id: 0,
             updates: Arc::new(vec![(RowId(3), RowUpdate::single(1, 5.0))]),
             min_clock: 2,
+            trace: TraceCtx::NONE,
         };
         st.apply_server_push(ProcId(0), &push);
         assert_eq!(st.read(RowId(3), 1), 7.0);
@@ -605,7 +623,7 @@ mod tests {
         assert!(st.write_admissible(RowId(0), 1, 2.0));
 
         // ship and release
-        let batches = st.make_push_batches(usize::MAX, 1);
+        let batches = st.make_push_batches(usize::MAX, 1, 0);
         let ids: Vec<u64> = batches.iter().map(|(_, b)| b.batch_id).collect();
         assert_eq!(st.pending_mass(RowId(0), 0), 8.0, "sent ≠ synchronized");
         for id in ids {
@@ -642,10 +660,11 @@ mod tests {
             batch_id: 0,
             updates: Arc::new(vec![(RowId(2), RowUpdate::Dense(vec![1.0, 1.0, 1.0, 1.0]))]),
             min_clock: 0,
+            trace: TraceCtx::NONE,
         };
         st.apply_server_push(ProcId(0), &push);
         st.apply_inc(RowId(2), 0, 0.5);
-        st.make_push_batches(usize::MAX, 1); // now in overlay
+        st.make_push_batches(usize::MAX, 1, 0); // now in overlay
         st.apply_inc(RowId(2), 3, -1.0); // in egress
         assert_eq!(st.read_row(RowId(2)), vec![1.5, 1.0, 1.0, 0.0]);
     }
@@ -662,11 +681,11 @@ mod tests {
     fn retransmit_rebuilds_unechoed_batches_with_original_clocks() {
         let mut st = state(PolicyConfig::Cap { staleness: 1 });
         st.apply_inc(RowId(3), 1, 2.0);
-        let sent = st.make_push_batches(usize::MAX, 4);
+        let sent = st.make_push_batches(usize::MAX, 4, 0);
         assert_eq!(sent.len(), 1);
         let (shard, b) = &sent[0];
         st.apply_inc(RowId(3), 1, 1.0);
-        st.make_push_batches(usize::MAX, 5);
+        st.make_push_batches(usize::MAX, 5, 0);
 
         // Both batches are unechoed: both come back, ids ordered, the
         // original clocks preserved, the caller's (new) epoch stamped.

@@ -16,6 +16,7 @@ use std::sync::Arc;
 
 use crate::comm::msg::PushBatch;
 use crate::table::{RowId, RowUpdate, TableDesc};
+use crate::trace::TraceCtx;
 use crate::types::{Clock, ProcId, ShardId};
 
 /// Assembles per-shard push batches with monotone batch ids.
@@ -38,13 +39,16 @@ impl Batcher {
 
     /// Split row-deltas for one table into per-shard batches, each at most
     /// `max_batch_updates` rows, stamped with `clock`. Returns
-    /// `(shard, batch)` pairs; batch ids increase in emission order.
+    /// `(shard, batch)` pairs; batch ids increase in emission order. `now`
+    /// (µs on the trace clock) is the seal time minted into each batch's
+    /// trace context.
     pub fn make_batches(
         &mut self,
         desc: &TableDesc,
         num_shards: u32,
         updates: Vec<(RowId, RowUpdate)>,
         clock: Clock,
+        now: u64,
     ) -> Vec<(ShardId, PushBatch)> {
         if updates.is_empty() {
             return Vec::new();
@@ -71,6 +75,15 @@ impl Batcher {
                     // Stamped with the sender's believed shard epoch at send
                     // time (the batcher doesn't track incarnations).
                     epoch: 0,
+                    // (origin, batch_id) is globally unique, so the minted
+                    // id is too; retransmissions reuse it.
+                    trace: TraceCtx::mint(
+                        1,
+                        self.origin.0 as u64,
+                        self.next_batch_id,
+                        desc.id.0 as u64,
+                        now,
+                    ),
                 };
                 self.next_batch_id += 1;
                 out.push((shard, batch));
@@ -101,7 +114,7 @@ mod tests {
         let d = desc();
         let mut b = Batcher::new(ProcId(0), 100);
         let ups: Vec<_> = (0..200u64).map(|r| (RowId(r), RowUpdate::single(0, 1.0))).collect();
-        let batches = b.make_batches(&d, 4, ups, 3);
+        let batches = b.make_batches(&d, 4, ups, 3, 0);
         assert!(!batches.is_empty());
         let mut seen_rows = 0;
         for (shard, batch) in &batches {
@@ -121,8 +134,8 @@ mod tests {
         let mk = |n: u64| -> Vec<_> {
             (0..n).map(|r| (RowId(r), RowUpdate::single(0, 1.0))).collect()
         };
-        let first = b.make_batches(&d, 2, mk(5), 0);
-        let second = b.make_batches(&d, 2, mk(3), 1);
+        let first = b.make_batches(&d, 2, mk(5), 0, 0);
+        let second = b.make_batches(&d, 2, mk(3), 1, 0);
         let mut ids: Vec<u64> =
             first.iter().chain(second.iter()).map(|(_, b)| b.batch_id).collect();
         let sorted = {
@@ -141,16 +154,29 @@ mod tests {
         let d = desc();
         let mut b = Batcher::new(ProcId(0), 3);
         let ups: Vec<_> = (0..10u64).map(|r| (RowId(r), RowUpdate::single(0, 1.0))).collect();
-        for (_, batch) in b.make_batches(&d, 1, ups, 0) {
+        for (_, batch) in b.make_batches(&d, 1, ups, 0, 0) {
             assert!(batch.updates.len() <= 3);
         }
+    }
+
+    #[test]
+    fn minted_trace_ids_unique_and_stamped() {
+        let d = desc();
+        let mut b = Batcher::new(ProcId(2), 2);
+        let ups: Vec<_> = (0..6u64).map(|r| (RowId(r), RowUpdate::single(0, 1.0))).collect();
+        let batches = b.make_batches(&d, 2, ups, 1, 77);
+        let ids: std::collections::HashSet<u64> =
+            batches.iter().map(|(_, b)| b.trace.id).collect();
+        assert_eq!(ids.len(), batches.len(), "one trace id per batch");
+        assert!(!ids.contains(&0));
+        assert!(batches.iter().all(|(_, b)| b.trace.at_us == 77));
     }
 
     #[test]
     fn empty_input_no_batches() {
         let d = desc();
         let mut b = Batcher::new(ProcId(0), 8);
-        assert!(b.make_batches(&d, 4, vec![], 0).is_empty());
+        assert!(b.make_batches(&d, 4, vec![], 0, 0).is_empty());
         assert_eq!(b.next_id(), 0);
     }
 }

@@ -524,6 +524,7 @@ mod tests {
                 data: std::sync::Arc::new(crate::table::RowData::Dense(vec![0.0; 25_000])), // 100 KB
                 clock: 0,
                 worker: crate::types::WorkerId(0),
+                trace: crate::trace::TraceCtx::NONE,
             },
         };
         let t0 = Instant::now();

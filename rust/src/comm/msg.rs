@@ -14,6 +14,7 @@
 use std::sync::Arc;
 
 use crate::table::{RowData, RowId, RowUpdate, TableId};
+use crate::trace::TraceCtx;
 use crate::types::{Clock, NodeId, ProcId, ShardId, WorkerId};
 
 /// A batch of updates pushed from a client process to the owning shard.
@@ -46,12 +47,17 @@ pub struct PushBatch {
     /// them could break per-origin FIFO (a fresh batch overtaking a pending
     /// retransmission of an older one).
     pub epoch: u32,
+    /// Causal trace context minted at batch-seal time. Follows the batch
+    /// through retransmissions and the forwarded [`ServerPushBatch`] so
+    /// every layer's span carries the same trace id.
+    pub trace: TraceCtx,
 }
 
 impl PushBatch {
-    /// Approximate wire size (drives the bandwidth simulation).
+    /// Approximate wire size (drives the bandwidth simulation). The trace
+    /// context costs 16 bytes.
     pub fn wire_bytes(&self) -> usize {
-        32 + self.updates.iter().map(|(_, u)| 12 + u.wire_bytes()).sum::<usize>()
+        48 + self.updates.iter().map(|(_, u)| 12 + u.wire_bytes()).sum::<usize>()
     }
 }
 
@@ -72,12 +78,14 @@ pub struct ServerPushBatch {
     /// The shard's min process clock at forward time; receiving caches may
     /// raise row freshness to this value.
     pub min_clock: Clock,
+    /// The origin batch's trace context, carried through the fan-out.
+    pub trace: TraceCtx,
 }
 
 impl ServerPushBatch {
-    /// Approximate wire size.
+    /// Approximate wire size (16 of which is the trace context).
     pub fn wire_bytes(&self) -> usize {
-        32 + self.updates.iter().map(|(_, u)| 12 + u.wire_bytes()).sum::<usize>()
+        48 + self.updates.iter().map(|(_, u)| 12 + u.wire_bytes()).sum::<usize>()
     }
 }
 
@@ -98,6 +106,10 @@ pub enum Payload {
         needed_clock: Clock,
         /// Requesting worker (echoed in the reply).
         worker: WorkerId,
+        /// Trace context minted at request-issue time; the shard echoes it
+        /// in the reply so the client can close the pull span without a
+        /// request table.
+        trace: TraceCtx,
     },
     /// Server → client: full-row reply to a pull.
     PullReply {
@@ -112,6 +124,8 @@ pub enum Payload {
         clock: Clock,
         /// The worker that asked.
         worker: WorkerId,
+        /// Echo of the request's trace context.
+        trace: TraceCtx,
     },
     /// Client → every server shard: this process's min thread clock moved.
     /// A notification is a *promise*: no future update from `proc` will be
@@ -205,8 +219,8 @@ impl Payload {
         match self {
             Payload::PushUpdates(b) => b.wire_bytes(),
             Payload::ServerPush(b) => b.wire_bytes(),
-            Payload::PullReply { data, .. } => 32 + data.wire_bytes(),
-            Payload::PullRow { .. } => 32,
+            Payload::PullReply { data, .. } => 48 + data.wire_bytes(),
+            Payload::PullRow { .. } => 48,
             Payload::ClockNotify { .. }
             | Payload::PushAck { .. }
             | Payload::VisibilityAck { .. }
@@ -287,6 +301,7 @@ mod tests {
             updates: Arc::new(vec![(RowId(0), RowUpdate::single(0, 1.0))]),
             clock: 0,
             epoch: 0,
+            trace: TraceCtx::NONE,
         };
         let big = PushBatch {
             updates: Arc::new(

@@ -237,8 +237,14 @@ pub struct SystemConfig {
     pub apply_threads: u32,
     /// Directory holding AOT artifacts (`*.hlo.txt`).
     pub artifacts_dir: PathBuf,
-    /// Enable the event-trace recorder (costly; used by tests/Fig-1 bench).
+    /// Enable the *legacy* event-trace recorder (costly; used by tests and
+    /// the Fig-1 bench). Span capture — the always-on causal tracer — is
+    /// independent of this flag and controlled by `trace_ring_slots`.
     pub trace: bool,
+    /// Capacity (in spans) of each per-node trace ring. The record path is
+    /// lock-free; overflow drops the oldest span and bumps
+    /// `trace_spans_dropped_total`.
+    pub trace_ring_slots: usize,
     /// Use magnitude-priority ordering when draining the oplog (paper
     /// §4.2); `false` = FIFO. Ablation E6 flips this.
     pub magnitude_priority: bool,
@@ -270,8 +276,8 @@ impl SystemConfig {
     /// `max_batch_updates`, `wait_timeout_ms`, `pull_retry_ms`,
     /// `heartbeat_interval_us`, `heartbeat_deadline_us`,
     /// `checkpoint_every`, `apply_threads`, `artifacts_dir`, `trace`,
-    /// `magnitude_priority`, `metrics_listen`, `straggler_workers`
-    /// (comma list), `straggler_slowdown`.
+    /// `magnitude_priority`, `metrics_listen`, `trace_ring_slots`,
+    /// `straggler_workers` (comma list), `straggler_slowdown`.
     pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
         let text = std::fs::read_to_string(path.as_ref())?;
         let mut kv = HashMap::new();
@@ -346,6 +352,9 @@ impl SystemConfig {
         if let Some(v) = kv.get("trace") {
             b = b.trace(v == "true" || v == "1");
         }
+        if let Some(v) = parse_u64(&kv, "trace_ring_slots")? {
+            b = b.trace_ring_slots(v as usize);
+        }
         if let Some(v) = kv.get("magnitude_priority") {
             b = b.magnitude_priority(v == "true" || v == "1");
         }
@@ -391,6 +400,9 @@ impl SystemConfig {
         if self.apply_threads == 0 {
             return Err(Error::Config("apply_threads must be ≥ 1".into()));
         }
+        if self.trace_ring_slots == 0 {
+            return Err(Error::Config("trace_ring_slots must be ≥ 1".into()));
+        }
         Ok(())
     }
 }
@@ -420,6 +432,7 @@ impl Default for SystemConfigBuilder {
                 apply_threads: 1,
                 artifacts_dir: PathBuf::from("artifacts"),
                 trace: false,
+                trace_ring_slots: crate::trace::DEFAULT_RING_SLOTS,
                 magnitude_priority: true,
                 metrics_listen: None,
             },
@@ -501,6 +514,11 @@ impl SystemConfigBuilder {
     /// Enable/disable the event trace.
     pub fn trace(mut self, on: bool) -> Self {
         self.cfg.trace = on;
+        self
+    }
+    /// Per-node span-ring capacity for the causal tracer.
+    pub fn trace_ring_slots(mut self, slots: usize) -> Self {
+        self.cfg.trace_ring_slots = slots;
         self
     }
     /// Enable/disable magnitude-priority update scheduling.

@@ -59,7 +59,12 @@ impl PsSystem {
         let hub = Arc::new(Registry::new());
         let network = Network::new_with_metrics(cfg.net.clone(), Arc::new(NetMetrics::new(&hub)));
         let registry = Arc::new(TableRegistry::default());
-        let trace = Arc::new(TraceRecorder::new(cfg.trace));
+        let trace = Arc::new(TraceRecorder::with_registry(
+            cfg.trace,
+            hub.clone(),
+            crate::trace::TraceClock::wall(),
+            cfg.trace_ring_slots,
+        ));
 
         // Register every endpoint before spawning anything, so no early
         // message can hit an unregistered mailbox.
@@ -132,6 +137,31 @@ impl PsSystem {
             cores.push(core);
         }
 
+        // Health probe for `GET /healthz`: shard liveness is inferred from
+        // each shard's durable incarnation epoch (a respawn bumps it), so
+        // the probe works whether or not the failure monitor runs.
+        let h_persists = persists.clone();
+        let h_hub = hub.clone();
+        let num_shards = cfg.num_server_shards;
+        let num_procs = cfg.num_client_procs;
+        let health: metrics::HealthProbe = Arc::new(move || {
+            let epochs: Vec<String> = h_persists
+                .iter()
+                .map(|p| p.epoch().map(|e| e.to_string()).unwrap_or_else(|_| "-1".into()))
+                .collect();
+            let snap = h_hub.snapshot();
+            format!(
+                "{{\"status\":\"ok\",\"shards\":{},\"procs\":{},\"epochs\":[{}],\
+                 \"respawns\":{},\"pushes_applied\":{},\"trace_spans_dropped\":{}}}\n",
+                num_shards,
+                num_procs,
+                epochs.join(","),
+                snap.counter_sum("coord_shard_respawns_total"),
+                snap.counter_sum("shard_pushes_applied_total"),
+                snap.counter_sum("trace_spans_dropped_total"),
+            )
+        });
+
         // Failure monitor: heartbeats + respawn-from-durable-state. Off
         // by default (`heartbeat_interval_us == 0`).
         let monitor_stop = Arc::new(AtomicBool::new(false));
@@ -159,7 +189,14 @@ impl PsSystem {
         };
 
         let serve_handle = match &cfg.metrics_listen {
-            Some(addr) => Some(metrics::serve(hub.clone(), addr).map_err(Error::Io)?),
+            Some(addr) => Some(
+                metrics::serve_with(
+                    hub.clone(),
+                    addr,
+                    metrics::ServeOpts { trace: Some(trace.clone()), health: Some(health) },
+                )
+                .map_err(Error::Io)?,
+            ),
             None => None,
         };
 

@@ -46,7 +46,9 @@ pub use registry::{
     untouched_across, untouched_names_across, Counter, Gauge, Histogram, Registry, Sample,
     SampleValue, Snapshot, HIST_BUCKETS,
 };
-pub use serve::{serve, spawn_reporter, ReporterHandle, ServeHandle};
+pub use serve::{
+    serve, serve_with, spawn_reporter, HealthProbe, ReporterHandle, ServeHandle, ServeOpts,
+};
 
 /// Network counters by wire kind, plus total bytes and the dispatcher's
 /// in-flight queue depth. Lock-free: one atomic add per message.

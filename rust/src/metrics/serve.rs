@@ -6,6 +6,10 @@
 //! scraper: `GET /metrics` returns the text exposition, `GET
 //! /metrics.json` the deterministic JSON dump, anything else 404. One
 //! request per connection (`Connection: close`), no keep-alive, no TLS.
+//!
+//! [`serve_with`] additionally wires `GET /trace` (Chrome/Perfetto JSON
+//! from the span recorder) and `GET /healthz` (liveness summary from a
+//! caller-supplied probe) — both optional, both 404 when unconfigured.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -14,7 +18,21 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::trace::TraceRecorder;
+
 use super::registry::{Registry, Snapshot};
+
+/// Health probe: returns a small JSON body for `GET /healthz`.
+pub type HealthProbe = Arc<dyn Fn() -> String + Send + Sync>;
+
+/// Optional extras for [`serve_with`].
+#[derive(Default, Clone)]
+pub struct ServeOpts {
+    /// Serve `GET /trace` as Chrome/Perfetto JSON from this recorder.
+    pub trace: Option<Arc<TraceRecorder>>,
+    /// Serve `GET /healthz` from this probe (JSON; probe decides content).
+    pub health: Option<HealthProbe>,
+}
 
 /// Handle to a running scrape endpoint; dropping it leaks the thread, so
 /// call [`ServeHandle::shutdown`].
@@ -44,6 +62,15 @@ impl ServeHandle {
 /// Bind `addr` (e.g. `"127.0.0.1:9898"` or `"127.0.0.1:0"`) and serve
 /// scrapes of `registry` from a background thread.
 pub fn serve(registry: Arc<Registry>, addr: &str) -> std::io::Result<ServeHandle> {
+    serve_with(registry, addr, ServeOpts::default())
+}
+
+/// [`serve`] plus the optional `/trace` and `/healthz` routes.
+pub fn serve_with(
+    registry: Arc<Registry>,
+    addr: &str,
+    opts: ServeOpts,
+) -> std::io::Result<ServeHandle> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
@@ -56,13 +83,17 @@ pub fn serve(registry: Arc<Registry>, addr: &str) -> std::io::Result<ServeHandle
                     break;
                 }
                 // Serve inline: scrapes are rare and tiny.
-                let _ = handle_conn(stream, &registry);
+                let _ = handle_conn(stream, &registry, &opts);
             }
         })?;
     Ok(ServeHandle { addr: local, stop, thread: Some(thread) })
 }
 
-fn handle_conn(mut stream: TcpStream, registry: &Registry) -> std::io::Result<()> {
+fn handle_conn(
+    mut stream: TcpStream,
+    registry: &Registry,
+    opts: &ServeOpts,
+) -> std::io::Result<()> {
     stream.set_read_timeout(Some(Duration::from_secs(5)))?;
     let mut buf = [0u8; 1024];
     let n = stream.read(&mut buf)?;
@@ -75,6 +106,14 @@ fn handle_conn(mut stream: TcpStream, registry: &Registry) -> std::io::Result<()
             registry.snapshot().render_prometheus(),
         ),
         "/metrics.json" => ("200 OK", "application/json", registry.snapshot().render_json()),
+        "/trace" => match &opts.trace {
+            Some(t) => ("200 OK", "application/json", t.trace_json()),
+            None => ("404 Not Found", "text/plain", "tracing not enabled\n".to_string()),
+        },
+        "/healthz" => match &opts.health {
+            Some(probe) => ("200 OK", "application/json", probe()),
+            None => ("404 Not Found", "text/plain", "no health probe\n".to_string()),
+        },
         _ => ("404 Not Found", "text/plain", "not found\n".to_string()),
     };
     let resp = format!(
@@ -154,6 +193,39 @@ mod tests {
         let json = scrape(addr, "/metrics.json");
         assert!(json.contains("\"scrape_me_total\""), "{json}");
         let missing = scrape(addr, "/nope");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+        h.shutdown();
+    }
+
+    #[test]
+    fn trace_and_healthz_routes() {
+        let reg = Arc::new(Registry::new());
+        let tr = Arc::new(TraceRecorder::new(true));
+        tr.sink(crate::trace::SpanNode::Client(crate::types::ProcId(0))).span(
+            crate::trace::SpanKind::Batch,
+            7,
+            10,
+            20,
+            [0, 0, 0, 0],
+        );
+        let probe: HealthProbe = Arc::new(|| "{\"ok\":true}".to_string());
+        let h = serve_with(
+            reg,
+            "127.0.0.1:0",
+            ServeOpts { trace: Some(tr), health: Some(probe) },
+        )
+        .unwrap();
+        let addr = h.local_addr();
+        let trace = scrape(addr, "/trace");
+        assert!(trace.starts_with("HTTP/1.1 200 OK"), "{trace}");
+        assert!(trace.contains("traceEvents"), "{trace}");
+        let health = scrape(addr, "/healthz");
+        assert!(health.contains("{\"ok\":true}"), "{health}");
+        h.shutdown();
+
+        // Unconfigured routes 404 instead of panicking.
+        let h = serve(Arc::new(Registry::new()), "127.0.0.1:0").unwrap();
+        let missing = scrape(h.local_addr(), "/trace");
         assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
         h.shutdown();
     }

@@ -32,6 +32,7 @@ use std::sync::{Arc, Mutex};
 use crate::comm::msg::PushBatch;
 use crate::error::{Error, Result};
 use crate::table::{RowData, RowId, RowUpdate, TableId, TableStore};
+use crate::trace::TraceCtx;
 use crate::types::{Clock, ProcId};
 
 use super::visibility::VisibilityImage;
@@ -321,6 +322,11 @@ fn put_push_batch(b: &mut Vec<u8>, p: &PushBatch) {
     put_u64(b, p.batch_id);
     put_u32(b, p.clock);
     put_u32(b, p.epoch);
+    // Trace context rides the WAL so replayed batches keep their causal
+    // identity (replay itself records no spans, but forwarded state must
+    // not lose the id).
+    put_u64(b, p.trace.id);
+    put_u64(b, p.trace.at_us);
     put_u32(b, p.updates.len() as u32);
     for (row, u) in p.updates.iter() {
         put_u64(b, row.0);
@@ -334,13 +340,14 @@ fn get_push_batch(r: &mut Reader) -> Result<PushBatch> {
     let batch_id = r.u64()?;
     let clock = r.u32()?;
     let epoch = r.u32()?;
+    let trace = TraceCtx { id: r.u64()?, at_us: r.u64()? };
     let n = r.u32()? as usize;
     let mut updates = Vec::with_capacity(n);
     for _ in 0..n {
         let row = RowId(r.u64()?);
         updates.push((row, get_row_update(r)?));
     }
-    Ok(PushBatch { table, origin, batch_id, updates: Arc::new(updates), clock, epoch })
+    Ok(PushBatch { table, origin, batch_id, updates: Arc::new(updates), clock, epoch, trace })
 }
 
 /// Encode one WAL record (without framing).
@@ -687,6 +694,7 @@ mod tests {
             ]),
             clock: 4,
             epoch: 2,
+            trace: TraceCtx { id: 0xfeed_beef, at_us: 42 },
         }
     }
 

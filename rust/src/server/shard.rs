@@ -11,9 +11,8 @@ use crate::consistency::ConsistencyModel;
 use crate::error::{Error, Result};
 use crate::metrics::{ApplyPoolMetrics, ShardMetrics};
 use crate::table::{RowData, RowId, RowUpdate, TableDesc, TableId, TableStore};
+use crate::trace::{Event, SpanKind, SpanNode, SpanSink, TraceCtx, TraceRecorder};
 use crate::types::{Clock, NodeId, ProcId, ShardId, WorkerId};
-
-use crate::trace::{Event, TraceRecorder};
 
 use super::apply::ApplyPool;
 use super::persist::{self, MemPersistence, PersistHandle, ShardCheckpoint, TableImage, WalRecord};
@@ -146,6 +145,8 @@ struct DeferredPull {
     requester: NodeId,
     /// Arrival time (registry clock) — feeds `shard_pull_serve_us`.
     asked_at: u64,
+    /// The request's trace context, echoed in the eventual reply.
+    trace: TraceCtx,
 }
 
 /// One server shard: owns its partition of every table, applies pushes,
@@ -189,6 +190,16 @@ pub struct ServerShard {
     contended_seen: u64,
     /// Pool fan-out total already exported to `pool_metrics`.
     fanned_seen: u64,
+    /// This shard's span-recording lane.
+    sink: SpanSink,
+    /// Open `held` spans: admission-denied batches awaiting release,
+    /// keyed by batch identity → (trace id, hold start). In-memory only —
+    /// a crash loses the open edge, and the span is simply not emitted
+    /// (the completeness oracle runs on crash-free schedules).
+    held_at: HashMap<(TableId, ProcId, u64), (u64, u64)>,
+    /// Open `visible` spans: forwarded batches awaiting their final ack,
+    /// keyed by batch identity → (trace id, forward time).
+    fanout_at: HashMap<(TableId, ProcId, u64), (u64, u64)>,
 }
 
 impl ServerShard {
@@ -235,6 +246,7 @@ impl ServerShard {
         let vclock = VectorClock::new((0..num_client_procs).map(ProcId));
         let epoch = opts.persist.epoch().unwrap_or(0);
         let pool = (opts.apply_threads > 1).then(|| ApplyPool::new(id.0, opts.apply_threads));
+        let sink = trace.sink(SpanNode::Shard(id));
         ServerShard {
             id,
             num_client_procs,
@@ -256,6 +268,9 @@ impl ServerShard {
             pool_metrics: opts.pool_metrics,
             contended_seen: 0,
             fanned_seen: 0,
+            sink,
+            held_at: HashMap::new(),
+            fanout_at: HashMap::new(),
         }
     }
 
@@ -435,7 +450,7 @@ impl ServerShard {
             self.last_broadcast = m;
             if !self.replaying {
                 self.trace.record(|| Event::Broadcast {
-                    at: std::time::Instant::now(),
+                    at: self.trace.now_us(),
                     shard: self.id.0,
                     clock: m,
                 });
@@ -453,7 +468,7 @@ impl ServerShard {
             self.deferred.drain(..).partition(|d| d.needed <= m);
         self.deferred = rest;
         for d in ready {
-            self.reply_pull(d.requester, d.table, d.row, d.worker, d.asked_at);
+            self.reply_pull(d.requester, d.table, d.row, d.worker, d.asked_at, d.trace);
         }
     }
 
@@ -481,8 +496,8 @@ impl ServerShard {
     pub fn handle(&mut self, msg: Msg) -> bool {
         match msg.payload {
             Payload::PushUpdates(batch) => self.on_push(batch),
-            Payload::PullRow { table, row, needed_clock, worker } => {
-                self.on_pull(msg.src, table, row, needed_clock, worker)
+            Payload::PullRow { table, row, needed_clock, worker, trace } => {
+                self.on_pull(msg.src, table, row, needed_clock, worker, trace)
             }
             Payload::ClockNotify { proc, clock, epoch } => self.on_clock(proc, clock, epoch),
             Payload::PushAck { table, origin, batch_id, by } => {
@@ -523,6 +538,7 @@ impl ServerShard {
     }
 
     fn on_push(&mut self, batch: PushBatch) {
+        let arrived = self.trace.now_us();
         // Epoch fence: a batch stamped with an older incarnation was sent
         // before its origin resynced with this recovery; accepting it could
         // break per-origin FIFO against a pending retransmission. (Disabled
@@ -548,10 +564,19 @@ impl ServerShard {
             return;
         }
         let num_procs = self.num_client_procs;
+        // Batch identity + trace context outlive the moves below.
+        let (origin, batch_id, btrace) = (batch.origin, batch.batch_id, batch.trace);
+        let key = [batch.table.0 as u64, origin.0 as u64, batch_id, 0];
         if !self.replaying {
             self.metrics.pushes_applied.inc();
+            // One `net` span per *accepted* batch: sealed/sent → applied
+            // here. Fenced and deduped arrivals record nothing, so the
+            // span count matches the oracle's applied-batch count.
+            if !btrace.is_none() {
+                self.sink.span(SpanKind::Net, btrace.id, btrace.at_us, arrived, key);
+            }
             self.trace.record(|| Event::ShardApplied {
-                at: std::time::Instant::now(),
+                at: self.trace.now_us(),
                 shard: self.id.0,
                 origin: batch.origin,
                 batch_id: batch.batch_id,
@@ -565,10 +590,14 @@ impl ServerShard {
         let batch_table = batch.table;
         // Apply to the authoritative partition (pooled when configured).
         let apply_t0 = self.metrics.now_us();
+        let span_t0 = self.trace.now_us();
         let store = Arc::clone(&self.table(batch_table).store);
         self.apply_batch(&store, &batch.updates);
         if !self.replaying {
             self.metrics.apply_us.record(self.metrics.now_us().saturating_sub(apply_t0));
+            if !btrace.is_none() {
+                self.sink.span(SpanKind::Apply, btrace.id, span_t0, self.trace.now_us(), key);
+            }
         }
         // Admit through the (strong-VAP) release gate, then forward. The
         // forwarded-prefix replica advances in lockstep with the forwards
@@ -580,11 +609,27 @@ impl ServerShard {
             let admitted = t.vis.admit(&t.model, batch);
             (admitted, Arc::clone(&t.fwd))
         };
-        if let Some(b) = admitted {
-            self.apply_batch(&fwd, &b.updates);
-            if !self.replaying {
-                let min_clock = self.effective_min();
-                Self::forward(&self.net, self.id, num_procs, min_clock, b);
+        match admitted {
+            Some(b) => {
+                self.apply_batch(&fwd, &b.updates);
+                if !self.replaying {
+                    if !btrace.is_none() {
+                        self.fanout_at.insert(
+                            (batch_table, origin, batch_id),
+                            (btrace.id, self.trace.now_us()),
+                        );
+                    }
+                    let min_clock = self.effective_min();
+                    Self::forward(&self.net, self.id, num_procs, min_clock, b);
+                }
+            }
+            None => {
+                // Strong-VAP hold: open the `held` stage; closed when the
+                // release gate lets the batch through.
+                if !self.replaying && !btrace.is_none() {
+                    self.held_at
+                        .insert((batch_table, origin, batch_id), (btrace.id, self.trace.now_us()));
+                }
             }
         }
         self.export_pool_metrics();
@@ -640,6 +685,7 @@ impl ServerShard {
                 batch_id: b.batch_id,
                 updates: Arc::clone(&b.updates),
                 min_clock,
+                trace: b.trace,
             };
             let _ = net.send(Msg {
                 src: NodeId::Server(shard),
@@ -656,12 +702,21 @@ impl ServerShard {
         row: RowId,
         needed: Clock,
         worker: WorkerId,
+        trace: TraceCtx,
     ) {
         let asked_at = self.metrics.now_us();
         if self.effective_min() >= needed {
-            self.reply_pull(requester, table, row, worker, asked_at);
+            self.reply_pull(requester, table, row, worker, asked_at, trace);
         } else {
-            self.deferred.push(DeferredPull { needed, table, row, worker, requester, asked_at });
+            self.deferred.push(DeferredPull {
+                needed,
+                table,
+                row,
+                worker,
+                requester,
+                asked_at,
+                trace,
+            });
         }
     }
 
@@ -672,6 +727,7 @@ impl ServerShard {
         row: RowId,
         worker: WorkerId,
         asked_at: u64,
+        trace: TraceCtx,
     ) {
         self.metrics.pulls_served.inc();
         self.metrics.pull_serve_us.record(self.metrics.now_us().saturating_sub(asked_at));
@@ -689,7 +745,7 @@ impl ServerShard {
         let _ = self.net.send(Msg {
             src: NodeId::Server(self.id),
             dst: requester,
-            payload: Payload::PullReply { table, row, data, clock: min_clock, worker },
+            payload: Payload::PullReply { table, row, data, clock: min_clock, worker, trace },
         });
     }
 
@@ -728,6 +784,16 @@ impl ServerShard {
         };
         // Globally visible: notify the origin (releases VAP writers).
         if !self.replaying {
+            // Close the batch's `visible` stage: forwarded → last ack in.
+            if let Some((id, t0)) = self.fanout_at.remove(&(table, origin, batch_id)) {
+                self.sink.span(
+                    SpanKind::Visible,
+                    id,
+                    t0,
+                    self.trace.now_us(),
+                    [table.0 as u64, origin.0 as u64, batch_id, 0],
+                );
+            }
             let _ = self.net.send(Msg {
                 src: NodeId::Server(shard),
                 dst: NodeId::Client(origin),
@@ -743,8 +809,23 @@ impl ServerShard {
             }
         }
         if !self.replaying {
+            let now = self.trace.now_us();
             let min_clock = self.effective_min();
             for b in released {
+                let bkey = (b.table, b.origin, b.batch_id);
+                // Close the release-gate hold and open the fan-out stage.
+                if let Some((id, t0)) = self.held_at.remove(&bkey) {
+                    self.sink.span(
+                        SpanKind::Held,
+                        id,
+                        t0,
+                        now,
+                        [b.table.0 as u64, b.origin.0 as u64, b.batch_id, 0],
+                    );
+                }
+                if !b.trace.is_none() {
+                    self.fanout_at.insert(bkey, (b.trace.id, now));
+                }
                 Self::forward(&self.net, shard, num_procs, min_clock, b);
             }
         }
@@ -800,6 +881,7 @@ mod tests {
                 updates: Arc::new(vec![(RowId(row), RowUpdate::single(0, delta))]),
                 clock: 1,
                 epoch: 0,
+                trace: TraceCtx::mint(1, origin as u64, id, 0, 0),
             }),
         }
     }
@@ -840,6 +922,7 @@ mod tests {
                 row: RowId(1),
                 needed_clock: 1,
                 worker: WorkerId(0),
+                trace: TraceCtx::NONE,
             },
         });
         assert!(clients[0].try_recv().is_none(), "pull must be deferred");
@@ -974,6 +1057,7 @@ mod tests {
                 updates: Arc::new(vec![(RowId(row), RowUpdate::single(0, delta))]),
                 clock: 1,
                 epoch,
+                trace: TraceCtx::mint(1, origin as u64, id, 0, 0),
             }),
         }
     }

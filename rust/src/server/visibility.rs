@@ -312,6 +312,7 @@ mod tests {
             updates: std::sync::Arc::new(vec![(RowId(row), RowUpdate::single(0, delta))]),
             clock: 0,
             epoch: 0,
+            trace: crate::trace::TraceCtx::NONE,
         }
     }
 

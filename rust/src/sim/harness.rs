@@ -10,7 +10,7 @@
 //! See [`crate::sim`] for the determinism contract and the fault model.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BinaryHeap, HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -22,7 +22,7 @@ use crate::consistency::vap;
 use crate::metrics::{CoordMetrics, NetMetrics, Registry, ShardMetrics, Snapshot};
 use crate::server::{MemPersistence, ServerShard, ShardOptions, TableRegistry};
 use crate::table::{RowId, RowKind, TableDesc, TableId};
-use crate::trace::TraceRecorder;
+use crate::trace::{SpanKind, TraceClock, TraceRecorder};
 use crate::types::{Clock, NodeId, ProcId, ShardId, WorkerId};
 use crate::util::Rng64;
 
@@ -108,6 +108,10 @@ pub struct SimReport {
     /// Oracle's count of distinct accepted push batches (mirror of
     /// `shard_pushes_applied_total`).
     pub oracle_applied_batches: u64,
+    /// Perfetto JSON from the span recorder (only populated by
+    /// [`Sim::run_traced`]). Virtual-clocked, so byte-identical per
+    /// `(SimConfig, seed)`.
+    pub trace_json: Option<String>,
 }
 
 impl SimReport {
@@ -268,6 +272,9 @@ pub struct Oracle {
     /// Distinct push batches accepted (dedup'd, post-fence) across all
     /// shards — the wire-fed mirror of `shard_pushes_applied_total`.
     pub applied_batches: u64,
+    /// Identity of every accepted batch, `(origin, batch_id)` — the join
+    /// key for the span-tree completeness check.
+    pub accepted: HashSet<(u32, u64)>,
     violations: Vec<Violation>,
     truncated: u64,
 }
@@ -285,6 +292,7 @@ impl Oracle {
             u_obs: 0.0,
             max_staleness: 0,
             applied_batches: 0,
+            accepted: HashSet::new(),
             violations: Vec::new(),
             truncated: 0,
         }
@@ -333,6 +341,7 @@ impl Oracle {
                 }
                 self.applied_upto.insert(key, b.batch_id);
                 self.applied_batches += 1;
+                self.accepted.insert((b.origin.0, b.batch_id));
                 if self.policy.v_thr().is_some() {
                     let mut masses: Vec<((u64, u32), f64)> = Vec::new();
                     for (row, u) in b.updates.iter() {
@@ -584,6 +593,16 @@ impl Sim {
         // the schedule, never of the wall — snapshots are reproducible.
         let vclock = Arc::new(AtomicU64::new(0));
         let hub = Arc::new(Registry::with_virtual_clock(vclock.clone()));
+        // One span recorder for the whole cluster, on the same virtual
+        // clock: every span timestamp is a function of the schedule, so
+        // the Perfetto export is byte-identical per seed. Legacy events
+        // stay off (the sim keeps its own line trace).
+        let spans = Arc::new(TraceRecorder::with_registry(
+            false,
+            hub.clone(),
+            TraceClock::Virtual(vclock.clone()),
+            crate::trace::DEFAULT_RING_SLOTS,
+        ));
         let net = Arc::new(SimNet::new_with_metrics(
             cfg.seed ^ 0x9E37_79B9_7F4A_7C15,
             cfg.faults,
@@ -622,7 +641,7 @@ impl Sim {
                     cfg.procs,
                     registry.clone(),
                     sender.clone(),
-                    Arc::new(TraceRecorder::new(false)),
+                    spans.clone(),
                     shard_opts(s as usize),
                 ))
             })
@@ -634,7 +653,7 @@ impl Sim {
                     sys.clone(),
                     registry.clone(),
                     sender.clone(),
-                    Arc::new(TraceRecorder::new(false)),
+                    spans.clone(),
                     hub.clone(),
                 )
             })
@@ -786,7 +805,7 @@ impl Sim {
                             cfg.procs,
                             registry.clone(),
                             sender.clone(),
-                            Arc::new(TraceRecorder::new(false)),
+                            spans.clone(),
                             shard_opts(idx),
                         )
                         .expect("recovery from in-memory persistence");
@@ -943,7 +962,7 @@ impl Sim {
                 cfg.procs,
                 registry.clone(),
                 sender.clone(),
-                Arc::new(TraceRecorder::new(false)),
+                spans.clone(),
                 shard_opts(idx),
             )
             .expect("recovery from in-memory persistence");
@@ -994,6 +1013,52 @@ impl Sim {
             .collect();
         oracle.check_quiescence(now, cfg, &desc, &cores, &shards, &own_finals);
 
+        // Span-tree completeness: on crash-free schedules every accepted
+        // batch must have a closed batch→net→apply→visible chain, and no
+        // lifecycle span may reference a batch the wire never accepted.
+        // A crash legitimately truncates chains (the respawned shard's
+        // open-span maps are in-memory), and a saturated ring legitimately
+        // loses spans — both are excluded, and the zero-drop expectation
+        // is asserted separately by the CI trace slice.
+        if cfg.faults.crash.is_none() && spans.dropped_spans() == 0 {
+            let mut have: HashMap<u64, HashSet<(u32, u64)>> = HashMap::new();
+            for (_, recs) in spans.spans() {
+                for r in &recs {
+                    if r.kind != SpanKind::Pull as u64 {
+                        have.entry(r.kind).or_default().insert((r.b as u32, r.c));
+                        if !oracle.accepted.contains(&(r.b as u32, r.c)) {
+                            oracle.violate(
+                                now,
+                                "span-orphan",
+                                format!(
+                                    "kind {} span for origin {} batch {} never accepted",
+                                    r.kind, r.b, r.c
+                                ),
+                            );
+                        }
+                    }
+                }
+            }
+            let chain = [SpanKind::Batch, SpanKind::Net, SpanKind::Apply, SpanKind::Visible];
+            for &(origin, batch_id) in &oracle.accepted {
+                for kind in chain {
+                    let ok = have
+                        .get(&(kind as u64))
+                        .is_some_and(|set| set.contains(&(origin, batch_id)));
+                    if !ok {
+                        oracle.violate(
+                            now,
+                            "span-chain",
+                            format!(
+                                "origin {origin} batch {batch_id}: no {} span",
+                                kind.stage()
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+
         SimReport {
             seed: cfg.seed,
             policy: cfg.policy.name(),
@@ -1011,6 +1076,7 @@ impl Sim {
             oracle_max_staleness: oracle.max_staleness,
             oracle_u_obs: oracle.u_obs,
             oracle_applied_batches: oracle.applied_batches,
+            trace_json: keep_trace.then(|| spans.trace_json()),
         }
     }
 }

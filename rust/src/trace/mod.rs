@@ -1,212 +1,507 @@
-//! Event tracing.
+//! Causal tracing: always-on span recorder + legacy event timeline.
 //!
-//! When enabled (`SystemConfig::trace`), the client library and server
-//! shards record a timeline of update lifecycle events: generated →
-//! pushed → applied-at-server → visible-everywhere, plus every blocking
-//! episode with its reason. The trace is how the tests *prove* the
-//! consistency invariants (e.g. Lemma 1's `|A_t|+|B_t| ≤ 2·v_thr·(P−1)`
-//! and the Figure-1 VAP blocking schedule) rather than asserting them
-//! indirectly, and how `benches/consistency.rs -- fig1` regenerates the
-//! paper's Figure 1.
+//! Two recording surfaces share one clock and one exporter:
+//!
+//! * **Spans** — the always-on, low-overhead path. Each layer records
+//!   closed `[t0, t1]` intervals keyed by a causal [`TraceCtx`] minted at
+//!   batch-seal (or pull-issue) time and propagated through the
+//!   `comm::msg` envelopes, so one update's life — batched → on the wire
+//!   → applied → held → visible — stitches into a single span tree across
+//!   client, shard, apply and visibility layers. The record path is
+//!   lock-free: a per-node seqlock ring ([`SpanRing`]) written through a
+//!   cheap [`SpanSink`] handle; a full ring overwrites the oldest span
+//!   and bumps `trace_spans_dropped_total` in the metrics registry.
+//!   Span durations also feed `trace_stage_us{stage=...}` histograms —
+//!   the per-stage latency breakdown the consistency models trade
+//!   against.
+//! * **Events** — the original [`Event`] timeline (Fig-1 bench, VAP
+//!   blocking-schedule tests). Off by default (`SystemConfig::trace`);
+//!   kept as a thin adapter that encodes each event into a dedicated
+//!   ring, preserving global record order and the textual
+//!   [`TraceRecorder::render`] format.
+//!
+//! Timestamps come from a [`TraceClock`] — wall time in production,
+//! the sim's shared virtual-time cell under the deterministic harness —
+//! so a simulated run's exported Chrome/Perfetto JSON
+//! ([`TraceRecorder::trace_json`]) is byte-identical per seed and the
+//! sim oracles can assert span-tree completeness.
 
-use std::sync::Mutex;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
+use crate::metrics::{Counter, Histogram, Registry};
 use crate::table::{RowId, TableId};
-use crate::types::{Clock, ProcId, WorkerId};
+use crate::types::{Clock, ProcId, ShardId, WorkerId};
 
-/// Why a worker blocked.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum BlockReason {
-    /// Read gate: cached row staleness exceeded the clock bound (CAP/SSP).
-    Staleness,
-    /// Write gate: accumulated unsynchronized magnitude would exceed
-    /// `v_thr` (VAP).
-    ValueBound,
+/// Default span-ring capacity per node (slots). Sized so the sim sweeps,
+/// the Fig-1 bench and the serve bench all fit without a single drop;
+/// production overrides via `SystemConfig::trace_ring_slots`.
+pub const DEFAULT_RING_SLOTS: usize = 8192;
+
+/// Where trace timestamps come from: a wall anchor (production) or the
+/// sim scheduler's shared virtual-time cell (determinism). Mirrors the
+/// metrics registry's time injection so spans and metric histograms agree
+/// under the sim.
+#[derive(Clone)]
+pub enum TraceClock {
+    /// Wall time, microseconds since the anchor.
+    Wall(Instant),
+    /// Virtual time: reads the cell the sim scheduler advances.
+    Virtual(Arc<AtomicU64>),
 }
 
-/// One trace event.
-#[derive(Debug, Clone)]
-pub enum Event {
-    /// A worker generated an update (Fig 1's `(seq, value)` pairs).
-    Inc {
-        /// When.
-        at: Instant,
-        /// Generating worker.
-        worker: WorkerId,
-        /// Table.
-        table: TableId,
-        /// Row.
-        row: RowId,
-        /// Column.
-        col: u32,
-        /// Delta value.
-        delta: f32,
-        /// Worker-local update sequence number.
-        seq: u64,
-    },
-    /// A batch left a client process for a shard.
-    Push {
-        /// When.
-        at: Instant,
-        /// Origin process.
-        proc: ProcId,
-        /// Table.
-        table: TableId,
-        /// Batch id.
-        batch_id: u64,
-        /// Number of row-deltas inside.
-        rows: usize,
-    },
-    /// The server reported a batch visible to all processes.
-    Visible {
-        /// When.
-        at: Instant,
-        /// Origin process.
-        proc: ProcId,
-        /// Table.
-        table: TableId,
-        /// Batch id.
-        batch_id: u64,
-    },
-    /// A worker started blocking.
-    BlockStart {
-        /// When.
-        at: Instant,
-        /// Blocked worker.
-        worker: WorkerId,
-        /// Table.
-        table: TableId,
-        /// Why.
-        reason: BlockReason,
-    },
-    /// The blocked worker resumed.
-    BlockEnd {
-        /// When.
-        at: Instant,
-        /// Worker.
-        worker: WorkerId,
-        /// Table.
-        table: TableId,
-        /// Why it had blocked.
-        reason: BlockReason,
-    },
-    /// A client process applied a server push (origin's batch).
-    Applied {
-        /// When.
-        at: Instant,
-        /// Applying process.
-        proc: ProcId,
-        /// Table.
-        table: TableId,
-        /// Batch origin.
-        origin: ProcId,
-        /// Batch id.
-        batch_id: u64,
-        /// Push's min_clock.
-        min_clock: Clock,
-    },
-    /// A client process raised a shard's freshness floor.
-    Floor {
-        /// When.
-        at: Instant,
-        /// Process.
-        proc: ProcId,
-        /// Shard.
-        shard: u32,
-        /// New floor.
-        clock: Clock,
-    },
-    /// A shard applied a client push batch.
-    ShardApplied {
-        /// When.
-        at: Instant,
-        /// Shard.
-        shard: u32,
-        /// Origin proc.
-        origin: ProcId,
-        /// Batch id.
-        batch_id: u64,
-        /// Rows inside.
-        rows: usize,
-    },
-    /// A shard broadcast a new min-clock frontier.
-    Broadcast {
-        /// When.
-        at: Instant,
-        /// Shard.
-        shard: u32,
-        /// Frontier.
-        clock: Clock,
-    },
-    /// A worker's clock ticked.
-    ClockTick {
-        /// When.
-        at: Instant,
-        /// Worker.
-        worker: WorkerId,
-        /// New clock value.
-        clock: Clock,
-    },
-}
+impl TraceClock {
+    /// A wall clock anchored now.
+    pub fn wall() -> Self {
+        TraceClock::Wall(Instant::now())
+    }
 
-impl Event {
-    /// Event timestamp.
-    pub fn at(&self) -> Instant {
+    /// Microseconds since the anchor / virtual time zero. Only
+    /// differences are meaningful.
+    pub fn now_us(&self) -> u64 {
         match self {
-            Event::Inc { at, .. }
-            | Event::Push { at, .. }
-            | Event::Visible { at, .. }
-            | Event::BlockStart { at, .. }
-            | Event::BlockEnd { at, .. }
-            | Event::Applied { at, .. }
-            | Event::Floor { at, .. }
-            | Event::ShardApplied { at, .. }
-            | Event::Broadcast { at, .. }
-            | Event::ClockTick { at, .. } => *at,
+            TraceClock::Wall(t0) => t0.elapsed().as_micros() as u64,
+            TraceClock::Virtual(c) => c.load(Ordering::Relaxed),
         }
     }
 }
 
-/// Shared, append-only trace recorder. Disabled recorders are free
-/// (a single atomic load on the hot path).
-pub struct TraceRecorder {
+/// Compact causal trace context carried inside message envelopes
+/// (16 bytes on the wire): the trace id minted at batch-seal / pull-issue
+/// time plus the mint timestamp, which anchors the receiver's `net` span
+/// without any clock exchange.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCtx {
+    /// Causal identity (0 = untraced).
+    pub id: u64,
+    /// Mint time (µs on the sender's trace clock).
+    pub at_us: u64,
+}
+
+impl TraceCtx {
+    /// The untraced context (id 0); receivers skip span recording for it.
+    pub const NONE: TraceCtx = TraceCtx { id: 0, at_us: 0 };
+
+    /// Is this the untraced context?
+    pub fn is_none(&self) -> bool {
+        self.id == 0
+    }
+
+    /// Mint a deterministic id from a lifecycle tag and identity words
+    /// (FNV-1a; forced nonzero). Push batches use
+    /// `(origin, batch_id, table)` — globally unique because each origin
+    /// runs one batch-id counter across shards.
+    pub fn mint(tag: u64, a: u64, b: u64, c: u64, at_us: u64) -> TraceCtx {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for w in [tag, a, b, c] {
+            for byte in w.to_le_bytes() {
+                h ^= byte as u64;
+                h = h.wrapping_mul(0x1000_0000_01b3);
+            }
+        }
+        TraceCtx { id: h.max(1), at_us }
+    }
+}
+
+/// Lifecycle stage a span covers. Discriminants are the wire/ring
+/// encoding; values ≥ 100 encode legacy [`Event`] variants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Client egress: first unsent update → batch sealed.
+    Batch = 1,
+    /// In flight: batch sealed/sent → accepted by the shard.
+    Net = 2,
+    /// Shard apply: WAL appended → store mutated.
+    Apply = 3,
+    /// Visibility gate: admission denied → released (strong VAP).
+    Held = 4,
+    /// Fan-out: forwarded to all procs → final ack (globally visible).
+    Visible = 5,
+    /// Pull round trip: request issued → reply installed.
+    Pull = 6,
+}
+
+impl SpanKind {
+    fn from_code(code: u64) -> Option<SpanKind> {
+        Some(match code {
+            1 => SpanKind::Batch,
+            2 => SpanKind::Net,
+            3 => SpanKind::Apply,
+            4 => SpanKind::Held,
+            5 => SpanKind::Visible,
+            6 => SpanKind::Pull,
+            _ => return None,
+        })
+    }
+
+    /// Stage label used by `trace_stage_us` and the Perfetto export.
+    pub fn stage(&self) -> &'static str {
+        match self {
+            SpanKind::Batch => "batch",
+            SpanKind::Net => "net",
+            SpanKind::Apply => "apply",
+            SpanKind::Held => "held",
+            SpanKind::Visible => "visible",
+            SpanKind::Pull => "pull",
+        }
+    }
+}
+
+const STAGES: [&str; 6] = ["batch", "net", "apply", "held", "visible", "pull"];
+
+/// Which node a ring (and its Perfetto "process" lane) belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanNode {
+    /// A client process.
+    Client(ProcId),
+    /// A server shard.
+    Shard(ShardId),
+    /// The legacy event timeline.
+    Legacy,
+}
+
+impl SpanNode {
+    fn pid(&self) -> u64 {
+        match self {
+            SpanNode::Legacy => 1,
+            SpanNode::Client(p) => 100 + p.0 as u64,
+            SpanNode::Shard(s) => 200 + s.0 as u64,
+        }
+    }
+
+    fn name(&self) -> String {
+        match self {
+            SpanNode::Legacy => "events".into(),
+            SpanNode::Client(p) => format!("client{}", p.0),
+            SpanNode::Shard(s) => format!("shard{}", s.0),
+        }
+    }
+}
+
+/// One decoded ring record. For spans, `a/b/c` carry
+/// `(table, origin, batch_id)` — the identity the sim's span-tree oracle
+/// joins against its applied-batch mirror; `d` is kind-specific. Legacy
+/// events use `kind ≥ 100` and pack their payload across all lanes.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanRec {
+    /// Ring claim number (global record order within the ring).
+    pub seq: u64,
+    /// [`SpanKind`] discriminant, or `100 + variant` for legacy events.
+    pub kind: u64,
+    /// Causal trace id (0 for legacy events).
+    pub id: u64,
+    /// Open timestamp (µs).
+    pub t0: u64,
+    /// Close timestamp (µs; `== t0` for instants).
+    pub t1: u64,
+    /// Lane a (spans: table id).
+    pub a: u64,
+    /// Lane b (spans: origin proc).
+    pub b: u64,
+    /// Lane c (spans: batch id).
+    pub c: u64,
+    /// Lane d (kind-specific).
+    pub d: u64,
+    /// Lane e (kind-specific).
+    pub e: u64,
+    /// Lane f (kind-specific).
+    pub f: u64,
+}
+
+const SLOT_LANES: usize = 11; // seq, kind, id, t0, t1, a..f
+
+struct Slot {
+    /// Seqlock version: `2·wrap+1` while a writer owns the slot,
+    /// `2·wrap+2` once its record is complete, 0 never written.
+    ver: AtomicU64,
+    lanes: [AtomicU64; SLOT_LANES],
+}
+
+/// Bounded per-node span ring: lock-free writes (one `fetch_add` claim +
+/// plain stores under a seqlock version), drop-oldest on overflow.
+/// Readers ([`SpanRing::collect`]) skip slots a concurrent writer owns —
+/// exports run at quiescence, so in practice nothing is skipped.
+pub struct SpanRing {
+    cap: u64,
+    head: AtomicU64,
+    slots: Vec<Slot>,
+}
+
+impl SpanRing {
+    fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        SpanRing {
+            cap: cap as u64,
+            head: AtomicU64::new(0),
+            slots: (0..cap)
+                .map(|_| Slot { ver: AtomicU64::new(0), lanes: Default::default() })
+                .collect(),
+        }
+    }
+
+    /// Record one entry; returns true when an older record was
+    /// overwritten (the caller counts the drop).
+    fn record(&self, kind: u64, id: u64, t0: u64, t1: u64, rest: [u64; 6]) -> bool {
+        let n = self.head.fetch_add(1, Ordering::SeqCst);
+        let wrap = n / self.cap;
+        let slot = &self.slots[(n % self.cap) as usize];
+        slot.ver.store(2 * wrap + 1, Ordering::SeqCst);
+        let lanes = [n, kind, id, t0, t1, rest[0], rest[1], rest[2], rest[3], rest[4], rest[5]];
+        for (cell, v) in slot.lanes.iter().zip(lanes) {
+            cell.store(v, Ordering::SeqCst);
+        }
+        slot.ver.store(2 * wrap + 2, Ordering::SeqCst);
+        n >= self.cap
+    }
+
+    /// Snapshot every completed record, sorted by claim order.
+    fn collect(&self) -> Vec<SpanRec> {
+        let mut out = Vec::new();
+        for slot in &self.slots {
+            let v1 = slot.ver.load(Ordering::SeqCst);
+            if v1 == 0 || v1 % 2 == 1 {
+                continue; // never written, or a writer owns it right now
+            }
+            let mut lanes = [0u64; SLOT_LANES];
+            for (dst, cell) in lanes.iter_mut().zip(&slot.lanes) {
+                *dst = cell.load(Ordering::SeqCst);
+            }
+            if slot.ver.load(Ordering::SeqCst) != v1 {
+                continue; // torn: a writer reclaimed the slot mid-read
+            }
+            out.push(SpanRec {
+                seq: lanes[0],
+                kind: lanes[1],
+                id: lanes[2],
+                t0: lanes[3],
+                t1: lanes[4],
+                a: lanes[5],
+                b: lanes[6],
+                c: lanes[7],
+                d: lanes[8],
+                e: lanes[9],
+                f: lanes[10],
+            });
+        }
+        out.sort_by_key(|r| r.seq);
+        out
+    }
+
+    /// Records written so far (monotone, including dropped ones).
+    fn written(&self) -> u64 {
+        self.head.load(Ordering::SeqCst)
+    }
+}
+
+/// State shared by the recorder and every sink it hands out.
+struct Shared {
+    clock: TraceClock,
+    /// Gates the legacy [`Event`] surface only.
     enabled: AtomicBool,
-    events: Mutex<Vec<Event>>,
+    /// Gates span recording (on by default — "always-on"; the serve
+    /// bench flips it off to measure the recorder's overhead).
+    span_capture: AtomicBool,
+    ring_slots: usize,
+    hub: Option<Arc<Registry>>,
+    /// Per-stage `trace_stage_us` handles, registered lazily on the first
+    /// span of that stage so the dead-metric lint stays meaningful.
+    stage_us: [OnceLock<Arc<Histogram>>; STAGES.len()],
+    dropped_metric: OnceLock<Arc<Counter>>,
+    dropped: AtomicU64,
+    /// Registration-ordered span rings (one per node; the export's lane
+    /// order, deterministic because nodes register in construction order).
+    rings: Mutex<Vec<(SpanNode, Arc<SpanRing>)>>,
+    /// The legacy event ring (global claim order = record order).
+    legacy: Arc<SpanRing>,
+}
+
+impl Shared {
+    fn note_drop(&self) {
+        self.dropped.fetch_add(1, Ordering::Relaxed);
+        if let Some(hub) = &self.hub {
+            self.dropped_metric
+                .get_or_init(|| {
+                    hub.counter(
+                        "trace_spans_dropped_total",
+                        "spans overwritten by ring-buffer overflow",
+                        &[],
+                    )
+                })
+                .inc();
+        }
+    }
+
+    fn note_stage(&self, kind: SpanKind, dur_us: u64) {
+        if let Some(hub) = &self.hub {
+            let idx = STAGES.iter().position(|s| *s == kind.stage()).unwrap();
+            self.stage_us[idx]
+                .get_or_init(|| {
+                    hub.histogram(
+                        "trace_stage_us",
+                        "update-lifecycle stage latency from the span recorder",
+                        &[("stage", kind.stage())],
+                    )
+                })
+                .record(dur_us);
+        }
+    }
+}
+
+/// Lock-free per-node recording handle: an `Arc` pair (ring + shared
+/// state). Cheap to clone; one per client core / server shard.
+#[derive(Clone)]
+pub struct SpanSink {
+    shared: Arc<Shared>,
+    ring: Arc<SpanRing>,
+}
+
+impl SpanSink {
+    /// Current trace time (µs).
+    pub fn now_us(&self) -> u64 {
+        self.shared.clock.now_us()
+    }
+
+    /// Is span capture on?
+    pub fn capturing(&self) -> bool {
+        self.shared.span_capture.load(Ordering::Relaxed)
+    }
+
+    /// Record a closed span. `key` is `[table, origin, batch_id, extra]`:
+    /// the first three are the causal identity every lifecycle span
+    /// carries (the sim oracle's join key); `extra` is kind-specific.
+    pub fn span(&self, kind: SpanKind, id: u64, t0: u64, t1: u64, key: [u64; 4]) {
+        if !self.capturing() {
+            return;
+        }
+        if self.ring.record(kind as u64, id, t0, t1, [key[0], key[1], key[2], key[3], 0, 0]) {
+            self.shared.note_drop();
+        }
+        self.shared.note_stage(kind, t1.saturating_sub(t0));
+    }
+}
+
+/// The trace recorder: owns the clock, the per-node span rings and the
+/// legacy event ring. Shared as `Arc<TraceRecorder>` across every layer.
+pub struct TraceRecorder {
+    shared: Arc<Shared>,
 }
 
 impl TraceRecorder {
-    /// Create a recorder; `enabled=false` makes all records no-ops.
+    /// A wall-clock recorder with default ring size and no metric hub
+    /// (tests, benches). `enabled` gates the legacy event surface.
     pub fn new(enabled: bool) -> Self {
-        TraceRecorder { enabled: AtomicBool::new(enabled), events: Mutex::new(Vec::new()) }
+        Self::build(enabled, None, TraceClock::wall(), DEFAULT_RING_SLOTS)
     }
 
-    /// Is recording on?
+    /// Full constructor: metric hub for the stage histograms + drop
+    /// counter, an injected clock (virtual under the sim), ring capacity.
+    pub fn with_registry(
+        enabled: bool,
+        hub: Arc<Registry>,
+        clock: TraceClock,
+        ring_slots: usize,
+    ) -> Self {
+        Self::build(enabled, Some(hub), clock, ring_slots)
+    }
+
+    fn build(
+        enabled: bool,
+        hub: Option<Arc<Registry>>,
+        clock: TraceClock,
+        ring_slots: usize,
+    ) -> Self {
+        TraceRecorder {
+            shared: Arc::new(Shared {
+                clock,
+                enabled: AtomicBool::new(enabled),
+                span_capture: AtomicBool::new(true),
+                ring_slots,
+                hub,
+                stage_us: Default::default(),
+                dropped_metric: OnceLock::new(),
+                dropped: AtomicU64::new(0),
+                rings: Mutex::new(Vec::new()),
+                legacy: Arc::new(SpanRing::new(ring_slots)),
+            }),
+        }
+    }
+
+    /// Is legacy event recording on?
     pub fn enabled(&self) -> bool {
-        self.enabled.load(Ordering::Relaxed)
+        self.shared.enabled.load(Ordering::Relaxed)
     }
 
-    /// Append an event (no-op when disabled).
+    /// Turn span capture on/off (the serve bench's overhead A/B switch).
+    pub fn set_span_capture(&self, on: bool) {
+        self.shared.span_capture.store(on, Ordering::Relaxed);
+    }
+
+    /// Current trace time (µs since the clock anchor).
+    pub fn now_us(&self) -> u64 {
+        self.shared.clock.now_us()
+    }
+
+    /// Spans overwritten by ring overflow so far.
+    pub fn dropped_spans(&self) -> u64 {
+        self.shared.dropped.load(Ordering::Relaxed)
+    }
+
+    /// A recording handle for `node`. One ring per node: repeat calls
+    /// (e.g. a shard respawning after a crash) reuse the existing ring.
+    pub fn sink(&self, node: SpanNode) -> SpanSink {
+        let mut rings = self.shared.rings.lock().unwrap();
+        let ring = match rings.iter().find(|(n, _)| *n == node) {
+            Some((_, r)) => r.clone(),
+            None => {
+                let r = Arc::new(SpanRing::new(self.shared.ring_slots));
+                rings.push((node, r.clone()));
+                r
+            }
+        };
+        SpanSink { shared: self.shared.clone(), ring }
+    }
+
+    /// Snapshot every node's spans (registration order, each ring in
+    /// claim order). Legacy events are not included.
+    pub fn spans(&self) -> Vec<(SpanNode, Vec<SpanRec>)> {
+        let rings = self.shared.rings.lock().unwrap();
+        rings
+            .iter()
+            .map(|(node, ring)| {
+                (*node, ring.collect().into_iter().filter(|r| r.kind < 100).collect())
+            })
+            .collect()
+    }
+
+    /// ---- legacy event surface (Fig-1 bench, VAP schedule tests) ----
+
+    /// Append an event (no-op when disabled). Events land in their own
+    /// ring; global record order is the ring's claim order.
     pub fn record(&self, f: impl FnOnce() -> Event) {
-        if self.enabled() {
-            self.events.lock().unwrap().push(f());
+        if !self.enabled() {
+            return;
+        }
+        let (kind, lanes) = f().encode();
+        let rest = [lanes[1], lanes[2], lanes[3], lanes[4], lanes[5], lanes[6]];
+        if self.shared.legacy.record(kind, 0, lanes[0], lanes[0], rest) {
+            self.shared.note_drop();
         }
     }
 
     /// Snapshot all events in record order.
     pub fn events(&self) -> Vec<Event> {
-        self.events.lock().unwrap().clone()
+        self.shared.legacy.collect().iter().filter_map(Event::decode).collect()
     }
 
     /// Number of recorded events.
     pub fn len(&self) -> usize {
-        self.events.lock().unwrap().len()
+        self.shared.legacy.written().min(self.shared.legacy.cap) as usize
     }
 
     /// True when no events recorded.
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.shared.legacy.written() == 0
     }
 
     /// Render a compact textual timeline (relative µs timestamps), the
@@ -216,7 +511,7 @@ impl TraceRecorder {
         let t0 = evs.first().map(|e| e.at());
         let mut out = String::new();
         for e in &evs {
-            let us = t0.map(|t0| e.at().duration_since(t0).as_micros()).unwrap_or(0);
+            let us = t0.map(|t0| e.at().saturating_sub(t0)).unwrap_or(0);
             use std::fmt::Write;
             let _ = match e {
                 Event::Inc { worker, table, row, col, delta, seq, .. } => writeln!(
@@ -267,6 +562,385 @@ impl TraceRecorder {
         }
         out
     }
+
+    /// ---- export ----
+
+    /// Chrome/Perfetto trace-event JSON: spans as complete (`"X"`)
+    /// events, legacy events as instants (`"i"`), one "process" lane per
+    /// node. All-integer timestamps from the injected clock, fixed field
+    /// order, stable sort — under the sim the output is a byte-identical
+    /// function of `(config, seed)`.
+    pub fn trace_json(&self) -> String {
+        let rings = self.shared.rings.lock().unwrap();
+        let mut out = String::from("{\"traceEvents\":[");
+        let mut first = true;
+        let mut push = |s: String, out: &mut String| {
+            if !std::mem::take(&mut first) {
+                out.push(',');
+            }
+            out.push('\n');
+            out.push_str(&s);
+        };
+        let mut lanes: Vec<(SpanNode, Vec<SpanRec>)> =
+            rings.iter().map(|(n, r)| (*n, r.collect())).collect();
+        drop(rings);
+        if self.shared.legacy.written() > 0 {
+            lanes.push((SpanNode::Legacy, self.shared.legacy.collect()));
+        }
+        for (node, _) in &lanes {
+            push(
+                format!(
+                    "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{},\"args\":{{\"name\":\"{}\"}}}}",
+                    node.pid(),
+                    node.name()
+                ),
+                &mut out,
+            );
+        }
+        // (t0, lane registration order, claim order) — total and stable.
+        let mut recs: Vec<(u64, usize, SpanRec)> = Vec::new();
+        for (lane_idx, (_, rs)) in lanes.iter().enumerate() {
+            for r in rs {
+                recs.push((r.t0, lane_idx, *r));
+            }
+        }
+        recs.sort_by_key(|(t0, lane, r)| (*t0, *lane, r.seq));
+        for (_, lane_idx, r) in &recs {
+            let pid = lanes[*lane_idx].0.pid();
+            match SpanKind::from_code(r.kind) {
+                Some(kind) => push(
+                    format!(
+                        "{{\"name\":\"{}\",\"cat\":\"span\",\"ph\":\"X\",\"pid\":{pid},\"tid\":0,\
+                         \"ts\":{},\"dur\":{},\"args\":{{\"trace\":\"{:016x}\",\"table\":{},\
+                         \"origin\":{},\"batch\":{},\"extra\":{}}}}}",
+                        kind.stage(),
+                        r.t0,
+                        r.t1.saturating_sub(r.t0),
+                        r.id,
+                        r.a,
+                        r.b,
+                        r.c,
+                        r.d
+                    ),
+                    &mut out,
+                ),
+                None => {
+                    let name = Event::decode(r).map_or("event", |e| e.short_name());
+                    push(
+                        format!(
+                            "{{\"name\":\"{name}\",\"cat\":\"event\",\"ph\":\"i\",\"pid\":{pid},\
+                             \"tid\":0,\"ts\":{},\"s\":\"p\"}}",
+                            r.t0
+                        ),
+                        &mut out,
+                    );
+                }
+            }
+        }
+        out.push_str("\n]}\n");
+        out
+    }
+}
+
+/// Why a worker blocked.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockReason {
+    /// Read gate: cached row staleness exceeded the clock bound (CAP/SSP).
+    Staleness,
+    /// Write gate: accumulated unsynchronized magnitude would exceed
+    /// `v_thr` (VAP).
+    ValueBound,
+}
+
+/// One trace event. Timestamps are µs on the recorder's [`TraceClock`]
+/// (virtual under the sim; relative wall µs in production).
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// A worker generated an update (Fig 1's `(seq, value)` pairs).
+    Inc {
+        /// When (µs).
+        at: u64,
+        /// Generating worker.
+        worker: WorkerId,
+        /// Table.
+        table: TableId,
+        /// Row.
+        row: RowId,
+        /// Column.
+        col: u32,
+        /// Delta value.
+        delta: f32,
+        /// Worker-local update sequence number.
+        seq: u64,
+    },
+    /// A batch left a client process for a shard.
+    Push {
+        /// When (µs).
+        at: u64,
+        /// Origin process.
+        proc: ProcId,
+        /// Table.
+        table: TableId,
+        /// Batch id.
+        batch_id: u64,
+        /// Number of row-deltas inside.
+        rows: usize,
+    },
+    /// The server reported a batch visible to all processes.
+    Visible {
+        /// When (µs).
+        at: u64,
+        /// Origin process.
+        proc: ProcId,
+        /// Table.
+        table: TableId,
+        /// Batch id.
+        batch_id: u64,
+    },
+    /// A worker started blocking.
+    BlockStart {
+        /// When (µs).
+        at: u64,
+        /// Blocked worker.
+        worker: WorkerId,
+        /// Table.
+        table: TableId,
+        /// Why.
+        reason: BlockReason,
+    },
+    /// The blocked worker resumed.
+    BlockEnd {
+        /// When (µs).
+        at: u64,
+        /// Worker.
+        worker: WorkerId,
+        /// Table.
+        table: TableId,
+        /// Why it had blocked.
+        reason: BlockReason,
+    },
+    /// A client process applied a server push (origin's batch).
+    Applied {
+        /// When (µs).
+        at: u64,
+        /// Applying process.
+        proc: ProcId,
+        /// Table.
+        table: TableId,
+        /// Batch origin.
+        origin: ProcId,
+        /// Batch id.
+        batch_id: u64,
+        /// Push's min_clock.
+        min_clock: Clock,
+    },
+    /// A client process raised a shard's freshness floor.
+    Floor {
+        /// When (µs).
+        at: u64,
+        /// Process.
+        proc: ProcId,
+        /// Shard.
+        shard: u32,
+        /// New floor.
+        clock: Clock,
+    },
+    /// A shard applied a client push batch.
+    ShardApplied {
+        /// When (µs).
+        at: u64,
+        /// Shard.
+        shard: u32,
+        /// Origin proc.
+        origin: ProcId,
+        /// Batch id.
+        batch_id: u64,
+        /// Rows inside.
+        rows: usize,
+    },
+    /// A shard broadcast a new min-clock frontier.
+    Broadcast {
+        /// When (µs).
+        at: u64,
+        /// Shard.
+        shard: u32,
+        /// Frontier.
+        clock: Clock,
+    },
+    /// A worker's clock ticked.
+    ClockTick {
+        /// When (µs).
+        at: u64,
+        /// Worker.
+        worker: WorkerId,
+        /// New clock value.
+        clock: Clock,
+    },
+}
+
+impl Event {
+    /// Event timestamp (µs on the recorder's clock).
+    pub fn at(&self) -> u64 {
+        match self {
+            Event::Inc { at, .. }
+            | Event::Push { at, .. }
+            | Event::Visible { at, .. }
+            | Event::BlockStart { at, .. }
+            | Event::BlockEnd { at, .. }
+            | Event::Applied { at, .. }
+            | Event::Floor { at, .. }
+            | Event::ShardApplied { at, .. }
+            | Event::Broadcast { at, .. }
+            | Event::ClockTick { at, .. } => *at,
+        }
+    }
+
+    fn short_name(&self) -> &'static str {
+        match self {
+            Event::Inc { .. } => "inc",
+            Event::Push { .. } => "push",
+            Event::Visible { .. } => "visible",
+            Event::BlockStart { .. } => "block",
+            Event::BlockEnd { .. } => "unblock",
+            Event::Applied { .. } => "applied",
+            Event::Floor { .. } => "floor",
+            Event::ShardApplied { .. } => "shard_applied",
+            Event::Broadcast { .. } => "broadcast",
+            Event::ClockTick { .. } => "clock",
+        }
+    }
+
+    /// Ring encoding: `(kind ≥ 100, [at, lane a..f])`.
+    fn encode(&self) -> (u64, [u64; 7]) {
+        match *self {
+            Event::Inc { at, worker, table, row, col, delta, seq } => (
+                100,
+                [
+                    at,
+                    worker.0 as u64,
+                    table.0 as u64,
+                    row.0,
+                    col as u64,
+                    delta.to_bits() as u64,
+                    seq,
+                ],
+            ),
+            Event::Push { at, proc, table, batch_id, rows } => {
+                (101, [at, proc.0 as u64, table.0 as u64, batch_id, rows as u64, 0, 0])
+            }
+            Event::Visible { at, proc, table, batch_id } => {
+                (102, [at, proc.0 as u64, table.0 as u64, batch_id, 0, 0, 0])
+            }
+            Event::BlockStart { at, worker, table, reason } => (
+                103,
+                [
+                    at,
+                    worker.0 as u64,
+                    table.0 as u64,
+                    (reason == BlockReason::ValueBound) as u64,
+                    0,
+                    0,
+                    0,
+                ],
+            ),
+            Event::BlockEnd { at, worker, table, reason } => (
+                104,
+                [
+                    at,
+                    worker.0 as u64,
+                    table.0 as u64,
+                    (reason == BlockReason::ValueBound) as u64,
+                    0,
+                    0,
+                    0,
+                ],
+            ),
+            Event::Applied { at, proc, table, origin, batch_id, min_clock } => (
+                105,
+                [at, proc.0 as u64, table.0 as u64, origin.0 as u64, batch_id, min_clock as u64, 0],
+            ),
+            Event::Floor { at, proc, shard, clock } => {
+                (106, [at, proc.0 as u64, shard as u64, clock as u64, 0, 0, 0])
+            }
+            Event::ShardApplied { at, shard, origin, batch_id, rows } => {
+                (107, [at, shard as u64, origin.0 as u64, batch_id, rows as u64, 0, 0])
+            }
+            Event::Broadcast { at, shard, clock } => {
+                (108, [at, shard as u64, clock as u64, 0, 0, 0, 0])
+            }
+            Event::ClockTick { at, worker, clock } => {
+                (109, [at, worker.0 as u64, clock as u64, 0, 0, 0, 0])
+            }
+        }
+    }
+
+    fn decode(r: &SpanRec) -> Option<Event> {
+        let reason = |v: u64| if v == 1 { BlockReason::ValueBound } else { BlockReason::Staleness };
+        Some(match r.kind {
+            100 => Event::Inc {
+                at: r.t0,
+                worker: WorkerId(r.a as u32),
+                table: TableId(r.b as u32),
+                row: RowId(r.c),
+                col: r.d as u32,
+                delta: f32::from_bits(r.e as u32),
+                seq: r.f,
+            },
+            101 => Event::Push {
+                at: r.t0,
+                proc: ProcId(r.a as u32),
+                table: TableId(r.b as u32),
+                batch_id: r.c,
+                rows: r.d as usize,
+            },
+            102 => Event::Visible {
+                at: r.t0,
+                proc: ProcId(r.a as u32),
+                table: TableId(r.b as u32),
+                batch_id: r.c,
+            },
+            103 => Event::BlockStart {
+                at: r.t0,
+                worker: WorkerId(r.a as u32),
+                table: TableId(r.b as u32),
+                reason: reason(r.c),
+            },
+            104 => Event::BlockEnd {
+                at: r.t0,
+                worker: WorkerId(r.a as u32),
+                table: TableId(r.b as u32),
+                reason: reason(r.c),
+            },
+            105 => Event::Applied {
+                at: r.t0,
+                proc: ProcId(r.a as u32),
+                table: TableId(r.b as u32),
+                origin: ProcId(r.c as u32),
+                batch_id: r.d,
+                min_clock: r.e as Clock,
+            },
+            106 => Event::Floor {
+                at: r.t0,
+                proc: ProcId(r.a as u32),
+                shard: r.b as u32,
+                clock: r.c as Clock,
+            },
+            107 => Event::ShardApplied {
+                at: r.t0,
+                shard: r.a as u32,
+                origin: ProcId(r.b as u32),
+                batch_id: r.c,
+                rows: r.d as usize,
+            },
+            108 => Event::Broadcast { at: r.t0, shard: r.a as u32, clock: r.b as Clock },
+            109 => Event::ClockTick {
+                at: r.t0,
+                worker: WorkerId(r.a as u32),
+                clock: r.b as Clock,
+            },
+            _ => return None,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -276,7 +950,7 @@ mod tests {
     #[test]
     fn disabled_recorder_is_noop() {
         let r = TraceRecorder::new(false);
-        r.record(|| Event::ClockTick { at: Instant::now(), worker: WorkerId(0), clock: 1 });
+        r.record(|| Event::ClockTick { at: 0, worker: WorkerId(0), clock: 1 });
         assert!(r.is_empty());
     }
 
@@ -284,7 +958,7 @@ mod tests {
     fn enabled_recorder_collects_in_order() {
         let r = TraceRecorder::new(true);
         for i in 0..5 {
-            r.record(|| Event::ClockTick { at: Instant::now(), worker: WorkerId(0), clock: i });
+            r.record(|| Event::ClockTick { at: r.now_us(), worker: WorkerId(0), clock: i });
         }
         assert_eq!(r.len(), 5);
         match r.events()[4] {
@@ -297,7 +971,7 @@ mod tests {
     fn render_contains_key_fields() {
         let r = TraceRecorder::new(true);
         r.record(|| Event::Inc {
-            at: Instant::now(),
+            at: r.now_us(),
             worker: WorkerId(3),
             table: TableId(1),
             row: RowId(2),
@@ -306,12 +980,130 @@ mod tests {
             seq: 6,
         });
         r.record(|| Event::BlockStart {
-            at: Instant::now(),
+            at: r.now_us(),
             worker: WorkerId(3),
             table: TableId(1),
             reason: BlockReason::ValueBound,
         });
         let s = r.render();
         assert!(s.contains("w3") && s.contains("seq=6") && s.contains("ValueBound"), "{s}");
+    }
+
+    #[test]
+    fn event_encode_decode_roundtrip() {
+        let r = TraceRecorder::new(true);
+        r.record(|| Event::Applied {
+            at: 42,
+            proc: ProcId(1),
+            table: TableId(2),
+            origin: ProcId(3),
+            batch_id: 99,
+            min_clock: 7,
+        });
+        r.record(|| Event::Inc {
+            at: 43,
+            worker: WorkerId(5),
+            table: TableId(0),
+            row: RowId(11),
+            col: 2,
+            delta: -0.25,
+            seq: 8,
+        });
+        let evs = r.events();
+        match &evs[0] {
+            Event::Applied { at, proc, table, origin, batch_id, min_clock } => {
+                assert_eq!(
+                    (*at, proc.0, table.0, origin.0, *batch_id, *min_clock),
+                    (42, 1, 2, 3, 99, 7)
+                );
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+        match &evs[1] {
+            Event::Inc { delta, seq, row, .. } => {
+                assert_eq!((*delta, *seq, row.0), (-0.25, 8, 11));
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mint_is_deterministic_and_nonzero() {
+        let a = TraceCtx::mint(1, 2, 3, 4, 100);
+        let b = TraceCtx::mint(1, 2, 3, 4, 200);
+        assert_eq!(a.id, b.id, "id depends only on identity words");
+        assert_ne!(a.at_us, b.at_us);
+        assert_ne!(a.id, 0);
+        assert_ne!(a.id, TraceCtx::mint(1, 2, 3, 5, 100).id);
+        assert!(TraceCtx::NONE.is_none() && !a.is_none());
+    }
+
+    #[test]
+    fn span_ring_drops_oldest_and_counts() {
+        let clock = Arc::new(AtomicU64::new(0));
+        let hub = Arc::new(Registry::new());
+        let r = TraceRecorder::with_registry(false, hub.clone(), TraceClock::Virtual(clock), 4);
+        let sink = r.sink(SpanNode::Shard(ShardId(0)));
+        for i in 0..6u64 {
+            sink.span(SpanKind::Apply, i + 1, i, i + 10, [0, 0, i, 0]);
+        }
+        assert_eq!(r.dropped_spans(), 2);
+        assert_eq!(hub.snapshot().counter_sum("trace_spans_dropped_total"), 2);
+        let spans = r.spans();
+        assert_eq!(spans.len(), 1);
+        let recs = &spans[0].1;
+        assert_eq!(recs.len(), 4, "ring keeps the newest cap records");
+        assert_eq!(recs.first().unwrap().c, 2, "oldest two were overwritten");
+        assert_eq!(hub.snapshot().hist_count("trace_stage_us"), 6, "stage hist sees every span");
+    }
+
+    #[test]
+    fn span_capture_switch_stops_recording() {
+        let r = TraceRecorder::new(false);
+        let sink = r.sink(SpanNode::Client(ProcId(0)));
+        sink.span(SpanKind::Batch, 1, 0, 5, [0, 0, 0, 0]);
+        r.set_span_capture(false);
+        sink.span(SpanKind::Batch, 2, 5, 9, [0, 0, 1, 0]);
+        r.set_span_capture(true);
+        assert_eq!(r.spans()[0].1.len(), 1);
+    }
+
+    #[test]
+    fn sink_reuses_ring_per_node() {
+        let r = TraceRecorder::new(false);
+        let a = r.sink(SpanNode::Shard(ShardId(1)));
+        a.span(SpanKind::Net, 1, 0, 1, [0, 0, 0, 0]);
+        let b = r.sink(SpanNode::Shard(ShardId(1)));
+        b.span(SpanKind::Net, 2, 1, 2, [0, 0, 1, 0]);
+        let spans = r.spans();
+        assert_eq!(spans.len(), 1, "respawned shard reuses its lane");
+        assert_eq!(spans[0].1.len(), 2);
+    }
+
+    #[test]
+    fn trace_json_is_deterministic_and_integer_only() {
+        let mk = || {
+            let clock = Arc::new(AtomicU64::new(0));
+            let r = TraceRecorder::with_registry(
+                true,
+                Arc::new(Registry::new()),
+                TraceClock::Virtual(clock.clone()),
+                64,
+            );
+            let shard = r.sink(SpanNode::Shard(ShardId(0)));
+            let client = r.sink(SpanNode::Client(ProcId(0)));
+            clock.store(10, Ordering::Relaxed);
+            client.span(SpanKind::Batch, 7, 2, 10, [0, 0, 3, 0]);
+            clock.store(25, Ordering::Relaxed);
+            shard.span(SpanKind::Net, 7, 10, 25, [0, 0, 3, 0]);
+            r.record(|| Event::Broadcast { at: 30, shard: 0, clock: 2 });
+            r.trace_json()
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a, b, "same schedule, byte-identical export");
+        assert!(a.contains("\"ph\":\"X\"") && a.contains("\"ph\":\"i\""), "{a}");
+        assert!(a.contains("\"name\":\"net\"") && a.contains("\"dur\":15"), "{a}");
+        assert!(a.contains("\"name\":\"shard0\"") && a.contains("\"name\":\"client0\""), "{a}");
+        assert!(!a.contains('.'), "timestamps must be integers: {a}");
     }
 }

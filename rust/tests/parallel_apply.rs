@@ -54,6 +54,7 @@ fn workload(seed: u64) -> Vec<PushBatch> {
                 updates: Arc::new(updates),
                 clock: 1,
                 epoch: 0,
+                trace: bapps::trace::TraceCtx::NONE,
             }
         })
         .collect()

@@ -95,7 +95,7 @@ fn prop_batcher_partitions_updates() {
             .map(|i| (RowId(i as u64 % desc.num_rows), RowUpdate::single(0, rng.f32())))
             .collect();
         let total_in = updates.len();
-        let batches = batcher.make_batches(&desc, shards, updates, 1);
+        let batches = batcher.make_batches(&desc, shards, updates, 1, 0);
         let mut total_out = 0;
         let mut last_id = None;
         for (shard, b) in &batches {
@@ -222,6 +222,7 @@ fn prop_visibility_tracker_acks() {
                     )]),
                     clock: 1,
                     epoch: 0,
+                    trace: bapps::trace::TraceCtx::NONE,
                 };
                 next_id[origin as usize] += 1;
                 vt.observe(&b);
